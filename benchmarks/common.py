@@ -1,0 +1,82 @@
+"""Shared benchmark scaffolding: timers, world/engine builders, cost models."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import LazyVLMEngine, VMRQuery, example_2_1
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple)
+from repro.core.refine import MockVerifier, VLMVerifier
+from repro.semantic import OracleEmbedder
+from repro.video import PREDICATES, SyntheticWorld, WorldConfig, ingest
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_world(num_segments=8, frames=32, objects=6, seed=3, drop=0.0,
+                spurious=0.0) -> SyntheticWorld:
+    return SyntheticWorld(WorldConfig(
+        num_segments=num_segments, frames_per_segment=frames,
+        objects_per_segment=objects, seed=seed, drop_prob=drop,
+        spurious_prob=spurious))
+
+
+def build_engine(world, verifier=None) -> Tuple[LazyVLMEngine, object]:
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    return LazyVLMEngine(stores, emb, verifier=verifier), stores
+
+
+def default_query(world) -> VMRQuery:
+    """A two-frame chain query over descriptions that exist in the world."""
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    da, db = descs[0], descs[min(1, len(descs) - 1)]
+    return VMRQuery(
+        entities=(Entity("a", da), Entity("b", db)),
+        relationships=(Relationship("r1", "near"),
+                       Relationship("r2", "left of")),
+        frames=(FrameSpec((Triple("a", "r1", "b"),)),
+                FrameSpec((Triple("a", "r2", "b"),))),
+        constraints=(TemporalConstraint(0, 1, min_gap=2),),
+        top_k=16, text_threshold=0.9)
+
+
+# ---------------------------------------------------------------------------
+# VLM cost model (for the FLOPs-based system-efficiency comparison)
+# ---------------------------------------------------------------------------
+def vlm_forward_flops(cfg, num_tokens: int) -> float:
+    """2·N_active·T + attention quadratic term, one forward pass."""
+    n = cfg.active_param_count()
+    fl = 2.0 * n * num_tokens
+    # attention: 4·S·D per token per layer (scores + value mix)
+    if cfg.num_heads:
+        fl += 4.0 * num_tokens * num_tokens * cfg.q_dim * cfg.num_layers
+    return fl
+
+
+def e2e_vlm_flops(cfg, num_frames: int, patches_per_frame: int,
+                  prompt_tokens: int = 64) -> float:
+    """End-to-end baseline: the whole video in one context window."""
+    total = num_frames * patches_per_frame + prompt_tokens
+    return vlm_forward_flops(cfg, total)
+
+
+def lazyvlm_refine_flops(cfg, num_candidates: int, patches_per_frame: int,
+                         prompt_tokens: int = 24) -> float:
+    per = vlm_forward_flops(cfg, patches_per_frame + prompt_tokens)
+    return per * num_candidates

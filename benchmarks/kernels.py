@@ -1,0 +1,55 @@
+"""Kernel-level benchmark: fused top-k similarity vs two-pass reference.
+
+On CPU we can't time the TPU kernel (interpret mode measures Python, not
+silicon), so this benchmark reports the *data-movement model* that motivates
+the fusion — HBM bytes for fused vs two-pass at production store sizes — plus
+a CPU wall-time sanity check of the jnp reference path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.kernels import ref
+
+
+def traffic_model(Q: int, N: int, D: int, k: int):
+    """HBM bytes per search."""
+    two_pass = (N * D * 2        # read DB (bf16)
+                + Q * N * 4      # write scores f32
+                + Q * N * 4      # read scores for top-k
+                + Q * k * 8)     # outputs
+    fused = N * D * 2 + Q * k * 8
+    return two_pass, fused
+
+
+def run():
+    rows = []
+    # fusion matters most at high query batch (serving many queries at once)
+    for (Q, N, D, k) in [(8, 1_000_000, 1024, 64),
+                         (64, 10_000_000, 1024, 64),
+                         (512, 10_000_000, 1024, 64)]:
+        two, fused = traffic_model(Q, N, D, k)
+        rows.append((f"topk/traffic_2pass_Q{Q}_N{N//1000}k", two, "bytes"))
+        rows.append((f"topk/traffic_fused_Q{Q}_N{N//1000}k", fused, "bytes"))
+        rows.append((f"topk/traffic_ratio_Q{Q}_N{N//1000}k",
+                     round(two / fused, 3), "2pass/fused"))
+    # CPU sanity timing of the reference path at small scale
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (8, 256))
+    db = jax.random.normal(key, (65536, 256))
+    valid = jnp.ones((65536,), bool)
+    f = jax.jit(partial(ref.naive_topk, k=32))
+    t = C.timeit(lambda: jax.block_until_ready(f(q, db, valid)),
+                 warmup=2, iters=5)
+    rows.append(("topk/ref_cpu_wall_s", t, "Q8 N65536 D256 k32"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,201 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HBM_traffic_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Sources:
+  * FLOPs + collectives — the dry-run's metered (loop-unrolled,
+    depth-extrapolated) cost analysis; see dryrun.py:meter_cell.
+  * HBM traffic — an explicit analytic model (``hbm_traffic``). §Perf
+    iteration 0 finding: XLA 'bytes accessed' from the **CPU** backend
+    over-states TPU HBM traffic by 1–2 orders of magnitude (the CPU
+    pipeline materializes intermediates a TPU fusion keeps in
+    VMEM/registers, and the jnp attention path materializes score tiles the
+    Pallas flash kernel never writes). The analytic model assumes the
+    TPU kernel path: weights/grad/optimizer streams + residual-stream
+    activations + KV-cache streams; attention scores cost 0 HBM (flash).
+    The raw XLA number is retained as ``xla_bytes_accessed`` (upper bound).
+
+All three terms are *seconds per step* on the target hardware; the max
+identifies the bottleneck, and useful-compute fraction =
+MODEL_FLOPS / HLO_FLOPs catches remat/redundancy waste.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+SHAPE_DIMS = {"train_4k": (4096, 256), "prefill_32k": (32_768, 32),
+              "decode_32k": (32_768, 128), "long_500k": (524_288, 1)}
+
+
+def hbm_traffic(rec: dict) -> float:
+    """Analytic per-device HBM bytes per step (TPU kernel path assumed)."""
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+
+    cfg = get_config(rec["arch"])
+    seq, batch = SHAPE_DIMS[rec["shape"]]
+    ndev = rec["n_devices"]
+    tp = 16
+    dp = ndev // tp
+    # batch sharding may not use all data axes (e.g. batch 1)
+    dp_used = min(dp, batch) if batch < dp else dp
+    P_all = cfg.param_count()
+    P_act = cfg.active_param_count()
+    L = cfg.num_layers
+    d = cfg.d_model
+    nmb = rec.get("num_microbatches", 1)
+    mode = rec["mode"]
+
+    def cache_bytes():
+        """KV + SSM state bytes per device (decode reads it every step)."""
+        kinds = cfg.layer_kinds()
+        n_attn = kinds.count("attn")
+        n_mamba = L - n_attn
+        b_loc = max(1, batch // dp_used) if dp_used else batch
+        kv_bytes_per_elt = (1 + 4 / cfg.head_dim) if rec.get("kv_quant") \
+            else 2                       # int8 + f32 scale per head vector
+        kv = int(n_attn * 2 * seq * cfg.kv_dim * kv_bytes_per_elt * b_loc)
+        kv //= tp if cfg.num_kv_heads_eff % tp and seq % tp == 0 else \
+            (tp if cfg.num_kv_heads_eff % tp == 0 else 1)
+        ssm = 0
+        if cfg.ssm.enabled:
+            s = cfg.ssm
+            ssm = n_mamba * b_loc * (
+                s.nheads(d) * s.head_dim * s.d_state * 4
+                + (s.conv_width - 1) * (s.d_inner(d) + 2 * s.ngroups
+                                        * s.d_state) * 2)
+        return kv + ssm
+
+    if mode == "train":
+        tokens_dev = seq * batch // dp_used
+        # weights: fwd + bwd + remat-recompute reads, per microbatch
+        w = 3 * (2 * P_all / tp) * nmb
+        g = 2 * 4 * P_all / tp              # f32 grad accum write+read
+        o = 16 * P_all / (tp * (dp if rec.get("fsdp") else 1))
+        act = L * tokens_dev * d * 2 * 12   # ~12 bf16 tensors/layer/token
+        return w + g + o + act
+    if mode == "prefill":
+        tokens_dev = seq * batch // dp_used
+        w = 2 * P_all / tp
+        act = L * tokens_dev * d * 2 * 8
+        return w + act + cache_bytes()
+    # decode: weights (active experts only for MoE) + full cache read
+    w = 2 * (P_act if cfg.moe.enabled else P_all) / tp
+    return w + cache_bytes()
+
+
+def model_flops(rec: dict) -> float:
+    """MODEL_FLOPS = 6·N·D (training) / 2·N_active·D (single forward)."""
+    shape = rec["shape"]
+    n = rec["active_params"]
+    if rec["mode"] == "train":
+        seq, batch = 4096, 256
+        return 6.0 * n * seq * batch
+    if rec["mode"] == "prefill":
+        seq, batch = 32_768, 32
+        return 2.0 * n * seq * batch
+    # decode: one token per sequence
+    batch = 1 if shape == "long_500k" else 128
+    return 2.0 * n * batch
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    met = rec.get("metered") or {}
+    if "flops" not in met:
+        return None
+    ndev = rec["n_devices"]
+    flops_dev = met["flops"]                       # per-device (post-SPMD)
+    # negative depth-extrapolations (constant-dominated collectives where
+    # f(2) < f(1) from XLA scheduling noise) clamp to the depth-1 value
+    coll_by_kind = {
+        k: max(v, met["depth1"]["coll"].get(k, 0.0))
+        for k, v in met["collective_bytes"].items()}
+    coll_dev = sum(coll_by_kind.values())
+    bytes_dev = hbm_traffic(rec)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    useful = mf / (flops_dev * ndev) if flops_dev else 0.0
+    t_step = max(t_compute, t_memory, t_coll)
+    mfu = mf / (ndev * PEAK_FLOPS * t_step) if t_step else 0.0
+    by_kind = {k: v / LINK_BW for k, v in coll_by_kind.items() if v}
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant[0], "t_step_bound": t_step,
+        "model_flops": mf, "hlo_flops_global": flops_dev * ndev,
+        "useful_fraction": useful, "roofline_mfu": mfu,
+        "collective_terms": by_kind,
+        "xla_bytes_accessed": met.get("bytes_accessed"),
+        "memory_bytes_per_device": rec.get("memory", {}).get(
+            "temp_size_in_bytes"),
+    }
+
+
+def load_all(mesh: Optional[str] = "pod16x16",
+             variant: Optional[str] = None) -> List[dict]:
+    """variant=None -> paper-faithful baselines only; or a tag like "__ep"."""
+    out = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(fn)[:-len(".json")]
+        parts = base.split("__")
+        tag = "__" + parts[3] if len(parts) > 3 else None
+        if tag != variant:
+            continue
+        rec = json.load(open(fn))
+        if mesh and rec["mesh"] != mesh:
+            continue
+        a = analyze(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def fmt_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':28s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'bound':>10s} {'useful':>7s} {'MFU':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:28s} {r['shape']:12s} {r['t_compute']:10.3e} "
+            f"{r['t_memory']:10.3e} {r['t_collective']:10.3e} "
+            f"{r['dominant']:>10s} {r['useful_fraction']:7.2%} "
+            f"{r['roofline_mfu']:6.1%}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--variant", default=None,
+                    help="None = baselines; e.g. __ep / __opt / __opt2")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(args.mesh, args.variant)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

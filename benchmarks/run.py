@@ -1,0 +1,34 @@
+"""Benchmark driver — one module per paper claim. Prints name,value,derived CSV.
+
+  pruning      — VLM-workload pruning vs end-to-end VLM (system efficiency)
+  scaling      — query cost vs video length
+  updates      — incremental ingest (update-friendliness)
+  parallelism  — fused batched stages vs sequential launches
+  accuracy     — refinement fixes detector noise (robustness)
+  kernels      — fused top-k data-movement model + CPU sanity timing
+  roofline     — printed separately: python -m benchmarks.roofline
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accuracy, kernels, parallelism, pruning, scaling,
+                            updates)
+    modules = [pruning, scaling, updates, parallelism, accuracy, kernels]
+    print("name,value,derived")
+    failed = []
+    for m in modules:
+        try:
+            for row in m.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            failed.append(m.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,39 @@
+"""Paper claim 2 (scalability): query cost vs video length.
+
+LazyVLM's per-query work = vector scan (linear, but trivially cheap per row)
++ relational selection (linear in store rows) + VLM on candidates (≈constant
+for a fixed event density). The E2E baseline grows quadratically (attention)
+in video length. We measure LazyVLM wall time and modeled-FLOPs for both at
+1×, 2×, 4×, 8× video length.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.configs import get_config
+from repro.core.refine import MockVerifier
+
+
+def run():
+    rows = []
+    cfg = get_config("qwen2.5-vl-7b")
+    ppf = cfg.vision.num_positions
+    for mult in (1, 2, 4, 8):
+        world = C.build_world(num_segments=4 * mult, frames=32,
+                              objects=6, seed=7)
+        verifier = MockVerifier(world)
+        engine, _ = C.build_engine(world, verifier)
+        q = C.default_query(world)
+        t = C.timeit(lambda: engine.query(q), warmup=1, iters=3)
+        res = engine.query(q)
+        frames = world.cfg.num_segments * world.cfg.frames_per_segment
+        lazy = C.lazyvlm_refine_flops(cfg, res.stats.refine_candidates, ppf)
+        e2e = C.e2e_vlm_flops(cfg, frames, ppf)
+        rows.append((f"scaling/x{mult}_wall_s", t, f"{frames} frames"))
+        rows.append((f"scaling/x{mult}_flops_ratio", e2e / max(lazy, 1),
+                     "e2e/lazy"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

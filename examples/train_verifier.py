@@ -1,0 +1,121 @@
+"""End-to-end training driver: distill relationship verification into the
+refinement VLM on synthetic supervision, with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_verifier.py            # tiny, CPU-fast
+    PYTHONPATH=src python examples/train_verifier.py --preset 100m --steps 300
+
+The 100m preset is the deliverable-scale run (~100M params, a few hundred
+steps) for real hardware; the default tiny preset exercises the identical
+code path in ~a minute on CPU and lifts verification accuracy well above
+chance, which examples/video_query.py can then consume via --ckpt.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import VisionConfig
+from repro.models import model as M
+from repro.training import CheckpointManager, OptimizerConfig
+from repro.training import optimizer as opt_lib
+from repro.training.data import verification_dataset
+from repro.video import SyntheticWorld, WorldConfig
+
+
+def preset_config(name: str):
+    base = get_config("qwen2.5-vl-7b", reduced_size=True)
+    if name == "tiny":
+        return base
+    if name == "100m":
+        return dataclasses.replace(
+            base, num_layers=12, d_model=512, num_heads=8, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32_768,
+            vision=VisionConfig(kind="patches", num_positions=64,
+                                embed_dim=512, tokens_per_item=64))
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="/tmp/lazyvlm_verifier")
+    args = ap.parse_args()
+
+    cfg = preset_config(args.preset)
+    world = SyntheticWorld(WorldConfig(num_segments=8, frames_per_segment=32,
+                                       objects_per_segment=7, seed=17))
+    print(f"building supervision ({args.preset}) ...")
+    train = verification_dataset(world, cfg, num_examples=512, seed=0)
+    test = verification_dataset(world, cfg, num_examples=128, seed=99)
+    yes, no = train["yes_id"], train["no_id"]
+
+    opt = OptimizerConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                          weight_decay=0.01)
+
+    def loss_fn(params, tokens, patches, labels):
+        P = cfg.vision.num_positions
+        S = P + tokens.shape[1]
+        B = tokens.shape[0]
+        mrope = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, None],
+                                 (3, B, S))
+        batch = {"tokens": tokens, "patch_embeds": patches,
+                 "mrope_positions": mrope}
+        logits, _ = M.prefill(params, batch, cfg, cache_len=S + 1)
+        lf = logits[:, -1].astype(jnp.float32)
+        margin = lf[:, yes] - lf[:, no]
+        y = labels.astype(jnp.float32) * 2 - 1
+        loss = jnp.mean(jax.nn.softplus(-y * margin))
+        acc = jnp.mean((margin > 0) == (labels > 0))
+        return loss, acc
+
+    @jax.jit
+    def train_step(params, state, tokens, patches, labels):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, patches, labels)
+        params, state, _ = opt_lib.apply_updates(params, grads, state, opt)
+        return params, state, loss, acc
+
+    @jax.jit
+    def eval_acc(params, tokens, patches, labels):
+        _, acc = loss_fn(params, tokens, patches, labels)
+        return acc
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = opt_lib.init_state(params)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    rng = np.random.default_rng(0)
+    n = train["tokens"].shape[0]
+    t0 = time.time()
+    for step in range(args.steps):
+        idx = rng.choice(n, args.batch, replace=False)
+        params, state, loss, acc = train_step(
+            params, state,
+            jnp.asarray(train["tokens"][idx]),
+            jnp.asarray(train["patches"][idx], jnp.bfloat16),
+            jnp.asarray(train["labels"][idx]))
+        if step % 25 == 0 or step == args.steps - 1:
+            ta = eval_acc(params,
+                          jnp.asarray(test["tokens"]),
+                          jnp.asarray(test["patches"], jnp.bfloat16),
+                          jnp.asarray(test["labels"]))
+            print(f"step {step:4d} loss={float(loss):.4f} "
+                  f"train_acc={float(acc):.2f} test_acc={float(ta):.2f} "
+                  f"({time.time() - t0:.0f}s)")
+    ckpt.save(args.steps, params)
+    ckpt.wait()
+    print(f"saved verifier checkpoint to {args.ckpt_dir}")
+    final = float(eval_acc(params, jnp.asarray(test["tokens"]),
+                           jnp.asarray(test["patches"], jnp.bfloat16),
+                           jnp.asarray(test["labels"])))
+    print(f"final held-out verification accuracy: {final:.2%} "
+          f"(chance = 50%)")
+
+
+if __name__ == "__main__":
+    main()

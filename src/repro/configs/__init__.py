@@ -1,0 +1,81 @@
+"""Architecture registry.
+
+``get_config("qwen3-8b")`` returns the full assigned config;
+``get_config("qwen3-8b", reduced=True)`` returns the smoke-test-size config of the
+same family. ``applicable_shapes(arch)`` encodes the assignment's skip rules
+(long_500k only for sub-quadratic archs; decode only for archs with a decoder).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ATTN,
+    MAMBA,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    SSMConfig,
+    ShapeConfig,
+    VisionConfig,
+    reduced,
+)
+
+# arch id -> module name
+_REGISTRY: Dict[str, str] = {
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen3-8b": "qwen3_8b",
+    "starcoder2-15b": "starcoder2_15b",
+    "whisper-tiny": "whisper_tiny",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    # the paper's own refinement VLM (not part of the 40 assigned cells)
+    "qwen2.5-vl-7b": "qwen25_vl_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _REGISTRY if a != "qwen2.5-vl-7b"]
+
+
+def list_archs() -> List[str]:
+    return list(_REGISTRY)
+
+
+def get_config(arch: str, *, reduced_size: bool = False) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    cfg: ModelConfig = mod.CONFIG
+    return reduced(cfg) if reduced_size else cfg
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """True if decode at 500k context does not attend over an O(seq) dense KV
+    per token: SSM/hybrid archs (O(1) state majority) and sliding-window
+    attention (starcoder2: each token reads a 4096-token window) qualify."""
+    kinds = cfg.layer_kinds()
+    if kinds.count(MAMBA) > kinds.count(ATTN):
+        return True
+    return cfg.sliding_window > 0
+
+
+def applicable_shapes(arch: str) -> List[ShapeConfig]:
+    cfg = get_config(arch)
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if is_subquadratic(cfg):
+        out.append(LONG_500K)
+    return out
+
+
+def all_cells() -> List[tuple]:
+    """Every (arch, shape) cell in the assignment, with skips applied."""
+    return [(a, s) for a in ASSIGNED_ARCHS for s in applicable_shapes(a)]

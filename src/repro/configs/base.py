@@ -1,0 +1,314 @@
+"""Model / shape / run configuration dataclasses.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The unified
+transformer in ``repro.models`` consumes only this dataclass, so adding an
+architecture means adding one file under ``repro/configs/``.
+
+Static-shape discipline: everything that affects traced shapes lives here, and
+``ModelConfig`` is hashable so it can be a static argument to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds for heterogeneous (hybrid) stacks.
+# ---------------------------------------------------------------------------
+ATTN = "attn"
+MAMBA = "mamba"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (0 experts == dense)."""
+
+    num_experts: int = 0
+    experts_per_token: int = 0
+    d_ff_expert: int = 0
+    # A layer is MoE iff (layer_idx % period) == offset; otherwise dense MLP.
+    period: int = 1
+    offset: int = 0
+    shared_expert_d_ff: int = 0  # 0 == no shared expert (llama4 has one)
+    dense_d_ff: int = 0          # d_ff of the non-MoE layers in a mixed stack
+    # Capacity factor for dropless-approximate einsum dispatch.
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block settings."""
+
+    d_state: int = 0
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256  # SSD chunk length
+    ngroups: int = 1
+
+    @property
+    def enabled(self) -> bool:
+        return self.d_state > 0
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """Stub modality frontend: precomputed patch/frame embeddings are model input."""
+
+    kind: str = "none"          # none | patches | audio_frames
+    num_positions: int = 0      # patches per image / encoder frames
+    embed_dim: int = 0          # dim of the precomputed embeddings
+    tokens_per_item: int = 0    # how many positions each item occupies in the LM seq
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab_size: int = 256
+
+    # --- attention features -------------------------------------------------
+    # Pad head counts up to a multiple of this for tensor parallelism
+    # (Megatron-style heads%tp==0 constraint; pad heads' wo rows start at the
+    # same init scale — a documented TP adaptation, see DESIGN.md §4).
+    tp_head_pad: int = 0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0
+    sliding_window: int = 0          # 0 == full attention
+    attention_chunk: int = 0         # llama4-style chunked local attention (0 == off)
+
+    # --- positional encoding -------------------------------------------------
+    rope_type: str = "rope"          # rope | mrope | learned | none
+    rope_theta: float = 10_000.0
+    rope_pct: float = 1.0            # fraction of head_dim rotated (stablelm: 0.25)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w split of head_dim/2
+    max_position_embeddings: int = 131_072
+
+    # --- norms / residual ----------------------------------------------------
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    mlp_activation: str = "silu"     # silu (gated) | gelu (plain)
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+
+    # --- heterogeneous stack --------------------------------------------------
+    # For hybrids: pattern of layer kinds, tiled to num_layers. Dense default.
+    layer_pattern: Tuple[str, ...] = (ATTN,)
+
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    vision: VisionConfig = field(default_factory=VisionConfig)
+
+    # --- encoder-decoder ------------------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0         # fixed encoder length (whisper: 1500)
+
+    # --- numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------------
+    def layer_kinds(self) -> Tuple[str, ...]:
+        pat = self.layer_pattern
+        reps = (self.num_layers + len(pat) - 1) // len(pat)
+        return (pat * reps)[: self.num_layers]
+
+    def is_moe_layer(self, idx: int) -> bool:
+        return self.moe.enabled and (idx % self.moe.period) == self.moe.offset
+
+    @property
+    def uniform_stack(self) -> bool:
+        """True when every layer has identical structure (scan-friendly)."""
+        kinds = set(self.layer_kinds())
+        if len(kinds) != 1:
+            return False
+        if self.moe.enabled and self.moe.period != 1:
+            return False
+        return True
+
+    @property
+    def padded_vocab_size(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def num_heads_eff(self) -> int:
+        return _round_up(self.num_heads, self.tp_head_pad) \
+            if self.tp_head_pad else self.num_heads
+
+    @property
+    def num_kv_heads_eff(self) -> int:
+        return _round_up(self.num_kv_heads, self.tp_head_pad) \
+            if self.tp_head_pad else self.num_kv_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads_eff * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads_eff * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        c = self
+        n = 0
+        n += c.padded_vocab_size * c.d_model  # embed
+        if not c.tie_embeddings:
+            n += c.padded_vocab_size * c.d_model
+        kinds = self.layer_kinds()
+        for i, kind in enumerate(kinds):
+            n += 2 * c.d_model  # pre-norms (approx; 2 per layer)
+            if kind == ATTN:
+                n += c.d_model * c.q_dim + 2 * c.d_model * c.kv_dim + c.q_dim * c.d_model
+                if c.qkv_bias:
+                    n += c.q_dim + 2 * c.kv_dim
+            else:  # mamba
+                s = c.ssm
+                d_in = s.d_inner(c.d_model)
+                nh = s.nheads(c.d_model)
+                n += c.d_model * (2 * d_in + 2 * s.ngroups * s.d_state + nh)
+                n += s.conv_width * (d_in + 2 * s.ngroups * s.d_state)
+                n += d_in * c.d_model + 2 * nh  # out proj + A,D
+            if self.is_moe_layer(i):
+                m = c.moe
+                n += c.d_model * m.num_experts  # router
+                n += m.num_experts * 3 * c.d_model * m.d_ff_expert
+                if m.shared_expert_d_ff:
+                    n += 3 * c.d_model * m.shared_expert_d_ff
+            else:
+                ff = c.moe.dense_d_ff or c.d_ff
+                if ff:
+                    mult = 3 if c.mlp_activation == "silu" else 2
+                    n += mult * c.d_model * ff
+        if c.is_encoder_decoder:
+            # encoder layers + cross-attention blocks, rough analytic count
+            enc = c.encoder_layers * (
+                4 * c.d_model * c.q_dim + (3 if c.mlp_activation == "silu" else 2) * c.d_model * c.d_ff
+            )
+            cross = c.num_layers * 4 * c.d_model * c.q_dim
+            n += enc + cross
+        n += c.d_model  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        c, m = self, self.moe
+        full = self.param_count()
+        n_moe_layers = sum(1 for i in range(c.num_layers) if self.is_moe_layer(i))
+        all_expert = n_moe_layers * m.num_experts * 3 * c.d_model * m.d_ff_expert
+        active_expert = n_moe_layers * m.experts_per_token * 3 * c.d_model * m.d_ff_expert
+        return full - all_expert + active_expert
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the four assigned shapes) and per-cell specs.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+    @property
+    def is_serving(self) -> bool:
+        return self.mode in ("prefill", "decode")
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How to lay a model out on the production mesh."""
+
+    # Axis names — ("data", "model") or ("pod", "data", "model").
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # FSDP: shard params over the data axes too (all-gather on use).
+    fsdp: bool = False
+    # Remat policy for train_step: none | dots | full
+    remat: str = "dots"
+    # Gradient all-reduce compression: none | bf16 | int8
+    grad_compression: str = "none"
+    # Sequence sharding of activations during prefill (beyond-paper opt).
+    seq_shard_prefill: bool = False
+
+
+def reduced(config: ModelConfig, **over) -> ModelConfig:
+    """A smoke-test-sized config of the same family (tiny dims, same structure)."""
+    import math as _math
+
+    c = config
+    _unit = _math.lcm(len(c.layer_pattern), c.moe.period if c.moe.enabled else 1)
+    small: dict = dict(
+        num_layers=max(_unit, 2 if _unit == 1 else _unit),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(c.num_kv_heads, 2) if c.num_kv_heads < c.num_heads else 4,
+        head_dim=32,
+        d_ff=256 if c.d_ff else 0,
+        vocab_size=512,
+        max_position_embeddings=4096,
+    )
+    if c.moe.enabled:
+        small["moe"] = dataclasses.replace(
+            c.moe,
+            num_experts=4,
+            experts_per_token=min(c.moe.experts_per_token, 2),
+            d_ff_expert=64,
+            shared_expert_d_ff=64 if c.moe.shared_expert_d_ff else 0,
+            dense_d_ff=256 if c.moe.dense_d_ff else 0,
+            # dropless at test scale: capacity == T*K so decode == full forward
+            capacity_factor=4.0,
+        )
+    if c.ssm.enabled:
+        small["ssm"] = dataclasses.replace(c.ssm, d_state=16, head_dim=16, chunk=32)
+    if c.vision.enabled:
+        small["vision"] = dataclasses.replace(
+            c.vision, num_positions=8, embed_dim=128, tokens_per_item=8
+        )
+    if c.is_encoder_decoder:
+        small["encoder_layers"] = 2
+        small["encoder_seq_len"] = 16
+    if c.mrope_sections != (16, 24, 24):
+        pass
+    small["mrope_sections"] = (4, 6, 6)  # sums to head_dim/2 = 16
+    small.update(over)
+    return dataclasses.replace(c, **small)

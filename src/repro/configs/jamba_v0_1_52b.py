@@ -1,0 +1,37 @@
+"""Jamba-v0.1-52B — hybrid Mamba+attention 1:7 interleave (attention at layer
+offset 4 of each 8-layer block), MoE 16 experts top-2 on every other layer,
+attention uses NoPE (position signal carried by the SSM layers).
+[arXiv:2403.19887; hf]
+
+DESIGN.md-noted departure: Jamba v0.1 uses Mamba-1 internally; we substitute the
+Mamba-2 SSD block (d_state=128) so the hybrid shares the SSD scan kernel.
+"""
+from repro.configs.base import ATTN, MAMBA, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=65_536,
+    rope_type="none",
+    norm_type="rmsnorm",
+    mlp_activation="silu",
+    layer_pattern=(MAMBA, MAMBA, MAMBA, MAMBA, ATTN, MAMBA, MAMBA, MAMBA),
+    moe=MoEConfig(
+        num_experts=16,
+        experts_per_token=2,
+        d_ff_expert=14_336,
+        period=2,
+        offset=1,
+        dense_d_ff=14_336,
+        capacity_factor=1.25,
+    ),
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4, chunk=256,
+                  ngroups=1),
+    max_position_embeddings=262_144,
+)

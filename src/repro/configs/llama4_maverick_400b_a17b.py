@@ -1,0 +1,34 @@
+"""Llama-4-Maverick-400B-A17B — 48L, GQA kv=8, MoE 128 experts top-1 with shared
+expert, MoE every other layer (dense d_ff=16384 between), early-fusion vision as a
+patch-embedding stub. [hf:meta-llama/Llama-4-Scout-17B-16E family; unverified]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    tp_head_pad=16,   # 40->48 q heads, 8->16 kv heads (Megatron TP constraint)
+    d_ff=16_384,               # dense interleave layers
+    vocab_size=202_048,
+    rope_theta=500_000.0,
+    norm_type="rmsnorm",
+    mlp_activation="silu",
+    moe=MoEConfig(
+        num_experts=128,
+        experts_per_token=1,
+        d_ff_expert=8192,
+        period=2,
+        offset=1,
+        shared_expert_d_ff=8192,
+        dense_d_ff=16_384,
+        capacity_factor=1.25,
+    ),
+    vision=VisionConfig(kind="patches", num_positions=1024, embed_dim=5120,
+                        tokens_per_item=1024),
+    max_position_embeddings=131_072,
+)

@@ -1,0 +1,23 @@
+"""Mamba2-130M — attention-free SSM (SSD / state-space duality), 24L d_model=768,
+d_state=128, vocab 50280 (padded to 50432). [arXiv:2405.21060; unverified]
+"""
+from repro.configs.base import MAMBA, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                    # mamba blocks only, no MLP
+    vocab_size=50_280,
+    rope_type="none",
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    layer_pattern=(MAMBA,),
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4, chunk=256,
+                  ngroups=1),
+    max_position_embeddings=1_048_576,
+)

@@ -1,0 +1,26 @@
+"""Qwen2.5-VL-7B — the paper's own refinement VLM (Section 2.3: "a lightweight
+local VLM (e.g., Qwen-2.5-VL 7B) is used for the verification").
+[arXiv:2502.13923; hf:Qwen/Qwen2.5-VL-7B-Instruct]
+"""
+from repro.configs.base import ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18_944,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_type="mrope",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    norm_type="rmsnorm",
+    mlp_activation="silu",
+    vision=VisionConfig(kind="patches", num_positions=1024, embed_dim=3584,
+                        tokens_per_item=1024),
+    max_position_embeddings=131_072,
+)

@@ -1,0 +1,25 @@
+"""Qwen2-VL-72B — VLM backbone, 80L, GQA kv=8, M-RoPE, dynamic-resolution vision
+frontend STUBBED (precomputed patch embeddings). [arXiv:2409.12191; hf]
+"""
+from repro.configs.base import ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29_568,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_type="mrope",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    norm_type="rmsnorm",
+    mlp_activation="silu",
+    vision=VisionConfig(kind="patches", num_positions=1024, embed_dim=8192,
+                        tokens_per_item=1024),
+    max_position_embeddings=131_072,
+)

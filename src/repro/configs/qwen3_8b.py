@@ -1,0 +1,20 @@
+"""Qwen3-8B — dense, GQA kv=8, QK-norm. [hf:Qwen/Qwen3-8B; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12_288,
+    vocab_size=151_936,
+    qkv_bias=False,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    norm_type="rmsnorm",
+    mlp_activation="silu",
+    max_position_embeddings=131_072,
+)

@@ -1,0 +1,28 @@
+"""Qwen3-MoE-235B-A22B — 94L, GQA kv=4, QK-norm, MoE 128 experts top-8,
+expert d_ff=1536. [hf:Qwen/Qwen3-30B-A3B family; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=0,                    # every layer is MoE
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    norm_type="rmsnorm",
+    mlp_activation="silu",
+    moe=MoEConfig(
+        num_experts=128,
+        experts_per_token=8,
+        d_ff_expert=1536,
+        period=1,
+        capacity_factor=1.25,
+    ),
+    max_position_embeddings=131_072,
+)

@@ -1,0 +1,23 @@
+"""StableLM-2-12B — dense, GQA kv=8, partial rotary, LayerNorm.
+
+[hf:stabilityai/stablelm-2-1_6b family; hf] — dims per assignment (12B variant).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=13_824,
+    vocab_size=100_352,
+    qkv_bias=False,
+    rope_theta=10_000.0,
+    rope_pct=0.25,
+    norm_type="layernorm",
+    mlp_activation="silu",
+    max_position_embeddings=4_096 * 32,
+)

@@ -1,0 +1,23 @@
+"""StarCoder2-15B — dense, GQA kv=4, RoPE, LayerNorm, plain-GELU 4x MLP with bias,
+sliding-window 4096. [arXiv:2402.19173; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24_576,
+    vocab_size=49_152,
+    qkv_bias=True,
+    mlp_bias=True,
+    rope_theta=100_000.0,
+    sliding_window=4_096,
+    norm_type="layernorm",
+    mlp_activation="gelu",
+    max_position_embeddings=16_384,
+)

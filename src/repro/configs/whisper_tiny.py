@@ -1,0 +1,30 @@
+"""Whisper-tiny — encoder-decoder audio transformer, conv frontend STUBBED
+(input_specs supplies precomputed 1500-frame embeddings). [arXiv:2212.04356]
+
+Departure noted in DESIGN.md: original decoder max positions = 448; the assigned
+shapes (4k/32k) size the learned position table accordingly.
+"""
+from repro.configs.base import ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,              # decoder layers
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51_865,         # padded to 51_968 internally
+    rope_type="learned",
+    norm_type="layernorm",
+    mlp_activation="gelu",
+    mlp_bias=True,
+    qkv_bias=True,
+    is_encoder_decoder=True,
+    encoder_layers=4,
+    encoder_seq_len=1500,
+    vision=VisionConfig(kind="audio_frames", num_positions=1500, embed_dim=384,
+                        tokens_per_item=1500),
+    max_position_embeddings=32_768,
+)

@@ -1,0 +1,113 @@
+"""VMRQ (video moment retrieval query) specification — the paper's
+semi-structured text interface (Section 2.1, Example 2.1).
+
+A query is four parts:
+  1. entity descriptions        E = {e1: "man with backpack", ...}
+  2. relationship descriptions  R = {r1: "is near", ...}
+  3. frame specs                F = (f0, f1, ...) — each a set of SPO triples
+  4. temporal constraints       e.g. f1 - f0 > 4 (frame ids; 2 fps)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Entity:
+    name: str
+    text: str
+
+
+@dataclass(frozen=True)
+class Relationship:
+    name: str
+    text: str
+
+
+@dataclass(frozen=True)
+class Triple:
+    subject: str      # entity name
+    predicate: str    # relationship name
+    object: str       # entity name
+
+
+@dataclass(frozen=True)
+class FrameSpec:
+    triples: Tuple[Triple, ...]
+
+
+@dataclass(frozen=True)
+class TemporalConstraint:
+    """frame[later] - frame[earlier] within [min_gap, max_gap] (frame units)."""
+
+    earlier: int
+    later: int
+    min_gap: int = 1
+    max_gap: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class VMRQuery:
+    entities: Tuple[Entity, ...]
+    relationships: Tuple[Relationship, ...]
+    frames: Tuple[FrameSpec, ...]
+    constraints: Tuple[TemporalConstraint, ...] = ()
+    # hyperparameters from the demo UI (Step 1)
+    top_k: int = 16                 # entity-matching candidates per entity
+    text_threshold: float = 0.35
+    image_threshold: float = 0.35
+    # match entity descriptions against the image-embedding store (eie) too —
+    # candidates are the union of text and image matches (Section 2.2/2.3)
+    image_search: bool = False
+    predicate_top_m: int = 2        # predicate-label candidates per relationship
+
+    def entity(self, name: str) -> Entity:
+        return next(e for e in self.entities if e.name == name)
+
+    def relationship(self, name: str) -> Relationship:
+        return next(r for r in self.relationships if r.name == name)
+
+    def all_triples(self) -> List[Triple]:
+        seen, out = set(), []
+        for f in self.frames:
+            for t in f.triples:
+                if t not in seen:
+                    seen.add(t)
+                    out.append(t)
+        return out
+
+    def validate(self) -> None:
+        names = {e.name for e in self.entities}
+        rels = {r.name for r in self.relationships}
+        for f in self.frames:
+            for t in f.triples:
+                assert t.subject in names, f"unknown subject {t.subject}"
+                assert t.object in names, f"unknown object {t.object}"
+                assert t.predicate in rels, f"unknown predicate {t.predicate}"
+        for c in self.constraints:
+            assert 0 <= c.earlier < len(self.frames)
+            assert 0 <= c.later < len(self.frames)
+            assert c.earlier != c.later
+            if c.max_gap is not None:
+                assert c.max_gap >= c.min_gap
+
+
+def example_2_1(min_gap_frames: int = 5) -> VMRQuery:
+    """The paper's running example: man with backpack near a bicycle; man in
+    red moves from left of the bicycle to its right, > 2 s later (2 fps ⇒
+    f1 - f0 > 4)."""
+    e1 = Entity("e1", "man with backpack")
+    e2 = Entity("e2", "bicycle")
+    e3 = Entity("e3", "man in red")
+    r1 = Relationship("r1", "near")
+    r2 = Relationship("r2", "left of")
+    r3 = Relationship("r3", "right of")
+    f0 = FrameSpec((Triple("e1", "r1", "e2"), Triple("e3", "r2", "e2")))
+    f1 = FrameSpec((Triple("e1", "r1", "e2"), Triple("e3", "r3", "e2")))
+    return VMRQuery(
+        entities=(e1, e2, e3),
+        relationships=(r1, r2, r3),
+        frames=(f0, f1),
+        constraints=(TemporalConstraint(0, 1, min_gap=min_gap_frames),),
+    )

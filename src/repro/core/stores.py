@@ -1,0 +1,167 @@
+"""Entity Store and Relationship Store (Section 2.2).
+
+Entity Store rows: (vid, eid, ete, eie) — segment id, entity id (unique within
+segment, from tracking), text embedding, image embedding.
+Relationship Store rows: (vid, fid, sid, rl, oid).
+
+Both are device-resident, fixed-capacity, mask-valid structures; the vector
+parts shard over the ``data`` mesh axis, the relational parts over rows.
+Incremental update (the paper's update-friendliness claim) = append segments
+into spare capacity — no reprocessing of existing rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.symbolic.table import Table
+
+ENTITY_SCHEMA = ("vid", "eid")
+REL_SCHEMA = ("vid", "fid", "sid", "rl", "oid")
+
+
+@jax.tree_util.register_pytree_node_class
+class EntityStore:
+    def __init__(self, table: Table, text_emb: jax.Array,
+                 image_emb: jax.Array):
+        self.table = table          # columns vid, eid; capacity N
+        self.text_emb = text_emb    # (N, Dt) L2-normalized
+        self.image_emb = image_emb  # (N, Di) L2-normalized
+
+    def tree_flatten(self):
+        return (self.table, self.text_emb, self.image_emb), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def capacity(self) -> int:
+        return self.table.capacity
+
+    def count(self):
+        return self.table.count()
+
+
+@jax.tree_util.register_pytree_node_class
+class RelationshipStore:
+    def __init__(self, table: Table):
+        self.table = table          # columns vid, fid, sid, rl, oid
+
+    def tree_flatten(self):
+        return (self.table,), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def capacity(self) -> int:
+        return self.table.capacity
+
+
+@dataclass
+class PredicateVocab:
+    """The scene-graph model's closed predicate set + label embeddings."""
+
+    labels: List[str]
+    embeddings: np.ndarray  # (P, D)
+
+    def label_id(self, label: str) -> int:
+        return self.labels.index(label)
+
+
+@dataclass
+class VideoStores:
+    entities: EntityStore
+    relationships: RelationshipStore
+    predicates: PredicateVocab
+    num_segments: int
+    frames_per_segment: int
+    # (vid, eid) -> description (host metadata, for display + VLM prompts)
+    entity_desc: Dict[tuple, str] = dataclasses.field(default_factory=dict)
+
+
+def _pad_rows(arr: np.ndarray, capacity: int) -> np.ndarray:
+    out = np.zeros((capacity,) + arr.shape[1:], arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+def build_entity_store(vids: np.ndarray, eids: np.ndarray,
+                       text_emb: np.ndarray, image_emb: np.ndarray,
+                       capacity: int) -> EntityStore:
+    n = vids.shape[0]
+    if n > capacity:
+        raise ValueError(f"entity overflow {n} > {capacity}")
+    valid = np.zeros((capacity,), bool)
+    valid[:n] = True
+    table = Table({"vid": jnp.asarray(_pad_rows(vids.astype(np.int32), capacity)),
+                   "eid": jnp.asarray(_pad_rows(eids.astype(np.int32), capacity))},
+                  jnp.asarray(valid))
+    return EntityStore(table,
+                       jnp.asarray(_pad_rows(text_emb.astype(np.float32),
+                                             capacity)),
+                       jnp.asarray(_pad_rows(image_emb.astype(np.float32),
+                                             capacity)))
+
+
+def build_relationship_store(rows: np.ndarray, capacity: int
+                             ) -> RelationshipStore:
+    """rows: (M, 5) int32 in REL_SCHEMA order."""
+    m = rows.shape[0]
+    if m > capacity:
+        raise ValueError(f"relationship overflow {m} > {capacity}")
+    valid = np.zeros((capacity,), bool)
+    valid[:m] = True
+    cols = {name: jnp.asarray(_pad_rows(rows[:, i].astype(np.int32), capacity))
+            for i, name in enumerate(REL_SCHEMA)}
+    return RelationshipStore(Table(cols, jnp.asarray(valid)))
+
+
+import functools
+
+
+@jax.jit
+def _insert(arr: jax.Array, vals: jax.Array, start) -> jax.Array:
+    """Row insertion as one cached jitted program — incremental ingest cost
+    must not be dominated by per-op dispatch/compile of eager .at updates."""
+    return jax.lax.dynamic_update_slice_in_dim(arr, vals.astype(arr.dtype),
+                                               start, axis=0)
+
+
+def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
+                    ) -> EntityStore:
+    """Incremental ingest: write new rows into spare capacity."""
+    n_new = vids.shape[0]
+    start = int(np.asarray(store.table.count()))
+    if start + n_new > store.capacity:
+        raise ValueError("entity store capacity exhausted; grow the store")
+    s = jnp.asarray(start, jnp.int32)
+    cols = dict(store.table.columns)
+    cols["vid"] = _insert(cols["vid"], jnp.asarray(vids, jnp.int32), s)
+    cols["eid"] = _insert(cols["eid"], jnp.asarray(eids, jnp.int32), s)
+    valid = _insert(store.table.valid, jnp.ones((n_new,), bool), s)
+    return EntityStore(Table(cols, valid),
+                       _insert(store.text_emb, jnp.asarray(text_emb), s),
+                       _insert(store.image_emb, jnp.asarray(image_emb), s))
+
+
+def append_relationships(store: RelationshipStore, rows: np.ndarray
+                         ) -> RelationshipStore:
+    m_new = rows.shape[0]
+    start = int(np.asarray(store.table.count()))
+    if start + m_new > store.capacity:
+        raise ValueError("relationship store capacity exhausted")
+    s = jnp.asarray(start, jnp.int32)
+    cols = dict(store.table.columns)
+    for i, name in enumerate(REL_SCHEMA):
+        cols[name] = _insert(cols[name], jnp.asarray(rows[:, i], jnp.int32),
+                             s)
+    valid = _insert(store.table.valid, jnp.ones((m_new,), bool), s)
+    return RelationshipStore(Table(cols, valid))

@@ -1,0 +1,92 @@
+"""Temporal matching as bitmap dynamic programming (the paper's final stage).
+
+Candidate frames per query-frame are dense presence bitmaps over
+(segment, frame). Sequencing and window constraints become shifted
+cumulative-OR / windowed-count algebra — one fused pass per query frame,
+fully vectorized over segments (and shardable over them).
+
+Semantics: chain constraints between consecutive query frames
+(later = earlier + 1). ``reach[j][v, t]`` = "query frames 0..j can be embedded
+in segment v with frame j at time t respecting all gaps".
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import TemporalConstraint, VMRQuery
+
+
+def _shift_right(x: jax.Array, n: int) -> jax.Array:
+    """Shift along the last axis, filling with False/0."""
+    if n <= 0:
+        return x
+    pad = jnp.zeros(x.shape[:-1] + (n,), x.dtype)
+    return jnp.concatenate([pad, x[..., :-n]], axis=-1) if n < x.shape[-1] \
+        else jnp.zeros_like(x)
+
+
+def chain_step(prev: jax.Array, cand: jax.Array, min_gap: int,
+               max_gap: Optional[int]) -> jax.Array:
+    """prev, cand: (V, F) bool. Returns reach for the next query frame."""
+    if max_gap is None:
+        # exists t' <= t - min_gap with prev[t']  ==  cummax(prev) shifted
+        cum = jnp.cumsum(prev.astype(jnp.int32), axis=-1) > 0
+        return cand & _shift_right(cum, min_gap)
+    # windowed: #prev in [t - max_gap, t - min_gap] > 0
+    cs = jnp.cumsum(prev.astype(jnp.int32), axis=-1)
+    hi = _shift_right(cs, min_gap)                       # cs[t - min_gap]
+    lo = _shift_right(cs, max_gap + 1)                   # cs[t - max_gap - 1]
+    return cand & ((hi - lo) > 0)
+
+
+def normalize_constraints(query: VMRQuery) -> List[Tuple[int, Optional[int]]]:
+    """Per consecutive pair (j-1 -> j): (min_gap, max_gap).
+
+    Defaults to strict ordering (min_gap=1). Non-consecutive constraints are
+    folded onto the chain conservatively (their gaps distribute over the
+    intermediate steps' minima; exact handling would need interval DP — noted
+    as a restriction, matching the paper's consecutive-frame examples).
+    """
+    n = len(query.frames)
+    gaps: List[Tuple[int, Optional[int]]] = [(1, None)] * (n - 1)
+    for c in query.constraints:
+        lo, hi = sorted((c.earlier, c.later))
+        if hi - lo == 1:
+            cur = gaps[lo]
+            gaps[lo] = (max(cur[0], c.min_gap),
+                        c.max_gap if cur[1] is None else
+                        min(cur[1], c.max_gap or cur[1]))
+        else:
+            span = hi - lo
+            per = max(1, c.min_gap // span)
+            for j in range(lo, hi):
+                cur = gaps[j]
+                gaps[j] = (max(cur[0], per), cur[1])
+    return gaps
+
+
+def temporal_match(frame_bitmaps: Sequence[jax.Array], query: VMRQuery
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """frame_bitmaps: one (V, F) bool per query frame.
+
+    Returns (segment_hits: (V,) bool, end_frames: (V, F) bool — positions
+    where the *last* query frame can land completing a valid chain).
+    """
+    gaps = normalize_constraints(query)
+    reach = frame_bitmaps[0]
+    for j in range(1, len(frame_bitmaps)):
+        min_gap, max_gap = gaps[j - 1]
+        reach = chain_step(reach, frame_bitmaps[j], min_gap, max_gap)
+    return reach.any(axis=-1), reach
+
+
+def rank_segments(end_frames: jax.Array, top_k: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Rank segments by number of valid completions. Returns (scores, vids)."""
+    score = end_frames.sum(axis=-1)
+    k = min(top_k, score.shape[0])
+    vals, idx = jax.lax.top_k(score, k)
+    return vals, idx

@@ -1,0 +1,4 @@
+from repro.distributed import sharding  # noqa: F401
+from repro.distributed.fault import (FailureInjector,  # noqa: F401
+                                     SimulatedFailure, elastic_reshard,
+                                     run_with_restarts)

@@ -1,0 +1,217 @@
+"""Sharding rules: map every parameter / batch / cache tensor to a
+PartitionSpec on the production mesh.
+
+Scheme (single pod = (data=16, model=16); multi-pod adds a leading "pod" axis):
+
+  * batch dims            -> as many of ("pod", "data") as divide the batch
+  * attention projections -> fused head dim over "model" (TP); d_model over
+                             the data axes when FSDP is on (ZeRO-3: all-gather
+                             on use, emitted by GSPMD from the specs)
+  * MLP                   -> d_ff over "model", d_model over FSDP axes
+  * MoE experts           -> expert dim over "model" (EP); router replicated
+  * embeddings            -> vocab over "model" (padded to /256), d_model FSDP
+  * mamba projections     -> FSDP only (inner dims are split non-uniformly by
+                             z/x/B/C/dt, so TP would force per-layer reshards;
+                             SSM layers are small in every assigned hybrid)
+  * decode KV cache       -> sequence dim over "model" when kv heads don't
+                             divide TP (flash-decode style), else head dim;
+                             batch over the data axes
+
+Rules are path-pattern based so new architectures inherit sensible layouts.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def batch_spec_axes(global_batch: int, mesh: Mesh) -> Tuple[str, ...]:
+    """Largest prefix of the data axes that evenly divides the batch."""
+    axes: List[str] = []
+    size = 1
+    for a in dp_axes(mesh):
+        if global_batch % (size * mesh.shape[a]) == 0:
+            axes.append(a)
+            size *= mesh.shape[a]
+    return tuple(axes)
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+# (path regex, spec builder) — first match wins. `f` = FSDP axes or None.
+def _param_rules(cfg: ModelConfig, mesh: Mesh, par: ParallelConfig):
+    f = dp_axes(mesh) if par.fsdp else None
+    M = "model"
+
+    def fsdp_ok(dim: int) -> Optional[Tuple[str, ...]]:
+        if f is None:
+            return None
+        sz = 1
+        for a in f:
+            sz *= mesh.shape[a]
+        return f if dim % sz == 0 else None
+
+    d_model_f = fsdp_ok(cfg.d_model)
+    rules = [
+        # embeddings
+        (r"embed$", lambda s: P(M, d_model_f) if _div(s[0], mesh, M)
+            else P(None, d_model_f)),
+        (r"unembed$", lambda s: P(d_model_f, M) if _div(s[1], mesh, M)
+            else P(d_model_f, None)),
+        (r"(pos_embed|enc_pos_embed)$", lambda s: P(None, None)),
+        # attention (stacked: leading unit dim)
+        (r"(attn|cross)/wq$", lambda s: P(None, d_model_f, M)),
+        (r"(attn|cross)/w[kv]$", lambda s: P(None, d_model_f, M)
+            if _div(s[2], mesh, M) else P(None, d_model_f, None)),
+        (r"(attn|cross)/wo$", lambda s: P(None, M, d_model_f)),
+        (r"(attn|cross)/b[qkv]$", lambda s: P(None, M)
+            if _div(s[1], mesh, M) else P(None, None)),
+        (r"(attn|cross)/(q_norm|k_norm)$", lambda s: P(None, None)),
+        # MLP (gated or plain)
+        (r"mlp/w_(gate|up)$", lambda s: P(None, d_model_f, M)),
+        (r"mlp/w_down$", lambda s: P(None, M, d_model_f)),
+        (r"mlp/b_up$", lambda s: P(None, M)),
+        (r"mlp/b_down$", lambda s: P(None, None)),
+        # MoE: experts over model (EP)
+        (r"moe/router$", lambda s: P(None, None, None)),
+        (r"moe/w_(gate|up)$", lambda s: P(None, M, d_model_f, None)),
+        (r"moe/w_down$", lambda s: P(None, M, None, d_model_f)),
+        (r"moe/shared/w_(gate|up)$", lambda s: P(None, d_model_f, M)),
+        (r"moe/shared/w_down$", lambda s: P(None, M, d_model_f)),
+        (r"moe/shared/b_up$", lambda s: P(None, M)),
+        (r"moe/shared/b_down$", lambda s: P(None, None)),
+        # mamba: FSDP only (see module docstring)
+        (r"mamba/w_in$", lambda s: P(None, d_model_f, None)),
+        (r"mamba/w_out$", lambda s: P(None, None, d_model_f)),
+        (r"mamba/", lambda s: P(*([None] * len(s)))),
+        # norms and everything small
+        (r"(pre_norm|post_norm|cross_norm|final_norm|enc_final_norm|"
+         r"gate_norm)", lambda s: P(*([None] * len(s)))),
+    ]
+    return [(re.compile(pat), fn) for pat, fn in rules]
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, par: ParallelConfig,
+                params_tree: Any) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDS)."""
+    rules = _param_rules(cfg, mesh, par)
+
+    def assign(path, leaf):
+        ps = path_str(path)
+        shape = leaf.shape
+        for pat, fn in rules:
+            if pat.search(ps):
+                spec = fn(shape)
+                # sanity: never shard a dim unevenly
+                out = []
+                for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+                    if ax is None:
+                        out.append(None)
+                        continue
+                    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+                    sz = 1
+                    for a in axes:
+                        sz *= mesh.shape[a]
+                    out.append(ax if dim % sz == 0 else None)
+                return P(*out)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                batch_tree: Any, seq_shard: bool = False) -> Any:
+    bax = batch_spec_axes(shape.global_batch, mesh)
+    b = bax if bax else None
+    seq = "model" if seq_shard else None
+
+    def assign(path, leaf):
+        ps = path_str(path)
+        nd = len(leaf.shape)
+        if ps.endswith("mrope_positions"):        # (3, B, S)
+            return P(None, b, seq)
+        if ps.endswith(("patch_embeds", "frames")):  # (B, P, D)
+            return P(b, None, None)
+        if nd == 2:                                # tokens/labels/mask (B, S)
+            return P(b, seq)
+        if nd == 1:
+            return P(b)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                cache_tree: Any) -> Any:
+    """Decode cache layout. k/v: (nu, B, S, Hkv, D)."""
+    bax = batch_spec_axes(shape.global_batch, mesh)
+    b = bax if bax else None
+    heads_div = _div(cfg.num_kv_heads_eff, mesh, "model") if cfg.num_kv_heads \
+        else False
+
+    def assign(path, leaf):
+        ps = path_str(path)
+        if ps.endswith(("_scale",)):              # (nu, B, S, Hkv) int8 scales
+            if heads_div:
+                return P(None, b, None, "model")
+            if leaf.shape[2] % mesh.shape["model"] == 0:
+                return P(None, b, "model", None)
+            return P(None, b, None, None)
+        if ps.endswith(("/k", "/v")) or "cross_" in ps:
+            if heads_div:
+                return P(None, b, None, "model", None)
+            if leaf.shape[2] % mesh.shape["model"] == 0:
+                return P(None, b, "model", None, None)  # seq-sharded KV
+            return P(None, b, None, None, None)
+        if ps.endswith("/ssm"):                       # (nu, B, H, P, N)
+            return P(None, b, None, None, None)
+        if ps.endswith("/conv"):                      # (nu, B, W-1, conv_dim)
+            return P(None, b, None, None)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

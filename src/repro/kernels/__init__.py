@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (+ jnp oracles): see ops.py for the dispatching API.
+
+Kernels:
+  flash_attention  — prefill attention, online softmax over KV blocks
+  decode_attention — flash-decode over a long KV cache
+  topk_similarity  — fused similarity + running top-k (semantic search)
+  ssd_scan         — Mamba-2 SSD chunked scan with VMEM-resident state
+"""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,99 @@
+"""Decode attention (flash-decode) — Pallas TPU kernel.
+
+One new query token per sequence attends over a long KV cache. The KV length
+is the only large dimension, so it becomes the innermost (sequential) grid
+axis with online-softmax accumulators in VMEM, and the G grouped query heads
+of one KV head are processed together as the matmul's row dimension (padded
+to the 8-row MXU granule in the wrapper).
+
+Memory-bound by design (reads the whole cache once); the kernel's job is to
+stream K/V blocks at full HBM bandwidth with no score materialization.
+Validity comes from an explicit (B, S) mask so ragged cache fills and
+sliding-window/chunked policies are all expressible by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, n_kv_blocks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (Gp, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk_k, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = valid_ref[0, :][None, :] > 0                   # (1, blk_k)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(ok, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_valid: jax.Array, *, blk_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, D); caches: (B, S, Hkv, D); kv_valid: (B, S) bool.
+
+    Returns (B, Hkv, G, D).
+    """
+    B, Hkv, G, D = q.shape
+    S = k_cache.shape[1]
+    Gp = max(8, ((G + 7) // 8) * 8)
+    if Gp != G:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    blk_k = min(blk_k, S)
+    pad_k = (-S) % blk_k
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad_k)))
+    S_p = S + pad_k
+    nK = S_p // blk_k
+
+    kern = functools.partial(_kernel, scale=D ** -0.5, n_kv_blocks=nK)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, nK),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, blk_k), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, kv_valid.astype(jnp.int32))
+    return out[:, :, :G]

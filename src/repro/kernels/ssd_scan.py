@@ -1,0 +1,114 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+Grid (batch·head, chunk); the chunk axis is innermost/sequential and the
+running (P, N) state matrix lives in VMEM scratch, so the inter-chunk
+recurrence never round-trips HBM. Within a chunk everything is dense matmul:
+
+    y_diag = ((C Bᵀ) ⊙ L) X        — MXU, (Q,N)x(N,Q) then (Q,Q)x(Q,P)
+    y_off  = (C state_prevᵀ) ⊙ exp(a_cum)
+    state  = decay_chunk · state_prev + (B ⊙ decay_states)ᵀ X
+
+With chunk Q=128, N=128, P=64 the tiles are exactly MXU-shaped, and VMEM
+holds x(Q·P) + B,C(2·Q·N) + L(Q·Q) + state(P·N) ≈ 260 KB in f32.
+
+The GQA-style B/C group sharing (G groups < H heads) is resolved by the
+index maps (head h reads group h·G//H).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, state_ref, *,
+            n_chunks: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)             # (Q,)
+    B = b_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    Q = x.shape[0]
+
+    a_cum = jnp.cumsum(a)                               # (Q,)
+    # L[i, j] = exp(a_cum[i] - a_cum[j]) for i >= j else 0
+    diff = a_cum[:, None] - a_cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(rows >= cols, jnp.exp(diff), 0.0)
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jax.lax.dot_general(cb * L, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    prev = state_ref[...]                               # (P, N)
+    y_off = jax.lax.dot_general(C, prev, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Q, P)
+    y_off = y_off * jnp.exp(a_cum)[:, None]
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_states = jnp.exp(a_cum[-1] - a_cum)           # (Q,)
+    new_contrib = jax.lax.dot_general(
+        x, B * decay_states[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (P, N)
+    state_ref[...] = prev * jnp.exp(a_cum[-1]) + new_contrib
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _finalize():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array, *,
+             chunk: int = 128, interpret: bool = False):
+    """x: (b,S,H,P) pre-multiplied by dt; a: (b,S,H); B/C: (b,S,G,N).
+
+    Returns (y: (b,S,H,P), final_state: (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))   # a=0 -> no decay, no input
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    kern = functools.partial(_kernel, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(b * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P),
+                         lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bh, c, H=H: (bh // H, c, bh % H)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bh, c, H=H, G=G: (bh // H, c, (bh % H) * G // H, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bh, c, H=H, G=G: (bh // H, c, (bh % H) * G // H, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P),
+                         lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bh, c, H=H: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, Sp, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, B, C)
+    return y[:, :S], state

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import anywhere: jax locks the
+# device count at first backend init. Everything else follows.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, applicable_shapes,  # noqa: E402
+                           get_config)
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch import specs as spec_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.training import optimizer as opt_lib  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every cross-device collective in HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        count[op] += 1
+    return out, count
+
+
+def default_parallel(cfg: ModelConfig, shape: ShapeConfig) -> ParallelConfig:
+    big = cfg.param_count() * 2 > 4e9          # >4 GB of bf16 params
+    remat = os.environ.get("REPRO_REMAT",
+                           "dots" if shape.mode == "train" else "none")
+    return ParallelConfig(
+        fsdp=big and shape.mode == "train",
+        remat=remat,
+        grad_compression="bf16" if shape.mode == "train" else "none",
+    )
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    if shape.mode != "train":
+        return 1
+    if os.environ.get("REPRO_NMB_OVERRIDE"):
+        return int(os.environ["REPRO_NMB_OVERRIDE"])
+    bax = shd.batch_spec_axes(shape.global_batch, mesh)
+    dp = 1
+    for a in bax:
+        dp *= mesh.shape[a]
+    per_dev = shape.global_batch // dp
+    tokens = per_dev * shape.seq_len
+    budget = 8192 if cfg.param_count() * 2 < 4e9 else 4096
+    n = max(1, min(per_dev, tokens // budget))
+    while per_dev % n:
+        n -= 1
+    return n
+
+
+def _mem_attrs(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+def _cost_attrs(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_override: ModelConfig = None, nmb_override: int = None):
+    """Returns (lowered_fn_args) ready to lower: (jitted, arg_sds)."""
+    base_cfg = get_config(arch)
+    if os.environ.get("REPRO_HEAD_PAD"):
+        import dataclasses
+        base_cfg = dataclasses.replace(
+            base_cfg, tp_head_pad=int(os.environ["REPRO_HEAD_PAD"]))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = default_parallel(base_cfg, shape)   # parallel policy from full size
+    cfg = cfg_override or base_cfg
+    nmb = (nmb_override if nmb_override is not None
+           else default_microbatches(base_cfg, shape, mesh))
+
+    params_sds = spec_lib.abstract_params(cfg)
+    pspecs = shd.param_specs(cfg, mesh, par, params_sds)
+    pshard = shd.to_named(mesh, pspecs)
+    batch_sds = spec_lib.input_specs(cfg, shape)
+
+    if shape.mode == "train":
+        opt_sds = jax.eval_shape(opt_lib.init_state, params_sds)
+        ospecs = {"mu": pspecs, "nu": pspecs, "step": P()}
+        oshard = shd.to_named(mesh, ospecs)
+        bspecs = shd.batch_specs(cfg, mesh, shape, batch_sds)
+        bshard = shd.to_named(mesh, bspecs)
+        opt = opt_lib.OptimizerConfig()
+        step = make_train_step(cfg, par, opt, num_microbatches=nmb,
+                               param_pspecs=pspecs)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+    elif shape.mode == "prefill":
+        bspecs = shd.batch_specs(cfg, mesh, shape, batch_sds)
+        bshard = shd.to_named(mesh, bspecs)
+        cache_sds = spec_lib.cache_specs_abstract(cfg, shape)
+        cshard = shd.to_named(mesh, shd.cache_specs(cfg, mesh, shape,
+                                                    cache_sds))
+
+        def fn(params, batch):
+            return M.prefill(params, batch, cfg, cache_len=shape.seq_len)
+
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard),
+                         out_shardings=(None, cshard))
+        args = (params_sds, batch_sds)
+    else:  # decode
+        cache_sds = spec_lib.cache_specs_abstract(cfg, shape)
+        cspecs = shd.cache_specs(cfg, mesh, shape, cache_sds)
+        cshard = shd.to_named(mesh, cspecs)
+        bax = shd.batch_spec_axes(shape.global_batch, mesh)
+        b = bax if bax else None
+        tok_shard = NamedSharding(mesh, P(b, None))
+        pos_spec = P(None, b, None) if cfg.rope_type == "mrope" else P(b, None)
+        pos_shard = NamedSharding(mesh, pos_spec)
+
+        def fn(params, token, positions, cache):
+            return M.decode_step(params, token, positions, cache, cfg)
+
+        jitted = jax.jit(fn,
+                         in_shardings=(pshard, tok_shard, pos_shard, cshard),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(3,))
+        args = (params_sds, batch_sds["token"], batch_sds["positions"],
+                cache_sds)
+    return cfg, shape, mesh, par, nmb, jitted, args
+
+
+def _depth_cfg(cfg: ModelConfig, d_units: int) -> ModelConfig:
+    """Same architecture truncated to ``d_units`` repeating units."""
+    import dataclasses
+    from repro.models import transformer as tf
+    ul = tf.unit_len(cfg)
+    nu = tf.num_units(cfg)
+    over = {"num_layers": ul * d_units}
+    if cfg.is_encoder_decoder:
+        over["encoder_layers"] = max(1, cfg.encoder_layers * d_units // nu)
+    return dataclasses.replace(cfg, **over)
+
+
+def meter_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    """Loop-free cost metering: compile fully-unrolled 1-unit and 2-unit
+    variants and extrapolate linearly in unit count.
+
+    XLA's HLO cost analysis counts while-loop bodies once, so the production
+    (rolled-scan) program under-reports FLOPs/bytes/collective traffic by the
+    trip count. The two-depth difference isolates the exact per-unit cost
+    including remat recompute and FSDP all-gathers; embedding/head/loss costs
+    land in the intercept. Validated against a full-unroll compile in
+    EXPERIMENTS.md §Dry-run (<2% error).
+    """
+    from repro.models import transformer as tf
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_HEAD_PAD"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg,
+                                  tp_head_pad=int(os.environ["REPRO_HEAD_PAD"]))
+    nu = tf.num_units(cfg)
+    os.environ["REPRO_SCAN_UNROLL"] = "1"
+    try:
+        meas = {}
+        for d in (1, 2):
+            _, shape, mesh, par, _, jitted, args = build_cell(
+                arch, shape_name, multi_pod,
+                cfg_override=_depth_cfg(cfg, d), nmb_override=1)
+            with jax.set_mesh(mesh):
+                compiled = jitted.lower(*args).compile()
+            cost = _cost_attrs(compiled)
+            coll, coll_n = collective_bytes(compiled.as_text())
+            meas[d] = {"cost": cost, "coll": coll, "coll_n": coll_n}
+    finally:
+        os.environ["REPRO_SCAN_UNROLL"] = "0"
+
+    def extrap(get):
+        f1, f2 = get(meas[1]), get(meas[2])
+        return f1 + (nu - 1) * (f2 - f1)
+
+    flops = extrap(lambda m: m["cost"].get("flops", 0.0))
+    bytes_acc = extrap(lambda m: m["cost"].get("bytes accessed", 0.0))
+    coll = {k: extrap(lambda m, k=k: float(m["coll"][k]))
+            for k in _COLLECTIVES}
+    coll_n = {k: int(extrap(lambda m, k=k: float(m["coll_n"][k])))
+              for k in _COLLECTIVES}
+    # training processes global batch in nmb microbatches: metering ran 1
+    # microbatch over the full per-device batch, so totals already match.
+    return {"flops": flops, "bytes_accessed": bytes_acc,
+            "collective_bytes": coll, "collective_counts": coll_n,
+            "depth1": meas[1], "depth2": meas[2], "num_units": nu}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, meter: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    cfg, shape, mesh, par, nmb, jitted, args = build_cell(
+        arch, shape_name, multi_pod)
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    coll, coll_n = collective_bytes(compiled.as_text())
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": int(mesh.devices.size),
+        "mode": shape.mode,
+        "fsdp": par.fsdp,
+        "remat": par.remat,
+        "kv_quant": os.environ.get("REPRO_KV_QUANT", "0") == "1",
+        "num_microbatches": nmb,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost": _cost_attrs(compiled),
+        "memory": _mem_attrs(compiled),
+        "collective_bytes": coll,
+        "collective_counts": coll_n,
+    }
+    if meter:
+        try:
+            result["metered"] = meter_cell(arch, shape_name, multi_pod)
+        except Exception as e:
+            result["metered"] = {"error": str(e)}
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        tag = os.environ.get("REPRO_RESULT_TAG", "")
+        fn = os.path.join(RESULTS_DIR,
+                          f"{arch}__{shape_name}__{mesh_name}{tag}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run driver")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else applicable_shapes(a))
+        for s in shapes:
+            if args.mesh in ("single", "both"):
+                cells.append((a, s.name, False))
+            if args.mesh in ("multi", "both"):
+                cells.append((a, s.name, True))
+
+    failures = []
+    for arch, shape_name, multi in cells:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        out = os.path.join(RESULTS_DIR,
+                           f"{arch}__{shape_name}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(out):
+            print(f"[skip] {arch} {shape_name} {mesh_name}")
+            continue
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} ...", flush=True)
+        try:
+            r = run_cell(arch, shape_name, multi)
+            flops = r["cost"].get("flops", -1)
+            print(f"  OK compile={r['compile_s']}s flops={flops:.3e} "
+                  f"coll={sum(r['collective_bytes'].values()):.3e}B",
+                  flush=True)
+        except Exception as e:
+            failures.append((arch, shape_name, mesh_name, str(e)))
+            traceback.print_exc()
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells OK")
+    for f in failures:
+        print("FAILED:", f[:3], f[3][:200])
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell — no allocation.
+
+``input_specs(cfg, shape)`` returns the batch pytree the corresponding step
+function consumes (tokens/labels for train, prompt for prefill, one token +
+cache for decode). Modality frontends are stubs: VLM archs receive
+``patch_embeds`` (and M-RoPE position ids), whisper receives encoder
+``frames``, exactly as DESIGN.md §5 specifies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _vlm_text_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - cfg.vision.tokens_per_item
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32, bf16 = jnp.int32, jnp.float32, jnp.bfloat16
+    is_vlm = cfg.vision.enabled and cfg.vision.kind == "patches"
+
+    if shape.mode == "train":
+        if is_vlm:
+            T = _vlm_text_len(cfg, S)
+            return {
+                "tokens": SDS((B, T), i32),
+                "labels": SDS((B, T), i32),
+                "loss_mask": SDS((B, T), f32),
+                "patch_embeds": SDS((B, cfg.vision.tokens_per_item,
+                                     cfg.d_model), bf16),
+                "mrope_positions": SDS((3, B, S), i32),
+            } if cfg.rope_type == "mrope" else {
+                "tokens": SDS((B, T), i32),
+                "labels": SDS((B, T), i32),
+                "loss_mask": SDS((B, T), f32),
+                "patch_embeds": SDS((B, cfg.vision.tokens_per_item,
+                                     cfg.d_model), bf16),
+            }
+        if cfg.is_encoder_decoder:
+            return {
+                "tokens": SDS((B, S), i32),
+                "labels": SDS((B, S), i32),
+                "loss_mask": SDS((B, S), f32),
+                "frames": SDS((B, cfg.encoder_seq_len, cfg.d_model), bf16),
+            }
+        return {
+            "tokens": SDS((B, S), i32),
+            "labels": SDS((B, S), i32),
+            "loss_mask": SDS((B, S), f32),
+        }
+
+    if shape.mode == "prefill":
+        out: Dict[str, Any] = {}
+        if is_vlm:
+            T = _vlm_text_len(cfg, S)
+            out["tokens"] = SDS((B, T), i32)
+            out["patch_embeds"] = SDS((B, cfg.vision.tokens_per_item,
+                                       cfg.d_model), bf16)
+            if cfg.rope_type == "mrope":
+                out["mrope_positions"] = SDS((3, B, S), i32)
+        else:
+            out["tokens"] = SDS((B, S), i32)
+            if cfg.is_encoder_decoder:
+                out["frames"] = SDS((B, cfg.encoder_seq_len, cfg.d_model),
+                                    bf16)
+        return out
+
+    # decode: one token, primed cache of length S
+    tok = {"token": SDS((B, 1), i32)}
+    if cfg.rope_type == "mrope":
+        tok["positions"] = SDS((3, B, 1), i32)
+    else:
+        tok["positions"] = SDS((B, 1), i32)
+    return tok
+
+
+def cache_specs_abstract(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return M.abstract_params(cfg)

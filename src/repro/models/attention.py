@@ -1,0 +1,252 @@
+"""Attention: GQA projections, blocked causal attention (flash-style online
+softmax over query blocks, memory O(S·block) instead of O(S²)), decode
+attention over a KV cache, sliding-window and chunked-local masking.
+
+Two execution paths share this module:
+  * the pure-jnp path (always available; what the dry-run lowers; oracle for the
+    Pallas kernels),
+  * the Pallas path (``repro.kernels.ops``) enabled via ``use_kernels=True`` on
+    real TPU backends.
+
+GQA TP convention: when ``num_kv_heads < tp`` the KV heads are *replicated* so
+attention is collective-free under a sharded ``model`` axis (vLLM-style); see
+``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, dt
+from repro.models import rope as rope_lib
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    pd = dt(cfg.param_dtype)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, qd), pd),
+        "wk": dense_init(ks[1], (d, kvd), pd),
+        "wv": dense_init(ks[2], (d, kvd), pd),
+        "wo": dense_init(ks[3], (qd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), pd)
+        p["bk"] = jnp.zeros((kvd,), pd)
+        p["bv"] = jnp.zeros((kvd,), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), pd)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), pd)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, xkv: jax.Array, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S = x.shape[:2]
+    Skv = xkv.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", xkv, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xkv, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads_eff, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.num_kv_heads_eff, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.num_kv_heads_eff, cfg.head_dim)
+    if cfg.qk_norm:
+        from repro.models.common import rms_norm
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _position_encode(q, k, positions, kv_positions, cfg: ModelConfig):
+    if cfg.rope_type == "rope":
+        q = rope_lib.apply_rope(q, positions, theta=cfg.rope_theta,
+                                rope_pct=cfg.rope_pct)
+        k = rope_lib.apply_rope(k, kv_positions, theta=cfg.rope_theta,
+                                rope_pct=cfg.rope_pct)
+    elif cfg.rope_type == "mrope":
+        # positions here are (3, B, S)
+        q = rope_lib.apply_mrope(q, positions, theta=cfg.rope_theta,
+                                 sections=cfg.mrope_sections)
+        k = rope_lib.apply_mrope(k, kv_positions, theta=cfg.rope_theta,
+                                 sections=cfg.mrope_sections)
+    # "learned" handled at the embedding layer; "none" = NoPE.
+    return q, k
+
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, cfg: ModelConfig,
+               causal: bool, kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Additive mask bias (..., Sq, Skv) in f32."""
+    ok = jnp.ones(q_pos.shape + kv_pos.shape[-1:], bool)
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    if causal:
+        ok &= kp <= qp
+    if cfg.sliding_window:
+        ok &= kp > qp - cfg.sliding_window
+    if cfg.attention_chunk:
+        ok &= (kp // cfg.attention_chunk) == (qp // cfg.attention_chunk)
+    if kv_valid is not None:
+        ok &= kv_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocked attention (the jnp "flash" path).
+# ---------------------------------------------------------------------------
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array, cfg: ModelConfig,
+                      *, causal: bool = True, q_block: int = 1024) -> jax.Array:
+    """q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    Scans over query blocks; each block materializes scores of shape
+    (B, Hq, q_block, Skv) only. GQA handled by reshaping Hq = Hkv × G.
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    blk = min(q_block, Sq)
+    n_blocks = (Sq + blk - 1) // blk
+    pad = n_blocks * blk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    # (B, Hkv, G, nb, blk, D)
+    qb = q.reshape(B, n_blocks, blk, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    qpb = q_pos.reshape(B, n_blocks, blk).transpose(1, 0, 2)   # (nb, B, blk)
+    kt = k.transpose(0, 2, 3, 1)                                # (B, Hkv, D, Skv)
+    vt = v.transpose(0, 2, 1, 3)                                # (B, Hkv, Skv, D)
+
+    def body(_, inp):
+        qi, qpi = inp                                           # (B,Hkv,G,blk,D), (B,blk)
+        s = jnp.einsum("bhgqd,bhdk->bhgqk", qi.astype(jnp.float32),
+                       kt.astype(jnp.float32)) * scale
+        bias = _mask_bias(qpi, kv_pos, cfg, causal)             # (B, blk, Skv)
+        s = s + bias[:, None, None]
+        # guard fully-masked (padded) query rows
+        s = jnp.maximum(s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", w, vt.astype(jnp.float32))
+        return _, o.astype(q.dtype)
+
+    import os as _os
+    _, out = jax.lax.scan(
+        body, None, (qb, qpb),
+        unroll=_os.environ.get("REPRO_SCAN_UNROLL", "0") == "1")
+    # (nb, B, Hkv, G, blk, D) -> (B, Sq, Hq, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, n_blocks * blk, Hq, D)
+    return out[:, :Sq]
+
+
+def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         kv_valid: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """q: (B, 1, Hq, D); caches: (B, S, Hkv, D); kv_valid: (B, S) bool."""
+    B, _, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full layer entry points.
+# ---------------------------------------------------------------------------
+def attention_layer(p: Params, x: jax.Array, positions, cfg: ModelConfig, *,
+                    causal: bool = True, use_kernels: bool = False,
+                    xkv: Optional[jax.Array] = None,
+                    kv_positions=None) -> jax.Array:
+    """Self- (or cross-, when xkv given) attention over a full sequence."""
+    xkv = x if xkv is None else xkv
+    if kv_positions is None:
+        kv_positions = positions
+    q, k, v = _project_qkv(p, x, xkv, cfg)
+    # rope positions: mrope takes (3,B,S); others (B,S)
+    pos_q = positions
+    pos_kv = kv_positions
+    q, k = _position_encode(q, k, pos_q, pos_kv, cfg)
+    flat_q_pos = positions[0] if cfg.rope_type == "mrope" else positions
+    flat_kv_pos = kv_positions[0] if cfg.rope_type == "mrope" else kv_positions
+    if use_kernels:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, flat_q_pos, flat_kv_pos, cfg,
+                                 causal=causal)
+    else:
+        o = blocked_attention(q, k, v, flat_q_pos, flat_kv_pos, cfg,
+                              causal=causal)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, cfg.q_dim), p["wo"])
+    return out, (k, v)
+
+
+def attention_decode_layer(p: Params, x: jax.Array, positions,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           cache_index: jax.Array, cfg: ModelConfig, *,
+                           use_kernels: bool = False,
+                           k_scale=None, v_scale=None):
+    """One-token decode. x: (B, 1, d).
+
+    Returns (out, new_k_cache, new_v_cache[, new_k_scale, new_v_scale]).
+    ``cache_index``: per-row (B,) int32 (or scalar) — the new token's K/V are
+    written at position cache_index[b]; attention spans positions <= it.
+    Per-row indices enable continuous batching (ragged slot lengths).
+    When ``k_scale``/``v_scale`` are given, the cache is int8-quantized
+    (see repro.models.kvquant).
+    """
+    B = x.shape[0]
+    quant = k_scale is not None
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q, k = _position_encode(q, k, positions, positions, cfg)
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (B,))
+    rows = jnp.arange(B)
+    if quant:
+        from repro.models import kvquant
+        kq, ks = kvquant.quantize(k[:, 0])
+        vq, vs = kvquant.quantize(v[:, 0])
+        k_cache = k_cache.at[rows, idx].set(kq)
+        v_cache = v_cache.at[rows, idx].set(vq)
+        k_scale = k_scale.at[rows, idx].set(ks)
+        v_scale = v_scale.at[rows, idx].set(vs)
+        k_read = kvquant.dequantize(k_cache, k_scale)
+        v_read = kvquant.dequantize(v_cache, v_scale)
+    else:
+        k_cache = k_cache.at[rows, idx].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, idx].set(v[:, 0].astype(v_cache.dtype))
+        k_read, v_read = k_cache, v_cache
+    S = k_cache.shape[1]
+    pos_row = jnp.arange(S)[None, :]
+    kv_valid = pos_row <= idx[:, None]
+    if cfg.sliding_window:
+        kv_valid &= pos_row > idx[:, None] - cfg.sliding_window
+    if cfg.attention_chunk:
+        kv_valid &= (pos_row // cfg.attention_chunk
+                     ) == (idx[:, None] // cfg.attention_chunk)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        o = kops.decode_attention(q, k_read, v_read, kv_valid, cfg)
+    else:
+        o = decode_attention_jnp(q, k_read, v_read, kv_valid, cfg)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, cfg.q_dim), p["wo"])
+    if quant:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache

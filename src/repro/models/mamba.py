@@ -1,0 +1,260 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Prefill/train path: the chunked SSD algorithm — intra-chunk quadratic term
+(maps to the MXU) + inter-chunk state recurrence (a length-S/chunk scan).
+The Pallas kernel in ``repro.kernels.ssd_scan`` implements the same algorithm
+with VMEM-resident chunk state; this module is the pure-jnp oracle and the
+dry-run lowering path.
+
+Decode path: O(1) recurrent state update per token.
+
+State carried between calls:
+  ssm_state : (B, H, P, N)    — per-head state matrix
+  conv_state: (B, W-1, conv_dim) — causal-conv tail
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, dt, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.nheads(cfg.d_model)
+    conv_dim = d_in + 2 * s.ngroups * s.d_state
+    return s, d_in, H, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    pd = dt(cfg.param_dtype)
+    s, d_in, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_in + 2 * s.ngroups * s.d_state + H
+    p: Params = {
+        "w_in": dense_init(ks[0], (cfg.d_model, in_dim), pd),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), pd),
+        "w_out": dense_init(ks[2], (d_in, cfg.d_model), pd),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked), pure jnp.
+# ---------------------------------------------------------------------------
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums.
+
+    out[i, j] = sum_{k=j+1..i} a[k]  for i >= j, -inf otherwise.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    x: (b, S, H, P) inputs (already multiplied by dt)
+    a: (b, S, H)    per-step log decay (dt * A, negative)
+    B: (b, S, G, N) input maps; C: (b, S, G, N) output maps
+    Returns (y: (b, S, H, P), final_state: (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        # zero dt (a=0 -> decay=1, input=0) keeps the state exact under padding
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc, Q = S // chunk, chunk
+    rep = H // G
+
+    xc = x.reshape(b, nc, Q, H, P).astype(jnp.float32)
+    ac = a.reshape(b, nc, Q, H).transpose(0, 3, 1, 2)          # (b,H,nc,Q)
+    Bc = B.reshape(b, nc, Q, G, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, G, N).astype(jnp.float32)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)                           # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                            # (b,H,nc,Q)
+
+    # 1) intra-chunk (quadratic, MXU-friendly)
+    L = jnp.exp(_segsum(ac))                                   # (b,H,nc,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp",
+                        Ch, Bh, L, xc)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # (b,H,nc,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn",
+                        Bh, decay_states, xc)                  # (b,nc,H,P,N)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                      # (b,H,nc)
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                          # (b,H,P,N), (b,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    sts = states.transpose(1, 0, 2, 3, 4)                      # (nc,b,H,P,N)
+    decs = chunk_decay.transpose(2, 0, 1)                      # (nc,b,H)
+    import os as _os
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, s0, (sts, decs),
+        unroll=_os.environ.get("REPRO_SCAN_UNROLL", "0") == "1")
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,nc,H,P,N)
+
+    # 4) state -> output within each chunk
+    state_decay = jnp.exp(a_cum)                               # (b,H,nc,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    if pad:
+        y = y[:, : S - pad]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_step(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                       state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update.
+
+    x: (b, H, P) (already ×dt); a: (b, H) log decay; B/C: (b, G, N);
+    state: (b, H, P, N). Returns (y: (b, H, P), new_state).
+    """
+    b, H, P = x.shape
+    G, N = B.shape[1], B.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=1)        # (b,H,N)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dA = jnp.exp(a.astype(jnp.float32))                        # (b,H)
+    new_state = (state * dA[..., None, None]
+                 + x.astype(jnp.float32)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full block.
+# ---------------------------------------------------------------------------
+def _split_in(h: jax.Array, cfg: ModelConfig):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, xi, B, C, dtv = jnp.split(
+        h, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xi, B, C, dtv
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv via shifted adds. seq: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((seq.shape[0], W - 1, seq.shape[2]), seq.dtype)
+    padded = jnp.concatenate([tail.astype(seq.dtype), seq], axis=1)
+    S = seq.shape[1]
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(W):
+        out = out + padded[:, i: i + S].astype(jnp.float32) * w[i].astype(
+            jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+def mamba_layer(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                use_kernels: bool = False,
+                init_state: Optional[jax.Array] = None):
+    """Full-sequence Mamba-2 block. x: (B, S, d_model) -> same."""
+    s, d_in, H, conv_dim = _dims(cfg)
+    h = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xi, Bm, Cm, dtv = _split_in(h, cfg)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xi, Bm, Cm = jnp.split(conv_out, [d_in, d_in + s.ngroups * s.d_state],
+                           axis=-1)
+    B_, S_ = x.shape[:2]
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    a = dtv * A                                                    # log decay
+    xh = xi.reshape(B_, S_, H, s.head_dim)
+    x_dt = xh.astype(jnp.float32) * dtv[..., None]
+    Bg = Bm.reshape(B_, S_, s.ngroups, s.d_state)
+    Cg = Cm.reshape(B_, S_, s.ngroups, s.d_state)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        y, final_state = kops.ssd_scan(x_dt, a, Bg, Cg, chunk=s.chunk)
+    else:
+        y, final_state = ssd_chunked(x_dt, a, Bg, Cg, chunk=min(s.chunk, S_),
+                                     init_state=init_state)
+    y = y + xh.astype(y.dtype) * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(B_, S_, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"])
+    conv_tail = conv_in[:, -(s.conv_width - 1):, :]
+    return out, (final_state, conv_tail)
+
+
+def mamba_decode_layer(p: Params, x: jax.Array, ssm_state: jax.Array,
+                       conv_state: jax.Array, cfg: ModelConfig):
+    """One-token decode. x: (B, 1, d_model).
+
+    Returns (out, new_ssm_state, new_conv_state).
+    """
+    s, d_in, H, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    h = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]          # (B, in_dim)
+    z, xi, Bm, Cm, dtv = _split_in(h, cfg)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)           # (B, conv_dim)
+    # causal conv over [conv_state ; conv_in]
+    W = s.conv_width
+    window = jnp.concatenate(
+        [conv_state.astype(conv_in.dtype), conv_in[:, None, :]], axis=1)
+    conv_out = (window.astype(jnp.float32)
+                * p["conv_w"].astype(jnp.float32)[None]).sum(1)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)
+                           ).astype(conv_in.dtype)
+    new_conv_state = window[:, 1:]
+    xi, Bm, Cm = jnp.split(conv_out, [d_in, d_in + s.ngroups * s.d_state],
+                           axis=-1)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    a = dtv * A
+    xh = xi.reshape(B_, H, s.head_dim).astype(jnp.float32) * dtv[..., None]
+    Bg = Bm.reshape(B_, s.ngroups, s.d_state)
+    Cg = Cm.reshape(B_, s.ngroups, s.d_state)
+    y, new_state = ssd_recurrent_step(xh, a, Bg, Cg, ssm_state)
+    y = y + xi.reshape(B_, H, s.head_dim).astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B_, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), p["w_out"])
+    return out[:, None, :], new_state, new_conv_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_in, H, conv_dim = _dims(cfg)
+    return (jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+            jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype))

@@ -1,0 +1,45 @@
+"""Feed-forward blocks: gated (SiLU) and plain (GELU) variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, activation, dense_init, dt
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int) -> Params:
+    pd = dt(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_activation == "silu":  # gated
+        p = {
+            "w_gate": dense_init(ks[0], (d, d_ff), pd),
+            "w_up": dense_init(ks[1], (d, d_ff), pd),
+            "w_down": dense_init(ks[2], (d_ff, d), pd),
+        }
+    else:  # plain
+        p = {
+            "w_up": dense_init(ks[0], (d, d_ff), pd),
+            "w_down": dense_init(ks[1], (d_ff, d), pd),
+        }
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((d_ff,), pd)
+        p["b_down"] = jnp.zeros((d,), pd)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = activation(cfg.mlp_activation)
+    if "w_gate" in p:
+        h = act(jnp.einsum("...d,df->...f", x, p["w_gate"]))
+        h = h * jnp.einsum("...d,df->...f", x, p["w_up"])
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_up"])
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = act(h)
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out

@@ -1,0 +1,228 @@
+"""Public model API.
+
+All functions are pure and jit-friendly; ``cfg`` is static.
+
+Batch dict conventions (see ``repro.launch.specs`` for ShapeDtypeStruct forms):
+  train:  {"tokens": (B,S) i32, "labels": (B,S) i32, "loss_mask": (B,S) f32,
+           [vlm]  "patch_embeds": (B,P,D), "mrope_positions": (3,B,S),
+           [audio] "frames": (B,S_enc,D)}
+  prefill: {"tokens": (B,S), [extras as above]} -> (last_logits, cache)
+  decode:  {"token": (B,1), "positions": (B,1) or (3,B,1)} + cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.common import Params, apply_norm, with_sharding_constraint
+
+Batch = Dict[str, jax.Array]
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    return tf.init_params(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Input assembly (text / vlm / audio)
+# ---------------------------------------------------------------------------
+def _assemble(params: Params, batch: Batch, cfg: ModelConfig):
+    """Returns (x, positions, enc_out, enc_positions).
+
+    VLM archs: sequence = [patch embeds | text tokens]; caller guarantees
+    P + len(tokens) == S and provides full-length mrope positions.
+    """
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    enc_out = enc_positions = None
+    if cfg.is_encoder_decoder:
+        enc_out, enc_positions = tf.run_encoder(params, batch["frames"], cfg)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S_text)[None], (B, S_text))
+    if cfg.vision.enabled and cfg.vision.kind == "patches":
+        patches = batch["patch_embeds"].astype(params["embed"].dtype)
+        x_text = tf.embed_tokens(params, tokens, cfg,
+                                 positions=None if cfg.rope_type != "learned"
+                                 else positions)
+        x = jnp.concatenate([patches, x_text], axis=1)
+        positions = batch["mrope_positions"] if cfg.rope_type == "mrope" else \
+            jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+    else:
+        x = tf.embed_tokens(params, tokens, cfg, positions=positions)
+        if cfg.rope_type == "mrope":
+            from repro.models.rope import text_mrope_positions
+            positions = batch.get("mrope_positions",
+                                  text_mrope_positions(positions))
+    return x, positions, enc_out, enc_positions
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+def train_loss(params: Params, batch: Batch, cfg: ModelConfig, *,
+               use_kernels: bool = False, remat: str = "dots"
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, positions, enc_out, enc_pos = _assemble(params, batch, cfg)
+    h, _, aux = tf.forward_stack(
+        params, x, positions, cfg, causal=True, use_kernels=use_kernels,
+        remat=remat, enc_out=enc_out, enc_positions=enc_pos)
+    h = apply_norm(h, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = tf.lm_head(params, h, cfg)
+    logits = with_sharding_constraint(
+        logits, (("pod", "data"), None, "model"))
+
+    labels = batch["labels"]
+    loss_mask = batch.get("loss_mask")
+    S_out = logits.shape[1]
+    if labels.shape[1] != S_out:  # vlm: patches prepended — logits for text tail
+        pad = S_out - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)))
+        if loss_mask is None:
+            loss_mask = jnp.ones_like(labels, jnp.float32)
+        loss_mask = jnp.pad(loss_mask.astype(jnp.float32), ((0, 0), (pad, 0)))
+    if loss_mask is None:
+        loss_mask = jnp.ones_like(labels, jnp.float32)
+    loss_mask = loss_mask.astype(jnp.float32)
+    # mask padded-vocab rows implicitly: labels always < true vocab.
+    logf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logf, axis=-1)
+    # gold logit via one-hot contraction: take_along_axis over the
+    # model-sharded vocab dim would force a full-vocab logits all-gather
+    # (≈40 GB/step at qwen2-vl train scale — §Perf iteration 5); the einsum
+    # contracts the sharded dim locally and psums a (B, S) scalar field.
+    onehot = jax.nn.one_hot(labels, logf.shape[-1], dtype=logf.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logf, onehot)
+    nll = (logz - gold) * loss_mask
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    loss = nll.sum() / denom + aux
+    metrics = {"loss": loss, "nll": nll.sum() / denom, "aux": aux,
+               "tokens": loss_mask.sum()}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def prefill(params: Params, batch: Batch, cfg: ModelConfig, *,
+            cache_len: int, use_kernels: bool = False,
+            cache_dtype=jnp.bfloat16,
+            last_index: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, tf.Cache]:
+    """Process the prompt; return (last-position logits, primed cache).
+
+    ``last_index``: per-row (B,) position of the last real token (for padded
+    batched prefill); defaults to the final position.
+    """
+    x, positions, enc_out, enc_pos = _assemble(params, batch, cfg)
+    B, S = x.shape[:2]
+    h, kvs, _ = tf.forward_stack(
+        params, x, positions, cfg, causal=True, use_kernels=use_kernels,
+        collect_cache=True, enc_out=enc_out, enc_positions=enc_pos)
+    if last_index is not None:
+        h = h[jnp.arange(B), last_index][:, None]
+    else:
+        h = h[:, -1:]
+    h = apply_norm(h, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = tf.lm_head(params, h, cfg)
+
+    cache = tf.init_cache(cfg, B, cache_len, dtype=cache_dtype)
+    spec = tf.unit_spec(cfg)
+    for j, (kind, _, _) in enumerate(spec):
+        if kind == "attn":
+            k, v = kvs[j]  # (nu, B, S, Hkv, D)
+            entry = cache["units"][j]
+            if "k_scale" in entry:     # int8-quantized cache
+                from repro.models import kvquant
+                kq, ks = kvquant.quantize(k)
+                vq, vs = kvquant.quantize(v)
+                for name, val in (("k", kq), ("v", vq)):
+                    entry[name] = jax.lax.dynamic_update_slice_in_dim(
+                        entry[name], val, 0, axis=2)
+                for name, val in (("k_scale", ks), ("v_scale", vs)):
+                    entry[name] = jax.lax.dynamic_update_slice_in_dim(
+                        entry[name], val, 0, axis=2)
+                continue
+            entry["k"] = jax.lax.dynamic_update_slice_in_dim(
+                entry["k"], k.astype(cache_dtype), 0, axis=2)
+            entry["v"] = jax.lax.dynamic_update_slice_in_dim(
+                entry["v"], v.astype(cache_dtype), 0, axis=2)
+        else:
+            ssm, conv_tail = kvs[j]
+            cache["units"][j]["ssm"] = ssm
+            cache["units"][j]["conv"] = conv_tail.astype(cache_dtype)
+    cache["index"] = (jnp.broadcast_to(jnp.asarray(last_index, jnp.int32),
+                                       (B,)) + 1 if last_index is not None
+                      else jnp.full((B,), S, jnp.int32))
+    if cfg.is_encoder_decoder:
+        cache["cross_k"], cache["cross_v"] = _cross_kv(params, enc_out, cfg,
+                                                       cache_dtype)
+    return logits, cache
+
+
+def _cross_kv(params: Params, enc_out: jax.Array, cfg: ModelConfig, dtype):
+    """Precompute cross-attention K/V for all decoder layers."""
+    from repro.models.attention import _project_qkv
+    ks, vs = [], []
+    spec = tf.unit_spec(cfg)
+    nu = tf.num_units(cfg)
+    for j in range(len(spec)):
+        lp = params["units"][j]
+        def one(lp_i):
+            _, k, v = _project_qkv(lp_i["cross"], enc_out, enc_out, cfg)
+            return k, v
+        k, v = jax.vmap(one)(lp)  # (nu, B, S_enc, Hkv, D)
+        ks.append(k)
+        vs.append(v)
+    # interleave unit positions back to layer order: (nu*ul, ...)
+    k = jnp.stack(ks, axis=1).reshape((-1,) + ks[0].shape[1:])
+    v = jnp.stack(vs, axis=1).reshape((-1,) + vs[0].shape[1:])
+    return k.astype(dtype), v.astype(dtype)
+
+
+def decode_step(params: Params, token: jax.Array, positions, cache: tf.Cache,
+                cfg: ModelConfig, *, use_kernels: bool = False
+                ) -> Tuple[jax.Array, tf.Cache]:
+    """token: (B, 1). Returns (logits (B,1,V), updated cache)."""
+    x = tf.embed_tokens(
+        params, token, cfg,
+        positions=positions if cfg.rope_type == "learned" else None)
+    if cfg.rope_type == "mrope" and positions.ndim == 2:
+        from repro.models.rope import text_mrope_positions
+        positions = text_mrope_positions(positions)
+    x, new_cache = tf.decode_stack(params, x, positions, cache, cfg,
+                                   use_kernels=use_kernels)
+    x = apply_norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = tf.lm_head(params, x, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding backbone (semantic search encoders: e5-mistral / VLM2Vec stand-ins)
+# ---------------------------------------------------------------------------
+def encode_pooled(params: Params, tokens: jax.Array, mask: jax.Array,
+                  cfg: ModelConfig, *, use_kernels: bool = False) -> jax.Array:
+    """Mean-pooled L2-normalized sentence embedding. tokens: (B,S)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = tf.embed_tokens(params, tokens, cfg, positions=positions)
+    if cfg.rope_type == "mrope":
+        from repro.models.rope import text_mrope_positions
+        positions = text_mrope_positions(positions)
+    h, _, _ = tf.forward_stack(params, x, positions, cfg, causal=True,
+                               use_kernels=use_kernels)
+    h = apply_norm(h, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    m = mask.astype(jnp.float32)[..., None]
+    pooled = (h.astype(jnp.float32) * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+    return pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)

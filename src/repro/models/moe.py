@@ -1,0 +1,109 @@
+"""Mixture-of-Experts with sort-based token dispatch (static shapes, EP-shardable).
+
+TPU-native dispatch: instead of the O(T·E·C) one-hot dispatch tensor, token→expert
+assignments are sorted by expert id; each token's slot within its expert is its
+rank among same-expert assignments (capacity-dropped beyond C). Tokens are then
+gathered into a dense (E, C, d_model) buffer, run through a batched expert einsum
+(sharded over E on the `model` axis — expert parallelism), and scatter-added back
+with their gate weights. The resharding T→E induces the all-to-all the paper's EP
+pattern requires; XLA emits it from the sharding annotations.
+
+Router runs in f32; aux load-balancing loss (Switch-style) is returned for train.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, activation, dense_init, dt
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(num_tokens * m.experts_per_token * m.capacity_factor
+              / m.num_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    pd = dt(cfg.param_dtype)
+    m, d = cfg.moe, cfg.d_model
+    ks = jax.random.split(key, 5)
+    e, f = m.num_experts, m.d_ff_expert
+
+    def expert_stack(k, shape):
+        return dense_init(k, shape, pd, in_axis=1)
+
+    p: Params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": expert_stack(ks[1], (e, d, f)),
+        "w_up": expert_stack(ks[2], (e, d, f)),
+        "w_down": expert_stack(ks[3], (e, f, d)),
+    }
+    if m.shared_expert_d_ff:
+        from repro.models.mlp import init_mlp
+        p["shared"] = init_mlp(ks[4], cfg, m.shared_expert_d_ff)
+    return p
+
+
+def moe_layer(p: Params, x: jax.Array, cfg: ModelConfig,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.experts_per_token
+    C = moe_capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"])                          # (T, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)           # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_expert = expert_ids.reshape(-1)                      # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # rank within expert = global rank - first rank of this expert
+    counts = jnp.bincount(se, length=E)                       # (E,)
+    starts = jnp.cumsum(counts) - counts                      # (E,)
+    rank = jnp.arange(T * K) - starts[se]                     # (T*K,)
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)              # overflow -> dropped
+
+    # gather tokens into (E*C, D) buffer (+1 padding row)
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(xt[st])
+    expert_in = buf[: E * C].reshape(E, C, D)
+
+    # ---- expert FFN (sharded over E) ---------------------------------------
+    act = activation(cfg.mlp_activation)
+    h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])   # (E, C, D)
+
+    # ---- combine -------------------------------------------------------------
+    flat_out = expert_out.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None], flat_out[jnp.minimum(slot, E * C - 1)],
+                         0.0)
+    weighted = gathered.astype(jnp.float32) * sg[:, None]
+    out = jnp.zeros((T, D), jnp.float32).at[st].add(
+        jnp.where(keep[:, None], weighted, 0.0))
+    out = out.astype(x.dtype).reshape(B, S, D)
+
+    if m.shared_expert_d_ff:
+        from repro.models.mlp import mlp
+        out = out + mlp(p["shared"], x, cfg)
+
+    # Switch-style load-balancing aux loss.
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[flat_expert].add(1.0) / (T * K)
+    aux = (me * ce).sum() * E * m.router_aux_loss
+    return out, aux

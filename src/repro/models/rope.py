@@ -1,0 +1,71 @@
+"""Rotary position embeddings: standard RoPE, partial RoPE (StableLM),
+M-RoPE (Qwen2-VL 3D multimodal rotary), learned absolute, and NoPE.
+
+Positions are supplied by the caller:
+  - rope / learned: ``positions`` of shape (B, S) int32
+  - mrope: ``positions`` of shape (3, B, S) int32 — (temporal, height, width)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _rope_angles(positions: jax.Array, rot_dim: int, theta: float) -> jax.Array:
+    """(..., S) int32 -> (..., S, rot_dim/2) f32 angles."""
+    half = rot_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (x interleaved as [first half | second half])."""
+    half = angles.shape[-1]
+    x1, x2 = x[..., :half], x[..., half: 2 * half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1, r2, x[..., 2 * half:]], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float,
+               rope_pct: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S). Rotates the first rope_pct of D."""
+    d = x.shape[-1]
+    rot_dim = int(d * rope_pct)
+    rot_dim -= rot_dim % 2
+    angles = _rope_angles(positions, rot_dim, theta)        # (B, S, rot/2)
+    angles = angles[:, :, None, :]                          # (B, S, 1, rot/2)
+    xf = x.astype(jnp.float32)
+    return _rotate(xf, angles).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, *, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL M-RoPE. x: (B, S, H, D); positions3: (3, B, S).
+
+    The D/2 frequency slots are partitioned into (t, h, w) sections; each section
+    takes its position id from the corresponding axis. Text tokens use identical
+    t/h/w ids, recovering standard RoPE.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section id per frequency slot: 0,0,..,1,1,..,2,2,..
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])
+    # pos per slot: select the axis (t/h/w) for each frequency slot.
+    pos = positions3.astype(jnp.float32)[sec_id]               # (half, B, S)
+    pos = pos.transpose(1, 2, 0)                               # (B, S, half)
+    angles = pos * freqs                                       # (B, S, half)
+    angles = angles[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), angles).astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Expand (B, S) text positions to degenerate (3, B, S) M-RoPE ids."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

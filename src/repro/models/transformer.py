@@ -1,0 +1,372 @@
+"""Unified transformer stack for every assigned architecture.
+
+The stack is a scan over *repeating units* ("blocks"): the unit length is
+``lcm(len(layer_pattern), moe.period)`` so heterogeneous stacks (jamba's
+m m m m a m m m pattern, llama4's dense/MoE alternation) still compile as a
+single ``lax.scan`` with stacked parameters — compile time is O(unit), not
+O(num_layers).
+
+Within a unit, position ``j`` carries its own parameter tree:
+    pre_norm → (attention | mamba) → residual → post_norm → (mlp | moe) → residual
+plus an optional cross-attention sub-block (encoder-decoder).
+
+Caches mirror the unit structure: ``cache["units"][j]`` holds either
+``{"k","v"}`` arrays of shape (num_units, B, S_max, H_kv, D) or
+``{"ssm","conv"}`` states for mamba positions.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models.common import (Params, apply_norm, dt, embed_init, init_norm,
+                                 with_sharding_constraint)
+
+Cache = Dict[str, Any]
+
+
+def _scan_unroll() -> bool:
+    """Dry-run knob: fully unroll the unit scan so the compiled HLO carries
+    every layer explicitly (XLA's cost analysis does not multiply while-loop
+    bodies by trip count). Training/serving keep the rolled scan."""
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Stack structure
+# ---------------------------------------------------------------------------
+def unit_len(cfg: ModelConfig) -> int:
+    period = cfg.moe.period if cfg.moe.enabled else 1
+    return int(math.lcm(len(cfg.layer_pattern), period))
+
+
+def num_units(cfg: ModelConfig) -> int:
+    ul = unit_len(cfg)
+    assert cfg.num_layers % ul == 0, (cfg.num_layers, ul)
+    return cfg.num_layers // ul
+
+
+def unit_spec(cfg: ModelConfig):
+    """[(kind, is_moe, has_mlp)] for each position in the repeating unit."""
+    ul = unit_len(cfg)
+    kinds = cfg.layer_kinds()[:ul]
+    out = []
+    for j, kind in enumerate(kinds):
+        is_moe = cfg.is_moe_layer(j)
+        ff = cfg.moe.dense_d_ff or cfg.d_ff
+        has_mlp = (not is_moe) and ff > 0
+        out.append((kind, is_moe, has_mlp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str, is_moe: bool, has_mlp: bool,
+                *, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"pre_norm": init_norm(cfg.d_model, cfg.norm_type,
+                                       dt(cfg.param_dtype))}
+    if kind == ATTN:
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+    else:
+        p["mamba"] = mamba_lib.init_mamba(ks[0], cfg)
+    if cross:
+        p["cross_norm"] = init_norm(cfg.d_model, cfg.norm_type,
+                                    dt(cfg.param_dtype))
+        p["cross"] = attn_lib.init_attention(ks[1], cfg, cross=True)
+    if is_moe:
+        p["post_norm"] = init_norm(cfg.d_model, cfg.norm_type,
+                                   dt(cfg.param_dtype))
+        p["moe"] = moe_lib.init_moe(ks[2], cfg)
+    elif has_mlp:
+        p["post_norm"] = init_norm(cfg.d_model, cfg.norm_type,
+                                   dt(cfg.param_dtype))
+        ff = cfg.moe.dense_d_ff or cfg.d_ff
+        p["mlp"] = mlp_lib.init_mlp(ks[3], cfg, ff)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    pd = dt(cfg.param_dtype)
+    nu, spec = num_units(cfg), unit_spec(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], (cfg.padded_vocab_size, cfg.d_model), pd),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type, pd),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(
+            keys[1], (cfg.d_model, cfg.padded_vocab_size), pd)
+    if cfg.rope_type == "learned":
+        params["pos_embed"] = embed_init(
+            keys[2], (cfg.max_position_embeddings, cfg.d_model), pd)
+
+    def stack_init(base_key, j, kind, is_moe, has_mlp, cross):
+        ks = jax.random.split(jax.random.fold_in(base_key, j), nu)
+        return jax.vmap(lambda k: _init_layer(k, cfg, kind, is_moe, has_mlp,
+                                              cross=cross))(ks)
+
+    cross = cfg.is_encoder_decoder
+    params["units"] = [
+        stack_init(keys[3], j, kind, is_moe, has_mlp, cross)
+        for j, (kind, is_moe, has_mlp) in enumerate(spec)
+    ]
+
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, ATTN, False, True))(enc_keys)
+        params["enc_pos_embed"] = embed_init(
+            keys[5], (cfg.encoder_seq_len, cfg.d_model), pd)
+        params["enc_final_norm"] = init_norm(cfg.d_model, cfg.norm_type, pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.rope_type == "learned":
+        assert positions is not None
+        x = x + jnp.take(params["pos_embed"], positions, axis=0)
+    return x
+
+
+def lm_head(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["embed"])
+    return jnp.einsum("...d,dv->...v", x, params["unembed"])
+
+
+# ---------------------------------------------------------------------------
+# Unit application — full sequence
+# ---------------------------------------------------------------------------
+def _apply_layer_full(lp: Params, x, positions, cfg: ModelConfig, kind: str,
+                      *, causal: bool, use_kernels: bool,
+                      enc_out=None, enc_positions=None):
+    """One layer on a full sequence. Returns (x, kv_or_state, aux_loss)."""
+    h = apply_norm(x, lp["pre_norm"], cfg.norm_type, cfg.norm_eps)
+    if kind == ATTN:
+        out, kv = attn_lib.attention_layer(
+            lp["attn"], h, positions, cfg, causal=causal,
+            use_kernels=use_kernels)
+    else:
+        out, kv = mamba_lib.mamba_layer(lp["mamba"], h, cfg,
+                                        use_kernels=use_kernels)
+    x = x + out
+    if "cross" in lp and enc_out is not None:
+        h = apply_norm(x, lp["cross_norm"], cfg.norm_type, cfg.norm_eps)
+        out, _ = attn_lib.attention_layer(
+            lp["cross"], h, positions, cfg, causal=False,
+            use_kernels=use_kernels, xkv=enc_out, kv_positions=enc_positions)
+        x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        h = apply_norm(x, lp["post_norm"], cfg.norm_type, cfg.norm_eps)
+        from repro.models import moe_ep
+        if moe_ep.ep_enabled(cfg, h.shape):
+            am = jax.sharding.get_abstract_mesh()
+            daxes = tuple(a for a in ("pod", "data") if a in am.axis_names)
+            out, aux = moe_ep.moe_layer_ep(lp["moe"], h, cfg, am,
+                                           data_axes=daxes or ("data",))
+        else:
+            out, aux = moe_lib.moe_layer(lp["moe"], h, cfg)
+        x = x + out
+    elif "mlp" in lp:
+        h = apply_norm(x, lp["post_norm"], cfg.norm_type, cfg.norm_eps)
+        x = x + mlp_lib.mlp(lp["mlp"], h, cfg)
+    return x, kv, aux
+
+
+def forward_stack(params: Params, x: jax.Array, positions, cfg: ModelConfig, *,
+                  causal: bool = True, use_kernels: bool = False,
+                  collect_cache: bool = False, remat: str = "none",
+                  enc_out=None, enc_positions=None):
+    """Run the full unit-scan. Returns (hidden, cache_entries, total_aux)."""
+    spec = unit_spec(cfg)
+
+    def unit_body(carry, unit_params):
+        x = carry
+        x = with_sharding_constraint(x, (("pod", "data"), None, None))
+        kvs, auxes = [], []
+        for j, (kind, _, _) in enumerate(spec):
+            x, kv, aux = _apply_layer_full(
+                unit_params[j],
+                x, positions, cfg, kind, causal=causal,
+                use_kernels=use_kernels,
+                enc_out=enc_out, enc_positions=enc_positions)
+            kvs.append(kv if collect_cache else None)
+            auxes.append(aux)
+        return x, (kvs, jnp.stack(auxes).sum())
+
+    body = unit_body
+    if remat == "full":
+        body = jax.checkpoint(unit_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            unit_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    x, (kvs, aux) = jax.lax.scan(body, x, params["units"],
+                                 unroll=_scan_unroll())
+    return x, kvs, aux.sum()
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+def run_encoder(params: Params, frames: jax.Array, cfg: ModelConfig, *,
+                use_kernels: bool = False):
+    """frames: (B, S_enc, d_model) precomputed frontend embeddings."""
+    B, S = frames.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = frames + jnp.take(params["enc_pos_embed"], pos, axis=0)
+
+    def body(carry, lp):
+        h, _, _ = _apply_layer_full(lp, carry, pos, cfg, ATTN, causal=False,
+                                    use_kernels=use_kernels)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        unroll=_scan_unroll())
+    return apply_norm(x, params["enc_final_norm"], cfg.norm_type,
+                      cfg.norm_eps), pos
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Cache:
+    from repro.models import kvquant
+    nu, spec = num_units(cfg), unit_spec(cfg)
+    quant = kvquant.enabled() and dtype == jnp.bfloat16
+    units = []
+    for kind, _, _ in spec:
+        if kind == ATTN:
+            shape = (nu, batch, max_seq, cfg.num_kv_heads_eff, cfg.head_dim)
+            if quant:
+                units.append({"k": jnp.zeros(shape, jnp.int8),
+                              "v": jnp.zeros(shape, jnp.int8),
+                              "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                              "v_scale": jnp.zeros(shape[:-1], jnp.float32)})
+                continue
+            units.append({"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)})
+        else:
+            s = cfg.ssm
+            H = s.nheads(cfg.d_model)
+            conv_dim = s.d_inner(cfg.d_model) + 2 * s.ngroups * s.d_state
+            units.append({
+                "ssm": jnp.zeros((nu, batch, H, s.head_dim, s.d_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((nu, batch, s.conv_width - 1, conv_dim),
+                                  dtype),
+            })
+    cache: Cache = {"units": units,
+                    "index": jnp.zeros((batch,), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        shape = (cfg.num_layers, batch, cfg.encoder_seq_len, cfg.num_kv_heads_eff,
+                 cfg.head_dim)
+        cache["cross_k"] = jnp.zeros(shape, dtype)
+        cache["cross_v"] = jnp.zeros(shape, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Unit application — single-token decode
+# ---------------------------------------------------------------------------
+def _apply_layer_decode(lp: Params, x, positions, cache_entry, cache_index,
+                        cfg: ModelConfig, kind: str, *, use_kernels: bool,
+                        cross_kv=None):
+    h = apply_norm(x, lp["pre_norm"], cfg.norm_type, cfg.norm_eps)
+    if kind == ATTN:
+        if "k_scale" in cache_entry:   # int8-quantized cache
+            out, k_new, v_new, ks, vs = attn_lib.attention_decode_layer(
+                lp["attn"], h, positions, cache_entry["k"],
+                cache_entry["v"], cache_index, cfg,
+                use_kernels=use_kernels,
+                k_scale=cache_entry["k_scale"],
+                v_scale=cache_entry["v_scale"])
+            new_entry = {"k": k_new, "v": v_new, "k_scale": ks,
+                         "v_scale": vs}
+        else:
+            out, k_new, v_new = attn_lib.attention_decode_layer(
+                lp["attn"], h, positions, cache_entry["k"],
+                cache_entry["v"], cache_index, cfg,
+                use_kernels=use_kernels)
+            new_entry = {"k": k_new, "v": v_new}
+    else:
+        out, ssm, conv = mamba_lib.mamba_decode_layer(
+            lp["mamba"], h, cache_entry["ssm"], cache_entry["conv"], cfg)
+        new_entry = {"ssm": ssm, "conv": conv}
+    x = x + out
+    if "cross" in lp and cross_kv is not None:
+        ck, cv = cross_kv
+        h = apply_norm(x, lp["cross_norm"], cfg.norm_type, cfg.norm_eps)
+        B = h.shape[0]
+        q, _, _ = attn_lib._project_qkv(lp["cross"], h, h, cfg)
+        valid = jnp.ones((B, ck.shape[1]), bool)
+        o = attn_lib.decode_attention_jnp(q, ck, cv, valid, cfg)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, cfg.q_dim),
+                           lp["cross"]["wo"])
+    if "moe" in lp:
+        h = apply_norm(x, lp["post_norm"], cfg.norm_type, cfg.norm_eps)
+        out, _ = moe_lib.moe_layer(lp["moe"], h, cfg)
+        x = x + out
+    elif "mlp" in lp:
+        h = apply_norm(x, lp["post_norm"], cfg.norm_type, cfg.norm_eps)
+        x = x + mlp_lib.mlp(lp["mlp"], h, cfg)
+    return x, new_entry
+
+
+def decode_stack(params: Params, x: jax.Array, positions, cache: Cache,
+                 cfg: ModelConfig, *, use_kernels: bool = False):
+    """One-token decode through all units. Returns (hidden, new_cache)."""
+    spec = unit_spec(cfg)
+    ul = len(spec)
+    cache_index = cache["index"]
+    has_cross = cfg.is_encoder_decoder
+
+    def unit_body(carry, xs):
+        x, u = carry
+        unit_params, unit_cache = xs[0], xs[1]
+        cross = xs[2] if has_cross else None
+        new_entries = []
+        for j, (kind, _, _) in enumerate(spec):
+            ckv = None
+            if has_cross:
+                ckv = (cross[0][j], cross[1][j])
+            x, entry = _apply_layer_decode(
+                unit_params[j], x, positions, unit_cache[j], cache_index,
+                cfg, kind, use_kernels=use_kernels, cross_kv=ckv)
+            new_entries.append(entry)
+        return (x, u + 1), new_entries
+
+    if has_cross:
+        nu = num_units(cfg)
+        ck = cache["cross_k"].reshape((nu, ul) + cache["cross_k"].shape[1:])
+        cv = cache["cross_v"].reshape((nu, ul) + cache["cross_v"].shape[1:])
+        xs = (params["units"], cache["units"], (ck, cv))
+    else:
+        xs = (params["units"], cache["units"])
+    (x, _), new_units = jax.lax.scan(unit_body, (x, 0), xs,
+                                     unroll=_scan_unroll())
+    new_cache = dict(cache)
+    new_cache["units"] = new_units
+    new_cache["index"] = cache_index + 1
+    return x, new_cache

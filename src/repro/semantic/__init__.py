@@ -1,0 +1,4 @@
+from repro.semantic.embed import BackboneEmbedder, OracleEmbedder  # noqa: F401
+from repro.semantic.search import (topk_similarity,  # noqa: F401
+                                   sharded_topk_similarity)
+from repro.semantic.tokenizer import HashTokenizer  # noqa: F401

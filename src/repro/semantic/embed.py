@@ -1,0 +1,76 @@
+"""Entity/text embedders — the e5-mistral / VLM2Vec stand-ins.
+
+Two implementations behind one interface:
+  * ``BackboneEmbedder`` — a real JAX transformer (any registry arch, usually a
+    reduced config) mean-pooled + L2-normalized, jit-compiled. This is what the
+    dry-run and benchmarks exercise at full scale.
+  * ``OracleEmbedder``  — deterministic pseudo-random unit vectors keyed by the
+    *canonical description string*, with controllable intra-class noise. Gives
+    exact, verifiable retrieval in tests (same text ⇒ cos=1) without trained
+    weights.
+"""
+from __future__ import annotations
+
+import hashlib
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.semantic.tokenizer import HashTokenizer
+
+
+class OracleEmbedder:
+    def __init__(self, dim: int = 64, noise: float = 0.0, seed: int = 0):
+        self.dim, self.noise, self.seed = dim, noise, seed
+
+    def _base(self, text: str) -> np.ndarray:
+        h = hashlib.blake2b(f"{self.seed}:{text.strip().lower()}".encode(),
+                            digest_size=8).digest()
+        rng = np.random.default_rng(int.from_bytes(h, "little"))
+        v = rng.standard_normal(self.dim)
+        return v / np.linalg.norm(v)
+
+    def embed_texts(self, texts: List[str], rng: Optional[np.random.Generator]
+                    = None) -> np.ndarray:
+        out = np.stack([self._base(t) for t in texts])
+        if self.noise and rng is not None:
+            out = out + self.noise * rng.standard_normal(out.shape)
+            out = out / np.linalg.norm(out, axis=-1, keepdims=True)
+        return out.astype(np.float32)
+
+    def embed_for_image(self, texts: List[str]) -> np.ndarray:
+        """Query-side embeddings into the image (eie / VLM2Vec) space."""
+        return self.embed_texts([t + " appearance" for t in texts])
+
+
+class BackboneEmbedder:
+    """Mean-pooled transformer encoder over hash-tokenized text."""
+
+    def __init__(self, cfg: ModelConfig, params=None, key=None,
+                 max_len: int = 32, use_kernels: bool = False):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.tokenizer = HashTokenizer(cfg.vocab_size)
+        if params is None:
+            params = M.init_params(key or jax.random.PRNGKey(7), cfg)
+        self.params = params
+        self._encode = jax.jit(partial(M.encode_pooled, cfg=cfg,
+                                       use_kernels=use_kernels))
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.d_model
+
+    def embed_texts(self, texts: List[str], rng=None) -> np.ndarray:
+        ids, mask = self.tokenizer.encode_batch(texts, self.max_len)
+        out = self._encode(self.params, jnp.asarray(ids), jnp.asarray(mask))
+        return np.asarray(out, np.float32)
+
+    def embed_for_image(self, texts: List[str]) -> np.ndarray:
+        """Query-side embeddings into the image (eie / VLM2Vec) space."""
+        return self.embed_texts([t + " appearance" for t in texts])

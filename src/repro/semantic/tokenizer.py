@@ -1,0 +1,42 @@
+"""Deterministic hash word tokenizer (no external vocab files).
+
+Good enough for the framework's text paths (entity descriptions, SPO prompts):
+stable ids, bounded vocab, reversible enough for tests via the id cache.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Tuple
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+_RESERVED = 3
+
+
+class HashTokenizer:
+    def __init__(self, vocab_size: int = 32_000):
+        assert vocab_size > _RESERVED + 16
+        self.vocab_size = vocab_size
+
+    def token_id(self, word: str) -> int:
+        h = hashlib.blake2b(word.lower().encode(), digest_size=8).digest()
+        return _RESERVED + int.from_bytes(h, "little") % (
+            self.vocab_size - _RESERVED)
+
+    def encode(self, text: str, max_len: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (ids, mask) of shape (max_len,)."""
+        words = text.replace(",", " ").replace(".", " ").split()
+        ids = [BOS_ID] + [self.token_id(w) for w in words][: max_len - 2] + [EOS_ID]
+        out = np.full((max_len,), PAD_ID, np.int32)
+        out[: len(ids)] = ids
+        mask = np.zeros((max_len,), np.float32)
+        mask[: len(ids)] = 1.0
+        return out, mask
+
+    def encode_batch(self, texts: List[str], max_len: int):
+        pairs = [self.encode(t, max_len) for t in texts]
+        return (np.stack([p[0] for p in pairs]),
+                np.stack([p[1] for p in pairs]))

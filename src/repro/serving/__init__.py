@@ -1,0 +1,2 @@
+from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.scheduler import Scheduler, StragglerMitigator  # noqa: F401

@@ -1,0 +1,157 @@
+"""VLM serving engine: slot-based KV cache, batched prefill, fused decode.
+
+The LazyVLM refinement stage produces bursts of short verification requests;
+text serving produces longer generation requests. Both run through this
+engine: a fixed pool of ``max_batch`` cache slots, prefill admission in padded
+sub-batches, and one jitted decode program advancing every active slot per
+step (continuous batching — completed slots are freed and refilled without
+draining the batch).
+
+All programs are compiled once per (padded length) bucket; slot state lives in
+device arrays so the host loop only moves token ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # prompt ids
+    max_new_tokens: int = 16
+    eos_id: int = 2
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 512, prefill_bucket: int = 128,
+                 use_kernels: bool = False):
+        assert not cfg.is_encoder_decoder, "text/vlm serving only"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.prefill_bucket = prefill_bucket
+        self.use_kernels = use_kernels
+
+        self.cache = tf.init_cache(cfg, max_batch, max_seq)
+        # per-slot host state
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_len = np.zeros((max_batch,), np.int32)
+
+        self._decode = jax.jit(partial(self._decode_impl, cfg=cfg,
+                                       use_kernels=use_kernels))
+        self._prefill = jax.jit(
+            partial(self._prefill_impl, cfg=cfg, use_kernels=use_kernels),
+            static_argnames=("plen",))
+
+    # -- jitted programs --------------------------------------------------------
+    @staticmethod
+    def _prefill_impl(params, tokens, prompt_len, cfg, *, plen: int,
+                      use_kernels: bool):
+        """tokens: (b, plen) right-padded; prompt_len: (b,)."""
+        positions = jnp.broadcast_to(jnp.arange(plen)[None], tokens.shape)
+        logits, cache = M.prefill(params, {"tokens": tokens,
+                                           "positions": positions},
+                                  cfg, cache_len=plen,
+                                  use_kernels=use_kernels,
+                                  last_index=prompt_len - 1)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    @staticmethod
+    def _decode_impl(params, token, positions, cache, slot_active, cfg,
+                     use_kernels: bool):
+        logits, new_cache = M.decode_step(params, token, positions, cache, cfg,
+                                          use_kernels=use_kernels)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        # inactive slots keep caches untouched semantically (their outputs are
+        # ignored by the host; index advances globally — lengths tracked on host)
+        return next_tok, new_cache
+
+    # -- host-side continuous batching -------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit(self, reqs: List[Request]) -> List[int]:
+        """Prefill a padded sub-batch and install into free slots."""
+        if not reqs:
+            return []
+        slots = self._free_slots()[: len(reqs)]
+        reqs = reqs[: len(slots)]
+        plen = self.prefill_bucket
+        while plen < max(len(r.tokens) for r in reqs):
+            plen *= 2
+        toks = np.zeros((len(reqs), plen), np.int32)
+        lens = np.zeros((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : len(r.tokens)] = r.tokens
+            lens[i] = len(r.tokens)
+        next_tok, cache = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lens), plen=plen)
+        next_np = np.asarray(next_tok)
+        # install each prefilled row into its slot
+        for i, (r, s) in enumerate(zip(reqs, slots)):
+            self._install(s, cache, i, int(lens[i]))
+            self.slot_req[s] = r
+            self.slot_len[s] = lens[i]
+            r.out.append(int(next_np[i]))
+        return slots
+
+    def _install(self, slot: int, src_cache, src_row: int, length: int):
+        def copy(dst, src):
+            if dst.ndim >= 2 and src.shape[0] == dst.shape[0]:
+                # unit-stacked arrays: batch is axis 1
+                row = jax.lax.dynamic_slice_in_dim(src, src_row, 1, axis=1)
+                if dst.shape[2] != row.shape[2] and row.ndim >= 3:
+                    pad = dst.shape[2] - row.shape[2]
+                    row = jnp.pad(row, [(0, 0), (0, 0), (0, pad)]
+                                  + [(0, 0)] * (row.ndim - 3))
+                return jax.lax.dynamic_update_slice_in_dim(dst, row, slot,
+                                                           axis=1)
+            return dst
+
+        for j, unit in enumerate(self.cache["units"]):
+            for key in unit:
+                unit[key] = copy(unit[key], src_cache["units"][j][key])
+        # cache["index"] is per-slot and recomputed from slot_len each step
+
+    def step(self) -> int:
+        """Advance all active slots one token. Returns #active."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        token = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            token[i, 0] = self.slot_req[i].out[-1]
+        positions = jnp.asarray(self.slot_len.reshape(-1, 1))
+        # per-slot cache index: each row writes/attends at its own length
+        self.cache["index"] = jnp.asarray(self.slot_len)
+        next_tok, self.cache = self._decode(self.params, jnp.asarray(token),
+                                            positions, self.cache,
+                                            jnp.asarray(self.slot_len > 0))
+        next_np = np.asarray(next_tok)
+        for i in active:
+            r = self.slot_req[i]
+            t = int(next_np[i])
+            r.out.append(t)
+            self.slot_len[i] += 1
+            if (t == r.eos_id or len(r.out) >= r.max_new_tokens
+                    or self.slot_len[i] >= self.max_seq - 1):
+                r.done = True
+                self.slot_req[i] = None
+        return len(active)

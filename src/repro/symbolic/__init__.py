@@ -1,0 +1,2 @@
+from repro.symbolic.table import Table  # noqa: F401
+from repro.symbolic import ops  # noqa: F401

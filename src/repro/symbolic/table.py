@@ -1,0 +1,69 @@
+"""Fixed-capacity, validity-masked relational tables (the TPU 'SQL' substrate).
+
+XLA requires static shapes, so a table is a struct-of-arrays with a fixed row
+capacity and a boolean ``valid`` mask; relational operators preserve capacity
+and update the mask (or produce new tables with a declared output capacity and
+an overflow indicator — never a silent drop).
+
+This is the storage format of the paper's **Relationship Store**
+(columns vid, fid, sid, rl, oid) and the id-columns of the **Entity Store**.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Table:
+    """Struct-of-arrays int32 table with a validity mask."""
+
+    def __init__(self, columns: Dict[str, jax.Array], valid: jax.Array):
+        self.columns = dict(columns)
+        self.valid = valid
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, leaves):
+        return cls(dict(zip(names, leaves[:-1])), leaves[-1])
+
+    # -- basics ---------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[0]
+
+    def count(self) -> jax.Array:
+        return self.valid.sum()
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def with_valid(self, valid: jax.Array) -> "Table":
+        return Table(self.columns, valid)
+
+    @classmethod
+    def empty(cls, schema: Tuple[str, ...], capacity: int) -> "Table":
+        return cls({n: jnp.zeros((capacity,), jnp.int32) for n in schema},
+                   jnp.zeros((capacity,), bool))
+
+    @classmethod
+    def from_rows(cls, rows, schema: Tuple[str, ...], capacity: int) -> "Table":
+        """Host-side constructor from a list of dicts (ingest path)."""
+        import numpy as np
+        n = min(len(rows), capacity)
+        cols = {k: np.zeros((capacity,), np.int32) for k in schema}
+        for i, r in enumerate(rows[:capacity]):
+            for k in schema:
+                cols[k][i] = r[k]
+        valid = np.zeros((capacity,), bool)
+        valid[:n] = True
+        if len(rows) > capacity:
+            raise ValueError(f"ingest overflow: {len(rows)} rows > cap {capacity}")
+        return cls({k: jnp.asarray(v) for k, v in cols.items()},
+                   jnp.asarray(valid))

@@ -1,0 +1,3 @@
+from repro.training.optimizer import OptimizerConfig  # noqa: F401
+from repro.training.train_loop import make_train_step, make_eval_step  # noqa: F401
+from repro.training.checkpoint import CheckpointManager  # noqa: F401

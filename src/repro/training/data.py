@@ -1,0 +1,114 @@
+"""Data pipelines.
+
+``TokenPipeline`` — deterministic synthetic LM stream (seeded, reshardable:
+batch i is a pure function of (seed, i), so a restarted/rescaled job replays
+exactly) with background host prefetch overlapping step compute.
+
+``verification_dataset`` — (frame patches, prompt tokens, yes/no label)
+triples from the synthetic world: the supervised corpus for distilling the
+relationship-verification skill into the refinement VLM (examples/train_
+verifier.py). Balanced positives/negatives.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.semantic.tokenizer import HashTokenizer
+from repro.video.synth import PREDICATES, SyntheticWorld
+
+
+class TokenPipeline:
+    """Synthetic causal-LM batches with Zipf-ish marginals + copy structure."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0,
+                 prefetch: int = 2, batch_override: Optional[int] = None,
+                 placement=None):
+        self.cfg = cfg
+        self.seq = shape.seq_len
+        self.batch = batch_override or shape.global_batch
+        self.seed = seed
+        self.placement = placement
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._idx = 0
+        self._thread.start()
+
+    def _make(self, i: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ i)
+        v = self.cfg.vocab_size
+        # Zipf marginals + repeated spans (so the loss is learnable)
+        base = (rng.zipf(1.3, size=(self.batch, self.seq)) % (v - 8)) + 4
+        span = self.seq // 4
+        base[:, span: 2 * span] = base[:, :span]
+        tokens = base.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        mask = np.ones_like(tokens, np.float32)
+        mask[:, -1] = 0.0
+        return {"tokens": tokens, "labels": labels, "loss_mask": mask}
+
+    def _producer(self):
+        i = 0
+        while not self._stop.is_set():
+            batch = self._make(i)
+            try:
+                self._q.put((i, batch), timeout=1.0)
+                i += 1
+            except queue.Full:
+                continue
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        _, batch = self._q.get()
+        out = {k: jnp.asarray(vv) for k, vv in batch.items()}
+        if self.placement is not None:
+            out = {k: jax.device_put(vv, self.placement[k])
+                   for k, vv in out.items()}
+        return out
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def close(self):
+        self._stop.set()
+
+
+def verification_dataset(world: SyntheticWorld, cfg: ModelConfig, *,
+                         num_examples: int, prompt_len: int = 24,
+                         seed: int = 0):
+    """Balanced (tokens, patches, label) arrays for verifier distillation."""
+    tok = HashTokenizer(cfg.vocab_size)
+    P, D = cfg.vision.num_positions, cfg.vision.embed_dim
+    rng = np.random.default_rng(seed)
+    toks = np.zeros((num_examples, prompt_len), np.int32)
+    patches = np.zeros((num_examples, P, D), np.float32)
+    labels = np.zeros((num_examples,), np.int32)
+    wc = world.cfg
+    n = 0
+    while n < num_examples:
+        vid = int(rng.integers(wc.num_segments))
+        fid = int(rng.integers(wc.frames_per_segment))
+        objs = world.segments[vid]
+        a, b = rng.choice(len(objs), 2, replace=False)
+        rl = int(rng.integers(len(PREDICATES)))
+        truth = world.verify(vid, fid, objs[a].eid, rl, objs[b].eid)
+        # keep balanced
+        want_pos = (n % 2 == 0)
+        if truth != want_pos:
+            continue
+        prompt = (f"question is the {objs[a].description} {PREDICATES[rl]} "
+                  f"the {objs[b].description} answer")
+        ids, _ = tok.encode(prompt, prompt_len)
+        toks[n] = ids
+        patches[n] = world.frame_patches(vid, fid, P, D)
+        labels[n] = int(truth)
+        n += 1
+    yes, no = tok.token_id("yes"), tok.token_id("no")
+    return {"tokens": toks, "patches": patches, "labels": labels,
+            "yes_id": yes, "no_id": no}

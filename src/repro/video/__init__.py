@@ -1,0 +1,2 @@
+from repro.video.synth import SyntheticWorld, WorldConfig, PREDICATES  # noqa: F401
+from repro.video.ingest import ingest, ingest_incremental  # noqa: F401

@@ -1,0 +1,111 @@
+"""Video preprocessing pipeline (Section 2.2): segmentation → content
+extraction → stores.
+
+``ingest(world, embedder)`` plays the role of the offline pass: per segment,
+per frame, extract the (possibly noisy) scene graph, track entities, embed
+entity descriptions (text) and appearances (image), and build the Entity /
+Relationship stores. ``ingest_incremental`` demonstrates update-friendliness:
+new segments are appended without touching existing rows.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.stores import (PredicateVocab, VideoStores,
+                               build_entity_store, build_relationship_store,
+                               append_entities, append_relationships)
+from repro.video.synth import PREDICATES, SyntheticWorld
+
+
+def _collect_segment(world: SyntheticWorld, vid: int,
+                     rng: np.random.Generator):
+    cfg = world.cfg
+    descs = world.descriptions(vid)
+    ents = [(vid, eid) for eid in range(len(descs))]
+    rel_rows = []
+    for fid in range(cfg.frames_per_segment):
+        graph = (world.noisy_scene_graph(vid, fid, rng)
+                 if (cfg.drop_prob or cfg.spurious_prob)
+                 else world.scene_graph(vid, fid))
+        for sid, rl, oid in graph:
+            rel_rows.append((vid, fid, sid, rl, oid))
+    return ents, descs, rel_rows
+
+
+def ingest(world: SyntheticWorld, embedder, *,
+           segment_range: Optional[Tuple[int, int]] = None,
+           entity_capacity: Optional[int] = None,
+           rel_capacity: Optional[int] = None) -> VideoStores:
+    cfg = world.cfg
+    lo, hi = segment_range or (0, cfg.num_segments)
+    rng = np.random.default_rng(cfg.seed + 1234)
+
+    all_ents: List[Tuple[int, int]] = []
+    all_descs: List[str] = []
+    all_rels: List[Tuple[int, int, int, int, int]] = []
+    for vid in range(lo, hi):
+        ents, descs, rels = _collect_segment(world, vid, rng)
+        all_ents += ents
+        all_descs += descs
+        all_rels += rels
+
+    text_emb = embedder.embed_texts(all_descs, rng)
+    # image embedding: same embedding space, keyed by appearance (stub VLM2Vec)
+    img_emb = embedder.embed_texts([d + " appearance" for d in all_descs], rng)
+
+    vids = np.array([v for v, _ in all_ents], np.int32)
+    eids = np.array([e for _, e in all_ents], np.int32)
+    ent_cap = entity_capacity or _round_pow2(len(all_ents))
+    rel_cap = rel_capacity or _round_pow2(len(all_rels))
+    entities = build_entity_store(vids, eids, text_emb, img_emb, ent_cap)
+    rel_rows = (np.array(all_rels, np.int32) if all_rels
+                else np.zeros((0, 5), np.int32))
+    relationships = build_relationship_store(rel_rows, rel_cap)
+
+    pred_emb = embedder.embed_texts(PREDICATES)
+    desc_map = {(int(v), int(e)): d
+                for (v, e), d in zip(all_ents, all_descs)}
+    return VideoStores(
+        entities=entities,
+        relationships=relationships,
+        predicates=PredicateVocab(list(PREDICATES), pred_emb),
+        num_segments=cfg.num_segments,
+        frames_per_segment=cfg.frames_per_segment,
+        entity_desc=desc_map,
+    )
+
+
+def ingest_incremental(stores: VideoStores, world: SyntheticWorld,
+                       embedder, segment_range: Tuple[int, int]) -> VideoStores:
+    """Append new segments into spare store capacity (no reprocessing)."""
+    lo, hi = segment_range
+    rng = np.random.default_rng(world.cfg.seed + 9876 + lo)
+    all_ents, all_descs, all_rels = [], [], []
+    for vid in range(lo, hi):
+        ents, descs, rels = _collect_segment(world, vid, rng)
+        all_ents += ents
+        all_descs += descs
+        all_rels += rels
+    text_emb = embedder.embed_texts(all_descs, rng)
+    img_emb = embedder.embed_texts([d + " appearance" for d in all_descs], rng)
+    vids = np.array([v for v, _ in all_ents], np.int32)
+    eids = np.array([e for _, e in all_ents], np.int32)
+    entities = append_entities(stores.entities, vids, eids, text_emb, img_emb)
+    rels = append_relationships(
+        stores.relationships,
+        np.array(all_rels, np.int32) if all_rels else np.zeros((0, 5), np.int32))
+    desc_map = dict(stores.entity_desc)
+    for (v, e), d in zip(all_ents, all_descs):
+        desc_map[(int(v), int(e))] = d
+    return VideoStores(entities, rels, stores.predicates,
+                       max(stores.num_segments, hi),
+                       stores.frames_per_segment, desc_map)
+
+
+def _round_pow2(n: int) -> int:
+    cap = 64
+    while cap < n * 2:
+        cap *= 2
+    return cap

@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Every assigned arch: one forward/train step on CPU, asserting output shapes
+and no NaNs; then prefill(S) + decode(1) must equal the full (S+1) forward —
+the strongest cheap invariant of cache/state correctness across all five
+families (dense GQA / MoE / SSM / hybrid / enc-dec / VLM).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+
+
+def _batch_for(cfg, key, B, S):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks,
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    P = 0
+    if cfg.vision.enabled and cfg.vision.kind == "patches":
+        P = cfg.vision.num_positions
+        batch["patch_embeds"] = (jax.random.normal(
+            key, (B, P, cfg.d_model)) * 0.02).astype(jnp.bfloat16)
+        if cfg.rope_type == "mrope":
+            batch["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(S + P)[None, None], (3, B, S + P)).astype(jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = (jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model)) * 0.1
+        ).astype(jnp.bfloat16)
+    return batch, P
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, reduced_size=True)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch, _ = _batch_for(cfg, key, B=2, S=32)
+    loss, metrics = M.train_loss(params, batch, cfg, remat="none")
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert float(metrics["nll"]) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch, reduced_size=True)
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    B, S = 2, 33
+    batch, P = _batch_for(cfg, key, B, S + 1)
+    pre = {k: v for k, v in batch.items() if k not in ("labels", "loss_mask")}
+    pre_s = dict(pre)
+    pre_s["tokens"] = pre["tokens"][:, :S]
+    if "mrope_positions" in pre_s:
+        pre_s["mrope_positions"] = pre["mrope_positions"][:, :, : S + P]
+    full_logits, _ = M.prefill(params, pre, cfg, cache_len=S + P + 2,
+                               cache_dtype=jnp.float32)
+    _, cache = M.prefill(params, pre_s, cfg, cache_len=S + P + 2,
+                         cache_dtype=jnp.float32)
+    pos = jnp.full((B, 1), S + P, jnp.int32)
+    if cfg.rope_type == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, 1)).astype(jnp.int32)
+    dec_logits, _ = M.decode_step(params, batch["tokens"][:, S: S + 1], pos,
+                                  cache, cfg)
+    a = np.asarray(full_logits[:, -1], np.float32)
+    b = np.asarray(dec_logits[:, -1], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 2e-2, f"{arch}: rel err {err}"
+
+
+def test_param_counts_match_published():
+    """Analytic counts vs public model-card numbers (coarse ±10%)."""
+    expect = {
+        "qwen1.5-0.5b": 0.46e9, "stablelm-12b": 12.1e9, "qwen3-8b": 8.2e9,
+        "starcoder2-15b": 16e9, "qwen3-moe-235b-a22b": 235e9,
+        "llama4-maverick-400b-a17b": 400e9, "mamba2-130m": 0.13e9,
+        "qwen2-vl-72b": 72.7e9, "jamba-v0.1-52b": 52e9,
+    }
+    for arch, want in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.10, (arch, got, want)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert abs(cfg.active_param_count() - 22e9) / 22e9 < 0.10
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert abs(cfg.active_param_count() - 17e9) / 17e9 < 0.10
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "jamba-v0.1-52b"])
+def test_decode_with_int8_kv_cache(arch, monkeypatch):
+    """Quantized-cache decode must track the full forward within int8 error."""
+    monkeypatch.setenv("REPRO_KV_QUANT", "1")
+    cfg = get_config(arch, reduced_size=True)
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(key, cfg)
+    B, S = 2, 24
+    batch, P = _batch_for(cfg, key, B, S + 1)
+    pre = {k: v for k, v in batch.items() if k not in ("labels", "loss_mask")}
+    pre_s = dict(pre, tokens=pre["tokens"][:, :S])
+    monkeypatch.setenv("REPRO_KV_QUANT", "0")
+    full_logits, _ = M.prefill(params, pre, cfg, cache_len=S + 2,
+                               cache_dtype=jnp.float32)
+    monkeypatch.setenv("REPRO_KV_QUANT", "1")
+    _, cache = M.prefill(params, pre_s, cfg, cache_len=S + 2)
+    assert any("k_scale" in u for u in cache["units"])
+    pos = jnp.full((B, 1), S, jnp.int32)
+    dec_logits, _ = M.decode_step(params, batch["tokens"][:, S: S + 1], pos,
+                                  cache, cfg)
+    a = np.asarray(full_logits[:, -1], np.float32)
+    b = np.asarray(dec_logits[:, -1], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 6e-2, f"{arch}: int8-kv rel err {err}"

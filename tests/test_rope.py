@@ -1,0 +1,59 @@
+"""Mathematical properties of the rotary embeddings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rope import apply_mrope, apply_rope, text_mrope_positions
+
+
+def _rand(key, B, S, H, D):
+    return jax.random.normal(key, (B, S, H, D), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), pos0=st.integers(0, 500))
+def test_rope_preserves_norm(seed, pos0):
+    x = _rand(jax.random.PRNGKey(seed), 1, 4, 2, 32)
+    pos = jnp.arange(pos0, pos0 + 4)[None]
+    y = apply_rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), shift=st.integers(0, 300))
+def test_rope_relative_position_invariance(seed, shift):
+    """q·k after RoPE depends only on the position DIFFERENCE."""
+    key = jax.random.PRNGKey(seed)
+    q = _rand(key, 1, 1, 1, 64)
+    k = _rand(jax.random.fold_in(key, 1), 1, 1, 1, 64)
+    p1, p2 = 7, 19
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), theta=10_000.0)
+        kr = apply_rope(k, jnp.array([[pk]]), theta=10_000.0)
+        return float(jnp.sum(qr * kr))
+    np.testing.assert_allclose(dot_at(p1, p2), dot_at(p1 + shift, p2 + shift),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_partial_rope_rotates_prefix_only():
+    x = _rand(jax.random.PRNGKey(0), 1, 3, 2, 64)
+    pos = jnp.arange(1, 4)[None]
+    y = apply_rope(x, pos, theta=10_000.0, rope_pct=0.25)
+    # last 75% of head_dim untouched
+    np.testing.assert_array_equal(np.asarray(x[..., 16:]),
+                                  np.asarray(y[..., 16:]))
+    assert not np.allclose(np.asarray(x[..., :16]), np.asarray(y[..., :16]))
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Equal t/h/w position ids must reproduce standard RoPE."""
+    x = _rand(jax.random.PRNGKey(2), 2, 5, 2, 64)
+    pos = jnp.broadcast_to(jnp.arange(5)[None], (2, 5))
+    y_rope = apply_rope(x, pos, theta=1e6)
+    y_mrope = apply_mrope(x, text_mrope_positions(pos), theta=1e6,
+                          sections=(8, 12, 12))
+    np.testing.assert_allclose(np.asarray(y_rope), np.asarray(y_mrope),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,67 @@
+"""Semantic layer: tokenizer, embedders, top-k search (incl. sharded path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.semantic import (BackboneEmbedder, HashTokenizer, OracleEmbedder,
+                            sharded_topk_similarity, topk_similarity)
+from repro.configs import get_config
+
+
+def test_tokenizer_deterministic_and_bounded():
+    tok = HashTokenizer(1000)
+    a, ma = tok.encode("man with red backpack", 16)
+    b, mb = tok.encode("man with red backpack", 16)
+    np.testing.assert_array_equal(a, b)
+    assert a.max() < 1000 and a.min() >= 0
+    assert ma.sum() == 6  # BOS + 4 words + EOS
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(alphabet="abcdefgh ", min_size=0, max_size=40))
+def test_tokenizer_total(text):
+    tok = HashTokenizer(500)
+    ids, mask = tok.encode(text, 12)
+    assert ids.shape == (12,) and mask.shape == (12,)
+    assert (ids < 500).all()
+
+
+def test_oracle_embedder_identity_and_separation():
+    emb = OracleEmbedder(dim=32)
+    e = emb.embed_texts(["man in red", "man in red", "bicycle"])
+    assert np.dot(e[0], e[1]) > 0.999
+    assert abs(np.dot(e[0], e[2])) < 0.7
+    assert np.allclose(np.linalg.norm(e, axis=1), 1.0, atol=1e-5)
+
+
+def test_backbone_embedder_shapes_and_norm():
+    cfg = get_config("qwen1.5-0.5b", reduced_size=True)
+    emb = BackboneEmbedder(cfg, max_len=12)
+    out = emb.embed_texts(["hello world", "a bus near a dog"])
+    assert out.shape == (2, cfg.d_model)
+    assert np.allclose(np.linalg.norm(out, axis=1), 1.0, atol=1e-3)
+
+
+def test_topk_excludes_invalid_rows():
+    q = jnp.eye(2, 16)
+    db = jnp.eye(32, 16)
+    valid = jnp.zeros((32,), bool).at[5].set(True)
+    scores, idx = topk_similarity(q, db, valid, 4)
+    # only row 5 is valid; every returned finite score must point at it
+    finite = np.asarray(jnp.isfinite(scores))
+    assert (np.asarray(idx)[finite] == 5).all()
+
+
+def test_sharded_topk_matches_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (4, 32))
+    db = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+    valid = jnp.ones((256,), bool)
+    s1, i1 = topk_similarity(q, db, valid, 8)
+    s2, i2 = sharded_topk_similarity(q, db, valid, 8, mesh)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

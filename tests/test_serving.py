@@ -1,0 +1,79 @@
+"""Serving engine: continuous batching correctness + scheduler + stragglers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving import Request, Scheduler, ServingEngine, StragglerMitigator
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b", reduced_size=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _standalone(cfg, params, prompt, n, cache_len=128):
+    toks = jnp.asarray(prompt)[None]
+    pos = jnp.arange(len(prompt))[None]
+    logits, cache = M.prefill(params, {"tokens": toks, "positions": pos},
+                              cfg, cache_len=cache_len,
+                              last_index=jnp.array([len(prompt) - 1]))
+    out = [int(jnp.argmax(logits[:, -1], -1)[0])]
+    for i in range(n - 1):
+        p = jnp.array([[len(prompt) + i]])
+        lg, cache = M.decode_step(params, jnp.array([[out[-1]]], jnp.int32),
+                                  p, cache, cfg)
+        out.append(int(jnp.argmax(lg[:, -1], -1)[0]))
+    return out
+
+
+def test_continuous_batching_matches_standalone(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128,
+                        prefill_bucket=32)
+    sched = Scheduler(eng, max_admit=4)
+    prompts = [np.array([5 + i, 6, 7, 8][: 2 + i % 3], np.int32)
+               for i in range(7)]
+    reqs = [sched.submit(p, max_new_tokens=6) for p in prompts]
+    done = sched.run()
+    assert len(done) == 7
+    for r in done:
+        want = _standalone(cfg, params, r.tokens, len(r.out))
+        assert r.out == want, (r.rid, r.out, want)
+
+
+def test_scheduler_handles_more_requests_than_slots(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                        prefill_bucket=16)
+    sched = Scheduler(eng, max_admit=2)
+    for i in range(9):
+        sched.submit(np.array([3 + i, 4], np.int32), max_new_tokens=4)
+    done = sched.run()
+    assert len(done) == 9
+    assert all(len(r.out) == 4 or r.out[-1] == 2 for r in done)
+
+
+def test_straggler_reissue_policy():
+    sm = StragglerMitigator(4, threshold=1.5)
+
+    def executor(shard, item):
+        return (item * 10 + shard, 5.0 if shard == 2 else 1.0)
+
+    res = sm.run_batch(list(range(8)), executor)
+    assert len(res) == 8
+    assert sm.reissues > 0
+    assert sm.stats[2].reissued > 0
+    # non-stragglers never re-issued
+    assert all(sm.stats[i].reissued == 0 for i in (0, 1, 3))
+
+
+def test_straggler_no_reissue_when_uniform():
+    sm = StragglerMitigator(4, threshold=2.0)
+    res = sm.run_batch(list(range(8)), lambda s, it: (it, 1.0))
+    assert sm.reissues == 0
+    assert res == list(range(8))

@@ -1,0 +1,277 @@
+"""End-to-end behaviour of the LazyVLM system: engine vs brute-force ground
+truth, Example 2.1 semantics, refinement under detector noise, and
+update-friendliness."""
+import numpy as np
+import pytest
+
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.core.refine import MockVerifier
+from repro.semantic import OracleEmbedder
+from repro.video import (PREDICATES, SyntheticWorld, WorldConfig, ingest,
+                         ingest_incremental)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return SyntheticWorld(WorldConfig(num_segments=6, frames_per_segment=32,
+                                      objects_per_segment=7, seed=5))
+
+
+@pytest.fixture(scope="module")
+def engine(world):
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    return LazyVLMEngine(stores, emb)
+
+
+def brute_single(world, da, rel_id, db):
+    hits = set()
+    for v in range(world.cfg.num_segments):
+        objs = {o.eid: o for o in world.segments[v]}
+        for f in range(world.cfg.frames_per_segment):
+            for (s, rl, o) in world.scene_graph(v, f):
+                if rl == rel_id and objs[s].description == da \
+                        and objs[o].description == db:
+                    hits.add(v)
+    return hits
+
+
+def _descs(world):
+    return sorted({o.description for seg in world.segments for o in seg})
+
+
+def test_single_triple_queries_match_ground_truth(world, engine):
+    rng = np.random.default_rng(0)
+    descs = _descs(world)
+    nonempty = 0
+    for _ in range(15):
+        da, db = rng.choice(descs, 2, replace=False)
+        rel = int(rng.integers(len(PREDICATES)))
+        q = VMRQuery(entities=(Entity("a", da), Entity("b", db)),
+                     relationships=(Relationship("r", PREDICATES[rel]),),
+                     frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                     top_k=16, text_threshold=0.9)
+        res = engine.query(q)
+        gt = brute_single(world, da, rel, db)
+        assert set(res.segments) == gt, (da, PREDICATES[rel], db)
+        nonempty += bool(gt)
+    assert nonempty >= 2  # the world must actually contain events
+
+
+def test_temporal_chain_matches_ground_truth(world, engine):
+    rng = np.random.default_rng(4)
+    descs = _descs(world)
+    checked = 0
+    for _ in range(12):
+        da, db = rng.choice(descs, 2, replace=False)
+        r1, r2 = rng.choice(len(PREDICATES), 2, replace=False)
+        min_gap = 3
+        q = VMRQuery(
+            entities=(Entity("a", da), Entity("b", db)),
+            relationships=(Relationship("r1", PREDICATES[r1]),
+                           Relationship("r2", PREDICATES[r2])),
+            frames=(FrameSpec((Triple("a", "r1", "b"),)),
+                    FrameSpec((Triple("a", "r2", "b"),))),
+            constraints=(TemporalConstraint(0, 1, min_gap=min_gap),),
+            top_k=16, text_threshold=0.9)
+        res = engine.query(q)
+        hits = set()
+        for v in range(world.cfg.num_segments):
+            objs = {o.eid: o for o in world.segments[v]}
+            f1s, f2s = [], []
+            for f in range(world.cfg.frames_per_segment):
+                g = world.scene_graph(v, f)
+                if any(rl == r1 and objs[s].description == da
+                       and objs[o].description == db for s, rl, o in g):
+                    f1s.append(f)
+                if any(rl == r2 and objs[s].description == da
+                       and objs[o].description == db for s, rl, o in g):
+                    f2s.append(f)
+            if any(b - a >= min_gap for a in f1s for b in f2s):
+                hits.add(v)
+        assert set(res.segments) == hits
+        checked += bool(hits)
+    assert checked >= 1
+
+
+def test_example_2_1_query_validates():
+    q = example_2_1()
+    q.validate()
+    assert len(q.frames) == 2
+    assert len(q.all_triples()) == 3  # shared triple deduplicated
+
+
+def test_refinement_removes_spurious_triples():
+    wc = WorldConfig(num_segments=8, frames_per_segment=32,
+                     objects_per_segment=7, seed=23, drop_prob=0.0,
+                     spurious_prob=0.8)
+    world = SyntheticWorld(wc)
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    rng = np.random.default_rng(1)
+    improved = 0
+    for _ in range(10):
+        da, db = rng.choice(descs, 2, replace=False)
+        rel = int(rng.integers(len(PREDICATES)))
+        q = VMRQuery(entities=(Entity("a", da), Entity("b", db)),
+                     relationships=(Relationship("r", PREDICATES[rel]),),
+                     frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                     top_k=16, text_threshold=0.9)
+        gt = brute_single(world, da, rel, db)
+        raw = set(LazyVLMEngine(stores, emb).query(q).segments)
+        ref = set(LazyVLMEngine(stores, emb,
+                                verifier=MockVerifier(world)).query(q)
+                  .segments)
+        assert ref == gt  # oracle refinement recovers exact ground truth
+        if raw != gt:
+            improved += 1
+    assert improved >= 1  # spurious noise must have corrupted something
+
+
+def test_incremental_update_equals_scratch(world):
+    emb = OracleEmbedder(dim=64)
+    part = ingest(world, emb, segment_range=(0, 4),
+                  entity_capacity=256, rel_capacity=16384)
+    merged = ingest_incremental(part, world, emb, (4, 6))
+    scratch = ingest(world, emb, entity_capacity=256, rel_capacity=16384)
+    descs = _descs(world)
+    q = VMRQuery(entities=(Entity("a", descs[0]), Entity("b", descs[1])),
+                 relationships=(Relationship("r", "near"),),
+                 frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                 top_k=16, text_threshold=0.9)
+    r1 = LazyVLMEngine(merged, emb).query(q)
+    r2 = LazyVLMEngine(scratch, emb).query(q)
+    assert set(r1.segments) == set(r2.segments)
+
+
+def test_stats_and_sql_artifacts(engine, world):
+    descs = _descs(world)
+    q = VMRQuery(entities=(Entity("a", descs[0]), Entity("b", descs[1])),
+                 relationships=(Relationship("r", "near"),),
+                 frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                 top_k=8, text_threshold=0.9)
+    res = engine.query(q)
+    assert len(res.sql) == 1
+    assert "SELECT vid, fid FROM relationships" in res.sql[0]
+    assert "rl IN ('near')" in res.sql[0]
+    assert set(res.stats.entity_candidates) == {"a", "b"}
+    assert len(res.stats.sql_rows_per_triple) == 1
+    assert res.stats.stage_seconds.keys() >= {"entity_match", "symbolic",
+                                              "temporal"}
+
+
+def test_vlm_verifier_plumbing(world):
+    """Real (untrained) VLM verifier end-to-end: shapes + call accounting."""
+    from repro.configs import get_config
+    from repro.core.refine import VLMVerifier
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    cfg = get_config("qwen2.5-vl-7b", reduced_size=True)
+    ver = VLMVerifier(cfg, world=world, entity_desc=stores.entity_desc,
+                      batch_size=4, prompt_len=16)
+    rows = np.array([[0, 0, 0, 0, 1], [1, 3, 1, 2, 0], [2, 5, 2, 1, 3]],
+                    np.int32)
+    out = ver.verify(rows)
+    assert out.shape == (3,) and out.dtype == bool
+    assert ver.calls == 3
+
+
+def test_dual_store_image_search_recovers_recall(world):
+    """Corrupt the text embeddings; the image store (eie) must still match
+    when image_search=True (the paper's dual-embedding Entity Store)."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.stores import EntityStore, VideoStores
+
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    descs = _descs(world)
+    rng = np.random.default_rng(0)
+    noise = rng.standard_normal(np.asarray(stores.entities.text_emb).shape)
+    noise = noise / np.linalg.norm(noise, axis=-1, keepdims=True)
+    corrupted = VideoStores(
+        entities=EntityStore(stores.entities.table,
+                             jnp.asarray(noise.astype(np.float32)),
+                             stores.entities.image_emb),
+        relationships=stores.relationships,
+        predicates=stores.predicates,
+        num_segments=stores.num_segments,
+        frames_per_segment=stores.frames_per_segment,
+        entity_desc=stores.entity_desc)
+
+    hits_text_only = hits_dual = gt_nonempty = 0
+    for trial in range(8):
+        da, db = rng.choice(descs, 2, replace=False)
+        rel = int(rng.integers(len(PREDICATES)))
+        gt = brute_single(world, da, rel, db)
+        if not gt:
+            continue
+        gt_nonempty += 1
+        base = dict(entities=(Entity("a", da), Entity("b", db)),
+                    relationships=(Relationship("r", PREDICATES[rel]),),
+                    frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                    top_k=16, text_threshold=0.9)
+        q_text = VMRQuery(**base, image_search=False)
+        q_dual = VMRQuery(**base, image_search=True, image_threshold=0.9)
+        rt = set(LazyVLMEngine(corrupted, emb).query(q_text).segments)
+        rd = set(LazyVLMEngine(corrupted, emb).query(q_dual).segments)
+        hits_text_only += rt == gt
+        hits_dual += rd == gt
+    assert gt_nonempty >= 1
+    assert hits_dual == gt_nonempty          # image path recovers everything
+    assert hits_text_only < gt_nonempty      # text-only path is broken
+
+
+def test_e2e_vlm_baseline_agrees_with_lazyvlm(world):
+    """Same oracle verifier: LazyVLM and the e2e baseline must return the
+    same segments; LazyVLM must issue far fewer VLM calls (the paper's
+    system-efficiency claim, measured not modeled)."""
+    from repro.baselines.e2e_vlm import E2EVLMBaseline
+
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    descs = _descs(world)
+    rng = np.random.default_rng(7)
+    agree = nonempty = 0
+    ratio_sum = 0.0
+    for _ in range(6):
+        da, db = rng.choice(descs, 2, replace=False)
+        rel = int(rng.integers(len(PREDICATES)))
+        q = VMRQuery(entities=(Entity("a", da), Entity("b", db)),
+                     relationships=(Relationship("r", PREDICATES[rel]),),
+                     frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                     top_k=16, text_threshold=0.9)
+        lazy = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+        base = E2EVLMBaseline(world, stores, MockVerifier(world))
+        rl = lazy.query(q)
+        rb = base.query(q)
+        assert set(rl.segments) == set(rb.segments)
+        if rb.stats.refine_candidates:
+            ratio_sum += (rb.stats.refine_candidates
+                          / max(rl.stats.refine_candidates, 1))
+            nonempty += 1
+        agree += 1
+    assert agree == 6
+    assert nonempty >= 1
+    assert ratio_sum / nonempty > 2.0  # pruning factor strictly > 2x
+
+
+def test_example_2_1_end_to_end_staged():
+    """The paper's running example, staged deterministically: the engine must
+    retrieve exactly the segment holding the event."""
+    world = SyntheticWorld(WorldConfig(num_segments=8, frames_per_segment=32,
+                                       objects_per_segment=6, seed=11))
+    world.stage_event_2_1(vid=3)
+    emb = OracleEmbedder(dim=64)
+    stores = ingest(world, emb)
+    eng = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    res = eng.query(example_2_1(min_gap_frames=5))
+    assert 3 in res.segments
+    # every reported segment must genuinely contain the chain (oracle verify)
+    for v in res.segments:
+        assert np.asarray(res.end_frames)[v].any()

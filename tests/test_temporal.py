@@ -1,0 +1,87 @@
+"""Property tests: vectorized temporal DP vs brute-force chain search."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.core import temporal as T
+
+
+def brute_chain(bitmaps, gaps):
+    """All (v, t_last) reachable by a gap-respecting chain."""
+    V, F = bitmaps[0].shape
+    ok = np.zeros((V, F), bool)
+    for v in range(V):
+        def extend(j, t_prev):
+            if j == len(bitmaps):
+                return [t_prev]
+            lo, hi = gaps[j - 1]
+            outs = []
+            for t in range(F):
+                if not bitmaps[j][v, t]:
+                    continue
+                gap = t - t_prev
+                if gap < lo:
+                    continue
+                if hi is not None and gap > hi:
+                    continue
+                outs += extend(j + 1, t)
+            return outs
+        for t0 in range(F):
+            if bitmaps[0][v, t0]:
+                for tl in extend(1, t0):
+                    ok[v, tl] = True
+    return ok
+
+
+bitmap_strat = st.lists(
+    st.lists(st.booleans(), min_size=12, max_size=12),
+    min_size=3, max_size=3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b0=bitmap_strat, b1=bitmap_strat, min_gap=st.integers(1, 4),
+       max_gap=st.one_of(st.none(), st.integers(4, 8)))
+def test_two_frame_chain(b0, b1, min_gap, max_gap):
+    bm0 = np.array(b0)
+    bm1 = np.array(b1)
+    reach = T.chain_step(jnp.asarray(bm0), jnp.asarray(bm1), min_gap, max_gap)
+    want = brute_chain([bm0, bm1], [(min_gap, max_gap)])
+    assert (np.asarray(reach) == want).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(b0=bitmap_strat, b1=bitmap_strat, b2=bitmap_strat,
+       g1=st.integers(1, 3), g2=st.integers(1, 3))
+def test_three_frame_chain(b0, b1, b2, g1, g2):
+    bms = [np.array(b) for b in (b0, b1, b2)]
+    r = T.chain_step(jnp.asarray(bms[0]), jnp.asarray(bms[1]), g1, None)
+    r = T.chain_step(r, jnp.asarray(bms[2]), g2, None)
+    want = brute_chain(bms, [(g1, None), (g2, None)])
+    assert (np.asarray(r) == want).all()
+
+
+def _query(n_frames, constraints):
+    ents = (Entity("a", "x"), Entity("b", "y"))
+    rels = (Relationship("r", "near"),)
+    frames = tuple(FrameSpec((Triple("a", "r", "b"),))
+                   for _ in range(n_frames))
+    return VMRQuery(ents, rels, frames, constraints)
+
+
+def test_normalize_constraints_defaults():
+    q = _query(3, ())
+    assert T.normalize_constraints(q) == [(1, None), (1, None)]
+
+
+def test_normalize_constraints_merge():
+    q = _query(2, (TemporalConstraint(0, 1, min_gap=5, max_gap=9),))
+    assert T.normalize_constraints(q) == [(5, 9)]
+
+
+def test_rank_segments():
+    ends = jnp.asarray(np.array([[1, 1, 0], [0, 0, 0], [1, 1, 1]], bool))
+    scores, idx = T.rank_segments(ends, top_k=2)
+    assert list(np.asarray(idx)) == [2, 0]
+    assert list(np.asarray(scores)) == [3, 2]
