@@ -4,6 +4,7 @@
   scaling      — query cost vs video length
   updates      — incremental ingest (update-friendliness)
   parallelism  — fused batched stages vs sequential launches
+  multi_query  — batched multi-query throughput vs sequential query loop
   accuracy     — refinement fixes detector noise (robustness)
   kernels      — fused top-k data-movement model + CPU sanity timing
   roofline     — printed separately: python -m benchmarks.roofline
@@ -13,9 +14,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (accuracy, kernels, parallelism, pruning, scaling,
-                            updates)
-    modules = [pruning, scaling, updates, parallelism, accuracy, kernels]
+    from benchmarks import (accuracy, kernels, multi_query, parallelism,
+                            pruning, scaling, updates)
+    modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
+               kernels]
     print("name,value,derived")
     failed = []
     for m in modules:

@@ -1,4 +1,5 @@
 from repro.core.query import (Entity, FrameSpec, Relationship,  # noqa: F401
                               TemporalConstraint, Triple, VMRQuery,
                               example_2_1)
-from repro.core.executor import LazyVLMEngine, QueryResult  # noqa: F401
+from repro.core.executor import (LazyVLMEngine, QueryResult,  # noqa: F401
+                                 QueryStats)

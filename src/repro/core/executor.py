@@ -27,9 +27,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.query import VMRQuery
-from repro.core.stores import VideoStores
+from repro.core.stores import REL_SCHEMA, VideoStores
 from repro.core import temporal as temporal_lib
-from repro.semantic.search import (sharded_topk_similarity, topk_similarity)
+from repro.semantic.embed import CachingEmbedder
+from repro.semantic.search import (sharded_topk_similarity, topk_prefix,
+                                   topk_similarity)
 from repro.symbolic import ops as sops
 from repro.symbolic.table import Table
 
@@ -47,8 +49,17 @@ class QueryStats:
 
 @dataclass
 class QueryResult:
+    """Result of one ``VMRQuery``.
+
+    ``segments`` and ``scores`` are parallel lists: ``scores[i]`` is the
+    integer count of valid chain completions (distinct end frames where the
+    query's last frame spec can land, see ``temporal.rank_segments``) inside
+    ``segments[i]``; more completions = stronger match. Only segments with at
+    least one completion are returned, best first.
+    """
+
     segments: List[int]                  # ranked segment ids
-    scores: List[int]                    # completions per segment
+    scores: List[int]                    # chain-completion count per segment
     end_frames: np.ndarray               # (V, F) bool
     sql: List[str]                       # generated SQL, one per triple
     stats: QueryStats = field(default_factory=QueryStats)
@@ -102,6 +113,30 @@ def _masks_to_bitmaps(rel_vid, rel_fid, masks, num_segments: int,
     return jax.vmap(one)(masks)
 
 
+@jax.jit
+def _conjoin_bitmaps(bitmaps, idx, pad):
+    """Frame-spec conjunction for a whole batch in one fused program.
+
+    bitmaps: (T, V, F); idx/pad: (n_frames, max_triples) — row r ANDs the
+    bitmaps of its non-pad triple indices (pad slots act as identity/True).
+    Returns (n_frames, V, F).
+    """
+    sel = bitmaps[idx] | pad[:, :, None, None]
+    return sel.all(axis=1)
+
+
+def _pow2_bucket(n: int, minimum: int = 4) -> int:
+    """Pad a batch-dependent dimension to a power-of-two bucket so the fused
+    programs are compiled once per bucket tier, not once per batch shape.
+    Applied to the flattened triple count AND the candidate/predicate/triple
+    widths — padding slots carry all-False validity masks and select
+    nothing."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
 # ---------------------------------------------------------------------------
 # SQL rendering (the paper's "SQL Query Generation" artifact)
 # ---------------------------------------------------------------------------
@@ -124,9 +159,15 @@ def render_sql(triple_idx: int, subj_pairs, obj_pairs, pred_ids,
 # ---------------------------------------------------------------------------
 class LazyVLMEngine:
     def __init__(self, stores: VideoStores, embedder, verifier=None, *,
-                 mesh=None, use_kernels: bool = False):
+                 mesh=None, use_kernels: bool = False,
+                 embed_cache_entries: int = 4096):
         self.stores = stores
         self.embedder = embedder
+        # host-side text->embedding memo; both the single-query and the
+        # batched path go through it (inner embedders are deterministic, so
+        # cached rows are bit-identical to recomputed ones)
+        self._embed = CachingEmbedder(embedder,
+                                      max_entries=embed_cache_entries)
         self.verifier = verifier          # None => trust the symbolic stage
         self.mesh = mesh
         self.use_kernels = use_kernels
@@ -139,8 +180,8 @@ class LazyVLMEngine:
         return _entity_match(q_emb, emb, valid, k)
 
     def _match_entities(self, query: VMRQuery, stats: QueryStats):
-        texts = [e.text for e in query.entities]
-        q_emb = jnp.asarray(self.embedder.embed_texts(texts))
+        texts = query.entity_texts
+        q_emb = jnp.asarray(self._embed.embed_texts(texts))
         ent = self.stores.entities
         k = min(query.top_k, ent.capacity)
         scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid, k)
@@ -149,7 +190,7 @@ class LazyVLMEngine:
             # dual-store matching (ete AND eie, Section 2.2): candidates are
             # the union; duplicate (vid,eid) pairs are harmless under the
             # semi-join's set semantics.
-            qi = jnp.asarray(self.embedder.embed_for_image(texts))
+            qi = jnp.asarray(self._embed.embed_for_image(texts))
             iscores, iidx = self._search(qi, ent.image_emb, ent.table.valid,
                                          k)
             iok = iscores >= query.image_threshold
@@ -163,8 +204,8 @@ class LazyVLMEngine:
         return vids, eids, ok  # each (E, k) or (E, 2k) with image search
 
     def _match_predicates(self, query: VMRQuery):
-        texts = [r.text for r in query.relationships]
-        q_emb = jnp.asarray(self.embedder.embed_texts(texts))
+        texts = query.relationship_texts
+        q_emb = jnp.asarray(self._embed.embed_texts(texts))
         sims = _predicate_match(q_emb, jnp.asarray(
             self.stores.predicates.embeddings))     # (R, P)
         m = min(query.predicate_top_m, sims.shape[1])
@@ -248,25 +289,277 @@ class LazyVLMEngine:
             stats=stats,
         )
 
-    # -- refinement helper -------------------------------------------------------
-    def _refine(self, rel: Table, masks: jax.Array, stats: QueryStats
-                ) -> jax.Array:
+    # -- batched multi-query path -------------------------------------------------
+    def _match_entities_batch(self, queries: List[VMRQuery],
+                              stats: List[QueryStats]):
+        """Entity matching for a whole batch: ONE ``embed_texts`` call over
+        every query's entity texts (through the host-side cache) and ONE
+        fused top-k launch at the batch-max k; each query's smaller-k view is
+        an exact prefix (``topk_prefix``). Returns per query
+        ``(vids, eids, ok)`` host arrays of shape (E_q, width_q)."""
+        ent = self.stores.entities
+        cap = ent.capacity
+        texts = [t for q in queries for t in q.entity_texts]
+        offs = np.cumsum([0] + [len(q.entities) for q in queries])
+        q_emb = jnp.asarray(self._embed.embed_texts(texts))
+        kmax = min(max(q.top_k for q in queries), cap)
+        scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid, kmax)
+        scores_np, idx_np = np.asarray(scores), np.asarray(idx)
+
+        img_qids = [i for i, q in enumerate(queries) if q.image_search]
+        if img_qids:
+            img_texts = [t for i in img_qids for t in queries[i].entity_texts]
+            img_offs = np.cumsum(
+                [0] + [len(queries[i].entities) for i in img_qids])
+            qi_emb = jnp.asarray(self._embed.embed_for_image(img_texts))
+            kimax = min(max(queries[i].top_k for i in img_qids), cap)
+            iscores, iidx = self._search(qi_emb, ent.image_emb,
+                                         ent.table.valid, kimax)
+            iscores_np, iidx_np = np.asarray(iscores), np.asarray(iidx)
+        img_pos = {qid: j for j, qid in enumerate(img_qids)}
+
+        vid_col = np.asarray(ent.table["vid"])
+        eid_col = np.asarray(ent.table["eid"])
+        out = []
+        for qi, q in enumerate(queries):
+            k = min(q.top_k, cap)
+            sl = slice(offs[qi], offs[qi + 1])
+            s_q, idx_q = topk_prefix(scores_np[sl], idx_np[sl], k)
+            ok_q = s_q >= q.text_threshold
+            if q.image_search:
+                j = img_pos[qi]
+                isl = slice(img_offs[j], img_offs[j + 1])
+                is_q, ii_q = topk_prefix(iscores_np[isl], iidx_np[isl], k)
+                idx_q = np.concatenate([idx_q, ii_q], axis=1)
+                ok_q = np.concatenate([ok_q, is_q >= q.image_threshold],
+                                      axis=1)
+            ci = np.clip(idx_q, 0, cap - 1)
+            for name, row_ok in zip([e.name for e in q.entities], ok_q):
+                stats[qi].entity_candidates[name] = int(row_ok.sum())
+            out.append((vid_col[ci], eid_col[ci], ok_q))
+        return out
+
+    def _match_predicates_batch(self, queries: List[VMRQuery]):
+        """Predicate matching for a whole batch as one einsum + one top-k
+        launch. Returns per query ``(pred_ids, ok)`` host arrays."""
+        texts = [t for q in queries for t in q.relationship_texts]
+        offs = np.cumsum([0] + [len(q.relationships) for q in queries])
+        q_emb = jnp.asarray(self._embed.embed_texts(texts))
+        sims = _predicate_match(q_emb, jnp.asarray(
+            self.stores.predicates.embeddings))            # (ΣR, P)
+        num_preds = sims.shape[1]
+        mmax = min(max(q.predicate_top_m for q in queries), num_preds)
+        vals, ids = jax.lax.top_k(sims, mmax)
+        vals_np, ids_np = np.asarray(vals), np.asarray(ids)
+        out = []
+        for qi, q in enumerate(queries):
+            m = min(q.predicate_top_m, num_preds)
+            sl = slice(offs[qi], offs[qi + 1])
+            v_q, id_q = topk_prefix(vals_np[sl], ids_np[sl], m)
+            ok = v_q >= q.text_threshold
+            ok[:, 0] = True    # always keep the argmax label
+            out.append((id_q, ok))
+        return out
+
+    def query_batch(self, queries: List[VMRQuery]) -> List[QueryResult]:
+        """Execute many queries with fused, amortized stage launches.
+
+        Per query the returned ``QueryResult`` is identical to ``query()``:
+        smaller per-query top-k's are exact prefixes of the batch-max top-k,
+        padded triple rows carry all-False candidate masks (they select
+        nothing), and row verdicts depend only on row content. The batch
+        amortizes: one embedding call (cached) for every query's texts, one
+        entity/predicate top-k launch each, one ``(ΣT, cap)`` selection +
+        bitmap launch (ΣT padded to a power-of-two bucket so compiled
+        programs are reused across batch shapes), one signature-grouped
+        temporal DP, and — the expensive part — ONE deduped VLM verification
+        pass shared across queries: a candidate row referenced by several
+        queries costs one call total. Two stats fields carry batch-level
+        (not per-query) values on every result: ``stats.vlm_calls`` is the
+        verifier's cumulative call count shared by the whole batch, and
+        ``stats.stage_seconds`` holds the batch's stage wall-times (summing
+        them across a batch's results overcounts by the batch size).
+        """
+        if not queries:
+            return []
+        for q in queries:
+            q.validate()
+        st = self.stores
+        rel = st.relationships.table
+        stats = [QueryStats() for _ in queries]
+        t0 = time.perf_counter()
+
+        # -- stage 1: batched entity + predicate matching ---------------------
+        ent_cands = self._match_entities_batch(queries, stats)
+        pred_cands = self._match_predicates_batch(queries)
+        t_entity = time.perf_counter() - t0
+
+        # -- stage 2+3a: every query's triples in ONE fused selection ---------
+        t0 = time.perf_counter()
+        trip_lists = [q.all_triples() for q in queries]
+        counts = [len(ts) for ts in trip_lists]
+        row_offs = np.cumsum([0] + counts)
+        total = int(row_offs[-1])
+        t_pad = _pow2_bucket(total)
+        width = _pow2_bucket(max(v.shape[1] for v, _, _ in ent_cands),
+                             minimum=8)
+        m_width = _pow2_bucket(max(ids.shape[1] for ids, _ in pred_cands),
+                               minimum=2)
+        sv = np.zeros((t_pad, width), np.int32)
+        se = np.zeros((t_pad, width), np.int32)
+        ov = np.zeros((t_pad, width), np.int32)
+        oe = np.zeros((t_pad, width), np.int32)
+        so = np.zeros((t_pad, width), bool)
+        oo = np.zeros((t_pad, width), bool)
+        pi = np.zeros((t_pad, m_width), np.int32)
+        po = np.zeros((t_pad, m_width), bool)
+        for qi, q in enumerate(queries):
+            vids, eids, eok = ent_cands[qi]
+            pids, pok = pred_cands[qi]
+            ei = {e.name: i for i, e in enumerate(q.entities)}
+            ri = {r.name: i for i, r in enumerate(q.relationships)}
+            w, m = vids.shape[1], pids.shape[1]
+            for j, t in enumerate(trip_lists[qi]):
+                row = row_offs[qi] + j
+                s_i, o_i = ei[t.subject], ei[t.object]
+                sv[row, :w], se[row, :w] = vids[s_i], eids[s_i]
+                so[row, :w] = eok[s_i]
+                ov[row, :w], oe[row, :w] = vids[o_i], eids[o_i]
+                oo[row, :w] = eok[o_i]
+                pi[row, :m] = pids[ri[t.predicate]]
+                po[row, :m] = pok[ri[t.predicate]]
+        masks = _triple_selections(
+            rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
+            rel.valid,
+            jnp.asarray(sv), jnp.asarray(se), jnp.asarray(so),
+            jnp.asarray(ov), jnp.asarray(oe), jnp.asarray(oo),
+            jnp.asarray(pi), jnp.asarray(po))               # (ΣT_pad, cap)
         masks_np = np.asarray(masks)
-        cols = {k: np.asarray(rel[k]) for k in ("vid", "fid", "sid", "rl",
-                                                "oid")}
+        sqls: List[List[str]] = []
+        for qi, q in enumerate(queries):
+            lo = row_offs[qi]
+            stats[qi].sql_rows_per_triple = [
+                int(x) for x in masks_np[lo: lo + counts[qi]].sum(axis=1)]
+            sqls.append([
+                render_sql(j,
+                           list(zip(sv[lo + j][so[lo + j]],
+                                    se[lo + j][so[lo + j]])),
+                           list(zip(ov[lo + j][oo[lo + j]],
+                                    oe[lo + j][oo[lo + j]])),
+                           pi[lo + j][po[lo + j]],
+                           st.predicates.labels)
+                for j in range(counts[qi])])
+        t_symbolic = time.perf_counter() - t0
+
+        # -- stage 3b: ONE deduped VLM pass across the whole batch ------------
+        t0 = time.perf_counter()
+        if self.verifier is not None:
+            out = self._verify_rows(rel, masks_np)
+            if out is not None:
+                keep_rows, _, _, cols = out
+                calls = getattr(self.verifier, "calls", 0)
+                for qi in range(len(queries)):
+                    lo = row_offs[qi]
+                    q_any = masks_np[lo: lo + counts[qi]].any(axis=0)
+                    ridx = np.nonzero(q_any)[0]
+                    stats[qi].vlm_calls = calls
+                    if len(ridx) == 0:
+                        continue
+                    qrows = np.stack([cols[k][ridx] for k in REL_SCHEMA],
+                                     axis=1)
+                    stats[qi].refine_candidates = len(
+                        np.unique(qrows, axis=0))
+                    stats[qi].refine_passed = len(
+                        np.unique(qrows[keep_rows[ridx]], axis=0))
+                masks = masks & jnp.asarray(keep_rows)[None, :]
+        t_refine = time.perf_counter() - t0
+
+        # -- stage 4: conjunction + signature-grouped temporal DP -------------
+        t0 = time.perf_counter()
+        bitmaps = _masks_to_bitmaps(rel["vid"], rel["fid"], masks,
+                                    st.num_segments, st.frames_per_segment)
+        # frame-spec conjunction: one gather + AND-reduce over every
+        # (query, frame) pair; pad slots act as identity (all-True), matching
+        # the single path's ones-initialized accumulator
+        fcounts = [len(q.frames) for q in queries]
+        frame_offs = np.cumsum([0] + fcounts)
+        n_qf = int(frame_offs[-1])
+        max_tr = _pow2_bucket(
+            max((len(f.triples) for q in queries for f in q.frames),
+                default=1) or 1, minimum=2)
+        qf_pad = _pow2_bucket(n_qf)
+        idx_mat = np.zeros((qf_pad, max_tr), np.int32)
+        pad_mat = np.ones((qf_pad, max_tr), bool)
+        for qi, q in enumerate(queries):
+            triple_of = {t: row_offs[qi] + j
+                         for j, t in enumerate(trip_lists[qi])}
+            for fj, f in enumerate(q.frames):
+                r = frame_offs[qi] + fj
+                for c, t in enumerate(f.triples):
+                    idx_mat[r, c] = triple_of[t]
+                    pad_mat[r, c] = False
+        fmaps = _conjoin_bitmaps(bitmaps, jnp.asarray(idx_mat),
+                                 jnp.asarray(pad_mat))      # (qf_pad, V, F)
+        frame_maps_all = [
+            [fmaps[frame_offs[qi] + j] for j in range(fcounts[qi])]
+            for qi in range(len(queries))]
+        matched = temporal_lib.temporal_match_batch(frame_maps_all, queries)
+        ends_stack = jnp.stack([ends for _, ends in matched])  # (B, V, F)
+        kmax = min(max(q.top_k for q in queries), st.num_segments)
+        scores_b, seg_b = temporal_lib.rank_segments_batch(ends_stack, kmax)
+        scores_np, seg_np = np.asarray(scores_b), np.asarray(seg_b)
+        t_temporal = time.perf_counter() - t0
+
+        results = []
+        for qi, q in enumerate(queries):
+            k = min(q.top_k, st.num_segments)
+            s_q, g_q = topk_prefix(scores_np[qi], seg_np[qi], k)
+            keep = s_q > 0
+            stats[qi].frames_scanned_equivalent = (st.num_segments
+                                                   * st.frames_per_segment)
+            stats[qi].stage_seconds = {
+                "entity_match": t_entity, "symbolic": t_symbolic,
+                "refine": t_refine, "temporal": t_temporal}
+            results.append(QueryResult(
+                segments=[int(v) for v in g_q[keep]],
+                scores=[int(x) for x in s_q[keep]],
+                end_frames=np.asarray(matched[qi][1]),
+                sql=sqls[qi],
+                stats=stats[qi],
+            ))
+        return results
+
+    # -- refinement helpers ------------------------------------------------------
+    def _verify_rows(self, rel: Table, masks_np: np.ndarray):
+        """Verify every relational row under any triple mask, deduped by row
+        *content* — identical (vid,fid,sid,rl,oid) rows cost one VLM call no
+        matter how many triples (or, in the batched path, queries) touch
+        them. Returns ``(keep_rows, uniq_count, passed_count, cols)`` where
+        ``keep_rows`` is a (capacity,) bool verdict per row index, the
+        counts are over unique row contents, and ``cols`` is the host copy
+        of the relational columns (so callers don't re-transfer them) — or
+        ``None`` if nothing matched."""
         any_mask = masks_np.any(axis=0)
         rows_idx = np.nonzero(any_mask)[0]
         if len(rows_idx) == 0:
-            return masks
-        rows = np.stack([cols[k][rows_idx] for k in
-                         ("vid", "fid", "sid", "rl", "oid")], axis=1)
-        # dedupe identical candidates (same row referenced by several triples)
+            return None
+        cols = {k: np.asarray(rel[k]) for k in REL_SCHEMA}
+        rows = np.stack([cols[k][rows_idx] for k in REL_SCHEMA], axis=1)
         uniq, inv = np.unique(rows, axis=0, return_inverse=True)
-        stats.refine_candidates = len(uniq)
         verdict_u = self.verifier.verify(uniq)
-        stats.vlm_calls = getattr(self.verifier, "calls", 0)
-        stats.refine_passed = int(verdict_u.sum())
         verdicts = verdict_u[inv]
         keep_rows = np.zeros((rel.capacity,), bool)
         keep_rows[rows_idx] = verdicts
+        return keep_rows, len(uniq), int(verdict_u.sum()), cols
+
+    def _refine(self, rel: Table, masks: jax.Array, stats: QueryStats
+                ) -> jax.Array:
+        masks_np = np.asarray(masks)
+        out = self._verify_rows(rel, masks_np)
+        if out is None:
+            return masks
+        keep_rows, uniq_count, passed, _ = out
+        stats.refine_candidates = uniq_count
+        stats.vlm_calls = getattr(self.verifier, "calls", 0)
+        stats.refine_passed = passed
         return masks & jnp.asarray(keep_rows)[None, :]

@@ -62,6 +62,16 @@ class VMRQuery:
     image_search: bool = False
     predicate_top_m: int = 2        # predicate-label candidates per relationship
 
+    @property
+    def entity_texts(self) -> List[str]:
+        """Entity description texts, in declaration order (embedding input)."""
+        return [e.text for e in self.entities]
+
+    @property
+    def relationship_texts(self) -> List[str]:
+        """Relationship description texts, in declaration order."""
+        return [r.text for r in self.relationships]
+
     def entity(self, name: str) -> Entity:
         return next(e for e in self.entities if e.name == name)
 

@@ -124,9 +124,6 @@ def build_relationship_store(rows: np.ndarray, capacity: int
     return RelationshipStore(Table(cols, jnp.asarray(valid)))
 
 
-import functools
-
-
 @jax.jit
 def _insert(arr: jax.Array, vals: jax.Array, start) -> jax.Array:
     """Row insertion as one cached jitted program — incremental ingest cost

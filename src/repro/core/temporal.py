@@ -11,7 +11,7 @@ in segment v with frame j at time t respecting all gaps".
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,3 +90,53 @@ def rank_segments(end_frames: jax.Array, top_k: int
     k = min(top_k, score.shape[0])
     vals, idx = jax.lax.top_k(score, k)
     return vals, idx
+
+
+# ---------------------------------------------------------------------------
+# batched (multi-query) temporal matching
+# ---------------------------------------------------------------------------
+def chain_signature(query: VMRQuery) -> Tuple:
+    """Hashable description of a query's chain DP: queries with the same
+    signature run the same ``chain_step`` sequence and can be stacked."""
+    return (len(query.frames), tuple(normalize_constraints(query)))
+
+
+def temporal_match_batch(frame_bitmaps: Sequence[Sequence[jax.Array]],
+                         queries: Sequence[VMRQuery]
+                         ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Batched ``temporal_match``: per query i, ``frame_bitmaps[i]`` is its
+    list of (V, F) candidate bitmaps (one per query frame).
+
+    Queries are grouped by :func:`chain_signature`; each group's bitmaps are
+    stacked to (B, V, F) and run through ONE chain-DP pass (``chain_step`` is
+    shape-polymorphic over leading axes), instead of one eager op-chain per
+    query. Returns per query ``(segment_hits, end_frames)``, identical to
+    ``temporal_match`` applied query-by-query.
+    """
+    out: List = [None] * len(queries)
+    groups: Dict[Tuple, List[int]] = {}
+    for i, q in enumerate(queries):
+        groups.setdefault(chain_signature(q), []).append(i)
+    for (n_frames, gaps), idxs in groups.items():
+        stacked = [jnp.stack([frame_bitmaps[i][j] for i in idxs])
+                   for j in range(n_frames)]
+        reach = stacked[0]
+        for j in range(1, n_frames):
+            min_gap, max_gap = gaps[j - 1]
+            reach = chain_step(reach, stacked[j], min_gap, max_gap)
+        hits = reach.any(axis=-1)
+        for b, i in enumerate(idxs):
+            out[i] = (hits[b], reach[b])
+    return out
+
+
+def rank_segments_batch(end_frames: jax.Array, top_k: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """``rank_segments`` over a stacked (B, V, F) batch in one top-k launch.
+
+    Per-query smaller ``top_k`` views are prefixes of the returned columns
+    (see ``semantic.search.topk_prefix``).
+    """
+    score = end_frames.sum(axis=-1)
+    k = min(top_k, score.shape[-1])
+    return jax.lax.top_k(score, k)

@@ -14,6 +14,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import (ASSIGNED_ARCHS, SHAPES, applicable_shapes,  # noqa: E402
                            get_config)
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig  # noqa: E402
@@ -223,7 +224,7 @@ def meter_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
             _, shape, mesh, par, _, jitted, args = build_cell(
                 arch, shape_name, multi_pod,
                 cfg_override=_depth_cfg(cfg, d), nmb_override=1)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 compiled = jitted.lower(*args).compile()
             cost = _cost_attrs(compiled)
             coll, coll_n = collective_bytes(compiled.as_text())
@@ -254,7 +255,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     cfg, shape, mesh, par, nmb, jitted, args = build_cell(
         arch, shape_name, multi_pod)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()

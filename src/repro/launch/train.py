@@ -16,6 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ParallelConfig, ShapeConfig
 from repro.distributed import sharding as shd
@@ -88,7 +89,7 @@ def main():
     for _ in range(start):
         next(pipe)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         t0 = time.time()
         tokens_seen = 0
         for step in range(start, args.steps):

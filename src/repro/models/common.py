@@ -77,7 +77,8 @@ def with_sharding_constraint(x, spec):
     No-op without a mesh context.
     """
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.compat import get_ambient_mesh
+        mesh = get_ambient_mesh()
         names = dict(zip(mesh.axis_names, mesh.axis_sizes)) \
             if mesh is not None and mesh.axis_names else {}
     except Exception:

@@ -30,7 +30,7 @@ import os
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -42,7 +42,8 @@ def ep_enabled(cfg: ModelConfig, x_shape) -> bool:
     if os.environ.get("REPRO_MOE_EP", "0") != "1":
         return False
     try:
-        am = jax.sharding.get_abstract_mesh()
+        from repro.compat import get_ambient_mesh
+        am = get_ambient_mesh()
     except Exception:
         return False
     if am is None or not am.axis_names or "model" not in am.axis_names:
@@ -121,7 +122,7 @@ def moe_layer_ep(p: Params, x: jax.Array, cfg: ModelConfig, mesh,
         fn, mesh=mesh,
         in_specs=(dspec, P(), P(model_axis), P(model_axis), P(model_axis)),
         out_specs=(dspec, P()),
-        check_vma=False)
+        check_replication=False)
     xt = x.reshape(B * S, D)
     out, aux = fn_sharded(xt, p["router"], p["w_gate"], p["w_up"],
                           p["w_down"])

@@ -178,7 +178,8 @@ def _apply_layer_full(lp: Params, x, positions, cfg: ModelConfig, kind: str,
         h = apply_norm(x, lp["post_norm"], cfg.norm_type, cfg.norm_eps)
         from repro.models import moe_ep
         if moe_ep.ep_enabled(cfg, h.shape):
-            am = jax.sharding.get_abstract_mesh()
+            from repro.compat import get_ambient_mesh
+            am = get_ambient_mesh()
             daxes = tuple(a for a in ("pod", "data") if a in am.axis_names)
             out, aux = moe_ep.moe_layer_ep(lp["moe"], h, cfg, am,
                                            data_axes=daxes or ("data",))

@@ -1,4 +1,6 @@
-from repro.semantic.embed import BackboneEmbedder, OracleEmbedder  # noqa: F401
-from repro.semantic.search import (topk_similarity,  # noqa: F401
+from repro.semantic.embed import (BackboneEmbedder, CachingEmbedder,  # noqa: F401
+                                  OracleEmbedder)
+from repro.semantic.search import (topk_prefix,  # noqa: F401
+                                   topk_similarity,
                                    sharded_topk_similarity)
 from repro.semantic.tokenizer import HashTokenizer  # noqa: F401

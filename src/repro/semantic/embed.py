@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import hashlib
 from functools import partial
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,60 @@ class OracleEmbedder:
     def embed_for_image(self, texts: List[str]) -> np.ndarray:
         """Query-side embeddings into the image (eie / VLM2Vec) space."""
         return self.embed_texts([t + " appearance" for t in texts])
+
+
+class CachingEmbedder:
+    """Host-side memo cache over any embedder, keyed by (space, text).
+
+    Within one call, duplicate texts are deduped and every uncached text goes
+    to the inner embedder in ONE ``embed_texts`` call — the batched query
+    path relies on this to amortize embedding across a whole admission batch.
+    Across calls, repeated query texts (hot entities like "man with backpack")
+    are served from the cache. Insertion-order (FIFO) eviction bounds host
+    memory at ``max_entries`` rows.
+
+    Only meaningful for deterministic inner embedders (both implementations
+    above are): a cached row must equal a recomputed one.
+    """
+
+    def __init__(self, inner, max_entries: int = 4096):
+        self.inner = inner
+        self.max_entries = max_entries
+        self._cache: Dict[Tuple[str, str], np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def dim(self) -> int:
+        return self.inner.dim
+
+    def _lookup(self, space: str, texts: List[str], embed_fn) -> np.ndarray:
+        if not texts:
+            return np.zeros((0, self.inner.dim), np.float32)
+        self.hits += sum((space, t) in self._cache for t in texts)
+        missing = [t for t in dict.fromkeys(texts)
+                   if (space, t) not in self._cache]
+        if missing:
+            self.misses += len(missing)
+            fresh = np.asarray(embed_fn(missing))
+            for t, row in zip(missing, fresh):
+                # copy: a row view would pin the whole (n_missing, dim) base
+                # array in memory for as long as any one entry survives
+                self._cache[(space, t)] = row.copy()
+        out = np.stack([self._cache[(space, t)] for t in texts])
+        while len(self._cache) > self.max_entries:
+            self._cache.pop(next(iter(self._cache)))
+        return out
+
+    def embed_texts(self, texts: List[str], rng=None) -> np.ndarray:
+        if rng is not None:
+            # noise-injected embeddings are per-call; caching them would
+            # silently return clean/stale rows — bypass the cache entirely
+            return np.asarray(self.inner.embed_texts(texts, rng))
+        return self._lookup("text", texts, self.inner.embed_texts)
+
+    def embed_for_image(self, texts: List[str]) -> np.ndarray:
+        return self._lookup("image", texts, self.inner.embed_for_image)
 
 
 class BackboneEmbedder:

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from jax import shard_map
+from repro.compat import shard_map
 
 
 def topk_similarity_ref(queries: jax.Array, db: jax.Array, db_valid: jax.Array,
@@ -65,7 +65,7 @@ def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(), spec_db, spec_db),
                    out_specs=(P(), P()),
-                   check_vma=False)  # replication holds post all-gather+merge
+                   check_replication=False)  # holds post all-gather+merge
     return fn(queries, db, db_valid)
 
 
@@ -74,3 +74,15 @@ def threshold_candidates(scores: jax.Array, idx: jax.Array, threshold: float
     """Apply the user's similarity threshold; below-threshold slots invalid."""
     ok = scores >= threshold
     return idx, ok
+
+
+def topk_prefix(scores, idx, k: int):
+    """Exact smaller top-k as a prefix of a larger one.
+
+    ``lax.top_k`` rows are sorted descending with index-order tie-breaking,
+    so the first ``k`` columns of a top-K result (K >= k) equal
+    ``top_k(..., k)`` exactly. The batched query path runs ONE fused top-K at
+    the batch-max k and derives each query's smaller-k view with this —
+    works on device arrays and host ndarrays alike.
+    """
+    return scores[..., :k], idx[..., :k]

@@ -1,2 +1,3 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.frontend import QueryFrontend, QueryTicket  # noqa: F401
 from repro.serving.scheduler import Scheduler, StragglerMitigator  # noqa: F401

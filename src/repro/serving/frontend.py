@@ -1,0 +1,104 @@
+"""Multi-query admission frontend for the LazyVLM engine.
+
+``QueryFrontend`` is the serving-side entry point for VMR queries: callers
+``submit`` a ``VMRQuery`` and get a ticket back; the frontend drains the
+queue in FIFO batches of up to ``max_admit`` through
+``LazyVLMEngine.query_batch`` — the same admission pattern ``Scheduler``
+uses for token requests. Batching is where the engine amortizes work across
+queries: one embedding call (with the host-side text cache), one fused
+top-k / selection / bitmap launch per stage, and one deduped VLM
+verification pass shared by every query in the batch.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional
+
+from repro.core.executor import LazyVLMEngine, QueryResult
+from repro.core.query import VMRQuery
+
+
+@dataclass
+class QueryTicket:
+    qid: int
+    query: VMRQuery
+    submitted_at: float
+    result: Optional[QueryResult] = None
+    done: bool = False
+    completed_at: Optional[float] = None
+    error: Optional[Exception] = None    # engine failure for this batch
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Queueing + execution seconds, once the ticket is done."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+
+class QueryFrontend:
+    def __init__(self, engine: LazyVLMEngine, *, max_admit: int = 8,
+                 max_finished: int = 4096):
+        self.engine = engine
+        self.max_admit = max_admit
+        self.waiting: Deque[QueryTicket] = deque()
+        # bounded history: callers hold their own tickets; this is only a
+        # recent-completions window, so a long-running frontend can't grow
+        # host memory without bound
+        self.finished: Deque[QueryTicket] = deque(maxlen=max_finished)
+        self.batches_run = 0
+        self._next_qid = 0
+
+    def submit(self, query: VMRQuery) -> QueryTicket:
+        # validate at admission so a malformed query fails its own submitter
+        # immediately instead of poisoning a whole execution batch
+        query.validate()
+        ticket = QueryTicket(self._next_qid, query, time.perf_counter())
+        self._next_qid += 1
+        self.waiting.append(ticket)
+        return ticket
+
+    def step(self) -> int:
+        """Admit one batch (up to ``max_admit`` waiting queries, arrival
+        order preserved) and execute it. Returns the batch size."""
+        if not self.waiting:
+            return 0
+        batch = [self.waiting.popleft()
+                 for _ in range(min(self.max_admit, len(self.waiting)))]
+        self._execute(batch)
+        return len(batch)
+
+    def _execute(self, batch: List[QueryTicket]) -> None:
+        try:
+            results = self.engine.query_batch([t.query for t in batch])
+        except Exception as exc:
+            # never strand tickets: an engine failure completes the whole
+            # batch with the error attached (result stays None)
+            now = time.perf_counter()
+            for ticket in batch:
+                ticket.error = exc
+                ticket.done = True
+                ticket.completed_at = now
+                self.finished.append(ticket)
+            self.batches_run += 1
+            raise
+        now = time.perf_counter()
+        for ticket, result in zip(batch, results):
+            ticket.result = result
+            ticket.done = True
+            ticket.completed_at = now
+            self.finished.append(ticket)
+        self.batches_run += 1
+
+    def drain(self) -> List[QueryTicket]:
+        """Run batches until the queue is empty; returns the tickets that
+        finished during THIS call (not the whole history)."""
+        out: List[QueryTicket] = []
+        while self.waiting:
+            batch = [self.waiting.popleft()
+                     for _ in range(min(self.max_admit, len(self.waiting)))]
+            self._execute(batch)
+            out += batch
+        return out

@@ -1,2 +1,3 @@
 from repro.video.synth import SyntheticWorld, WorldConfig, PREDICATES  # noqa: F401
 from repro.video.ingest import ingest, ingest_incremental  # noqa: F401
+from repro.video.workload import overlapping_queries  # noqa: F401

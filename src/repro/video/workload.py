@@ -1,0 +1,40 @@
+"""Canonical synthetic multi-query workloads.
+
+Shared by ``benchmarks/multi_query.py`` (which measures it) and
+``examples/batch_query.py`` (which demonstrates it) so the two can't drift
+apart.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.video.synth import PREDICATES, SyntheticWorld
+
+
+def overlapping_queries(world: SyntheticWorld) -> List[VMRQuery]:
+    """8 queries with realistic overlap: hot entities recur across queries
+    (think many users asking about the same scene), one duplicate query, and
+    one two-frame temporal chain."""
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    d0, d1, d2 = descs[0], descs[1], descs[min(2, len(descs) - 1)]
+
+    def single(da, db, rel):
+        return VMRQuery(
+            entities=(Entity("a", da), Entity("b", db)),
+            relationships=(Relationship("r", PREDICATES[rel]),),
+            frames=(FrameSpec((Triple("a", "r", "b"),)),),
+            top_k=16, text_threshold=0.9)
+
+    chain = VMRQuery(
+        entities=(Entity("a", d0), Entity("b", d1)),
+        relationships=(Relationship("r1", "near"),
+                       Relationship("r2", "left of")),
+        frames=(FrameSpec((Triple("a", "r1", "b"),)),
+                FrameSpec((Triple("a", "r2", "b"),))),
+        constraints=(TemporalConstraint(0, 1, min_gap=2),),
+        top_k=16, text_threshold=0.9)
+    return [single(d0, d1, 0), single(d0, d1, 1), single(d1, d0, 0),
+            single(d0, d2, 0), single(d2, d1, 2), single(d0, d1, 0),
+            chain, single(d1, d2, 0)]

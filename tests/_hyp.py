@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+``hypothesis`` is a declared dev dependency (see requirements.txt) but must
+not be a hard prerequisite for running the suite: when it is absent, every
+``@given`` test is skipped with a clear reason while the rest of the module
+still collects and runs. Test modules import ``given``/``settings``/``st``
+from here instead of from ``hypothesis`` directly.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategy:
+        """Stands in for any strategy expression at module-import time.
+
+        Strategy constructors (``st.lists(...)``) and combinators
+        (``.map``, ``.filter``) all return the stub itself, so module-level
+        strategy definitions evaluate without hypothesis installed; the
+        tests that would consume them are skipped by ``given``.
+        """
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _StubStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed; property-based test skipped")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

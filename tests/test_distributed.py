@@ -8,7 +8,7 @@ import textwrap
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.configs.base import ParallelConfig
@@ -72,9 +72,10 @@ def test_batch_axes_selection():
 def test_with_sharding_constraint_adapts_to_mesh():
     """Axes missing from the mesh or not dividing the dim are dropped."""
     import jax.numpy as jnp
+    from repro.compat import set_mesh
     from repro.models.common import with_sharding_constraint
     mesh = make_local_mesh()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         x = jnp.ones((3, 5))
         # "pod" doesn't exist; 3 % 1 == 0 fine; must not raise
         out = jax.jit(lambda a: with_sharding_constraint(
@@ -90,8 +91,8 @@ def test_ep_moe_matches_reference_8dev():
     from repro.models import model as M
     from repro.distributed import sharding as shd
     from repro.configs.base import ParallelConfig
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("qwen3-moe-235b-a22b", reduced_size=True)
     cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
         cfg.moe, num_experts=8, capacity_factor=8.0))
@@ -103,7 +104,7 @@ def test_ep_moe_matches_reference_8dev():
     params_s = jax.device_put(params, shd.to_named(mesh, pspecs))
     def loss(p, b):
         return M.train_loss(p, b, cfg, remat="none")[0]
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         os.environ["REPRO_MOE_EP"] = "0"
         l0 = float(jax.jit(loss)(params_s, batch))
         os.environ["REPRO_MOE_EP"] = "1"
@@ -123,12 +124,11 @@ def test_elastic_checkpoint_reshard_8dev():
     from repro.distributed import sharding as shd, elastic_reshard
     from repro.configs.base import ParallelConfig
     from repro.training import CheckpointManager
+    from repro.compat import make_mesh
     cfg = get_config("qwen1.5-0.5b", reduced_size=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh_a = make_mesh((4, 2), ("data", "model"))
+    mesh_b = make_mesh((2, 4), ("data", "model"))
     pa = jax.device_put(params, shd.to_named(
         mesh_a, shd.param_specs(cfg, mesh_a, ParallelConfig(), params)))
     d = tempfile.mkdtemp()

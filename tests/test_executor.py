@@ -1,0 +1,214 @@
+"""End-to-end pipeline tests for the executor's batched multi-query path:
+``query_batch`` must return per-query results identical to ``query``, dedupe
+VLM verification across queries, keep stats bookkeeping coherent, and the
+``QueryFrontend`` must drive it with FIFO admission."""
+import numpy as np
+import pytest
+
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.core.refine import MockVerifier
+from repro.semantic import OracleEmbedder
+from repro.serving import QueryFrontend
+from repro.video import PREDICATES, SyntheticWorld, WorldConfig, ingest
+
+
+@pytest.fixture(scope="module")
+def world():
+    # spurious noise so refinement has real work to do
+    return SyntheticWorld(WorldConfig(num_segments=6, frames_per_segment=32,
+                                      objects_per_segment=7, seed=5,
+                                      spurious_prob=0.3))
+
+
+@pytest.fixture(scope="module")
+def stores(world):
+    return ingest(world, OracleEmbedder(dim=64))
+
+
+def _descs(world):
+    return sorted({o.description for seg in world.segments for o in seg})
+
+
+def _single(da, db, rel, **kw):
+    base = dict(top_k=16, text_threshold=0.9)
+    base.update(kw)
+    return VMRQuery(entities=(Entity("a", da), Entity("b", db)),
+                    relationships=(Relationship("r", PREDICATES[rel]),),
+                    frames=(FrameSpec((Triple("a", "r", "b"),)),), **base)
+
+
+def _workload(world):
+    """A mixed batch: random single-triple queries, a temporal chain, the
+    paper's Example 2.1, an image-search query, and an empty-result query."""
+    descs = _descs(world)
+    rng = np.random.default_rng(0)
+    qs = []
+    for _ in range(5):
+        da, db = rng.choice(descs, 2, replace=False)
+        qs.append(_single(da, db, int(rng.integers(len(PREDICATES)))))
+    qs.append(VMRQuery(
+        entities=(Entity("a", descs[0]), Entity("b", descs[1])),
+        relationships=(Relationship("r1", "near"),
+                       Relationship("r2", "left of")),
+        frames=(FrameSpec((Triple("a", "r1", "b"),)),
+                FrameSpec((Triple("a", "r2", "b"),))),
+        constraints=(TemporalConstraint(0, 1, min_gap=3),),
+        top_k=16, text_threshold=0.9))
+    qs.append(example_2_1())
+    qs.append(_single(descs[0], descs[1], 0, top_k=8,
+                      image_search=True, image_threshold=0.9))
+    # nonsense entity text: no store row reaches the 0.9 threshold
+    qs.append(_single("xqzzt flibber", "vorpal snark", 0))
+    return qs
+
+
+def _assert_same(r_single, r_batch):
+    assert r_single.segments == r_batch.segments
+    assert r_single.scores == r_batch.scores
+    assert (r_single.end_frames == r_batch.end_frames).all()
+    assert r_single.sql == r_batch.sql
+
+
+def test_query_batch_equals_query(world, stores):
+    emb = OracleEmbedder(dim=64)
+    queries = _workload(world)
+    seq_engine = LazyVLMEngine(stores, emb)
+    batch_engine = LazyVLMEngine(stores, emb)
+    seq = [seq_engine.query(q) for q in queries]
+    batch = batch_engine.query_batch(queries)
+    assert len(batch) == len(queries)
+    for r1, r2 in zip(seq, batch):
+        _assert_same(r1, r2)
+
+
+def test_query_batch_equals_query_with_verifier(world, stores):
+    emb = OracleEmbedder(dim=64)
+    queries = _workload(world)
+    seq_engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    batch_engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    seq = [seq_engine.query(q) for q in queries]
+    batch = batch_engine.query_batch(queries)
+    for r1, r2 in zip(seq, batch):
+        _assert_same(r1, r2)
+        # per-query refinement bookkeeping matches the single-query path
+        assert r1.stats.refine_candidates == r2.stats.refine_candidates
+        assert r1.stats.refine_passed == r2.stats.refine_passed
+
+
+def test_singleton_batch_equals_query(world, stores):
+    emb = OracleEmbedder(dim=64)
+    engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    for q in _workload(world):
+        _assert_same(engine.query(q), engine.query_batch([q])[0])
+
+
+def test_cross_query_dedupe_reduces_vlm_calls(world, stores):
+    """Overlapping queries share candidate rows: the batch path must verify
+    each unique row once, so it issues strictly fewer VLM calls than the
+    sequential loop."""
+    emb = OracleEmbedder(dim=64)
+    descs = _descs(world)
+    queries = [_single(descs[0], descs[1], 0),
+               _single(descs[0], descs[1], 0),     # duplicate query
+               _single(descs[0], descs[1], 1),
+               _single(descs[1], descs[0], 0)]
+    seq_engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    batch_engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    seq = [seq_engine.query(q) for q in queries]
+    batch = batch_engine.query_batch(queries)
+    for r1, r2 in zip(seq, batch):
+        _assert_same(r1, r2)
+    assert seq_engine.verifier.calls > 0
+    assert batch_engine.verifier.calls < seq_engine.verifier.calls
+    # stats expose the shared (batch-cumulative) call count
+    assert all(r.stats.vlm_calls == batch_engine.verifier.calls
+               for r in batch if r.stats.refine_candidates)
+
+
+def test_embedding_cache_amortizes_repeats(world, stores):
+    """Repeated texts across queries hit the host-side embedding cache."""
+    emb = OracleEmbedder(dim=64)
+    descs = _descs(world)
+    engine = LazyVLMEngine(stores, emb)
+    engine.query_batch([_single(descs[0], descs[1], 0)])
+    misses_before = engine._embed.misses
+    engine.query_batch([_single(descs[1], descs[0], 0),
+                        _single(descs[0], descs[1], 0)])
+    assert engine._embed.misses == misses_before  # all texts cached
+    assert engine._embed.hits > 0
+
+
+def test_empty_result_query(world, stores):
+    emb = OracleEmbedder(dim=64)
+    engine = LazyVLMEngine(stores, emb)
+    q = _single("xqzzt flibber", "vorpal snark", 0)
+    res = engine.query_batch([q])[0]
+    assert res.segments == [] and res.scores == []
+    assert not res.end_frames.any()
+    assert res.stats.entity_candidates == {"a": 0, "b": 0}
+
+
+def test_query_batch_empty_list(world, stores):
+    assert LazyVLMEngine(stores, OracleEmbedder(dim=64)).query_batch([]) == []
+
+
+def test_stats_bookkeeping_per_query(world, stores):
+    emb = OracleEmbedder(dim=64)
+    engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    queries = _workload(world)
+    results = engine.query_batch(queries)
+    for q, r in zip(queries, results):
+        assert set(r.stats.entity_candidates) == {e.name for e in q.entities}
+        assert len(r.stats.sql_rows_per_triple) == len(q.all_triples())
+        assert len(r.sql) == len(q.all_triples())
+        assert r.stats.frames_scanned_equivalent == (
+            stores.num_segments * stores.frames_per_segment)
+        assert r.stats.stage_seconds.keys() >= {"entity_match", "symbolic",
+                                                "refine", "temporal"}
+
+
+def test_frontend_rejects_invalid_query_at_submit(world, stores):
+    """A malformed query must fail its own submitter, not poison a batch."""
+    engine = LazyVLMEngine(stores, OracleEmbedder(dim=64))
+    frontend = QueryFrontend(engine)
+    good = frontend.submit(_single(_descs(world)[0], _descs(world)[1], 0))
+    bad = VMRQuery(entities=(Entity("a", "x"),), relationships=(),
+                   frames=(FrameSpec((Triple("a", "nope", "a"),)),))
+    with pytest.raises(AssertionError):
+        frontend.submit(bad)
+    frontend.drain()
+    assert good.done and good.error is None and good.result is not None
+
+
+def test_frontend_engine_failure_completes_tickets(world, stores):
+    """An engine exception mid-batch must not strand tickets undone."""
+
+    class Boom(LazyVLMEngine):
+        def query_batch(self, queries):
+            raise RuntimeError("boom")
+
+    frontend = QueryFrontend(Boom(stores, OracleEmbedder(dim=64)))
+    t = frontend.submit(_single(_descs(world)[0], _descs(world)[1], 0))
+    with pytest.raises(RuntimeError):
+        frontend.drain()
+    assert t.done and t.result is None
+    assert isinstance(t.error, RuntimeError)
+
+
+def test_frontend_fifo_batching(world, stores):
+    emb = OracleEmbedder(dim=64)
+    engine = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    frontend = QueryFrontend(engine, max_admit=4)
+    queries = _workload(world)
+    tickets = [frontend.submit(q) for q in queries]
+    finished = frontend.drain()
+    assert len(finished) == len(queries)
+    assert [t.qid for t in finished] == [t.qid for t in tickets]  # FIFO
+    assert frontend.batches_run == -(-len(queries) // 4)  # ceil division
+    reference = LazyVLMEngine(stores, emb,
+                              verifier=MockVerifier(world))
+    for t in tickets:
+        assert t.done and t.latency is not None
+        _assert_same(reference.query(t.query), t.result)

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig, MoEConfig
@@ -93,12 +93,12 @@ def test_ep_path_matches_reference_single_device():
     p = moe_lib.init_moe(key, cfg)
     x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model)
                           ).astype(jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     ref, _ = moe_lib.moe_layer(p, x, cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ep, _ = jax.jit(lambda p, x: moe_ep.moe_layer_ep(
-            p, x, cfg, jax.sharding.get_abstract_mesh()))(p, x)
+            p, x, cfg, mesh))(p, x)
     np.testing.assert_allclose(np.asarray(ref, np.float32),
                                np.asarray(ep, np.float32),
                                rtol=2e-2, atol=2e-2)

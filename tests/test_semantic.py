@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.semantic import (BackboneEmbedder, HashTokenizer, OracleEmbedder,
                             sharded_topk_similarity, topk_similarity)
@@ -55,8 +55,8 @@ def test_topk_excludes_invalid_rows():
 
 
 def test_sharded_topk_matches_single_device():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (4, 32))
     db = jax.random.normal(jax.random.PRNGKey(1), (256, 32))

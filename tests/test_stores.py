@@ -1,0 +1,131 @@
+"""Store-layer tests: golden SQL rendering and incremental-append invariants
+(property-based where hypothesis is available, deterministic otherwise)."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core.executor import render_sql
+from repro.core.stores import (REL_SCHEMA, append_entities,
+                               append_relationships, build_entity_store,
+                               build_relationship_store)
+
+
+# ---------------------------------------------------------------------------
+# render_sql goldens
+# ---------------------------------------------------------------------------
+GOLDEN_SQL = (
+    "SELECT vid, fid FROM relationships\n"
+    "  WHERE (vid, sid) IN ((0,1), (2,3))\n"
+    "    AND (vid, oid) IN ((1,4))\n"
+    "    AND rl IN ('near', 'left of')  -- triple 2"
+)
+
+
+def test_render_sql_golden():
+    out = render_sql(2, [(0, 1), (2, 3)], [(1, 4)], [0, 1],
+                     ["near", "left of", "right of"])
+    assert out == GOLDEN_SQL
+
+
+def test_render_sql_golden_numpy_inputs():
+    """Device/host integer types must render identically to Python ints."""
+    subj = [(np.int32(0), np.int32(1)), (np.int32(2), np.int32(3))]
+    obj = [(np.int32(1), np.int32(4))]
+    out = render_sql(2, subj, obj, np.array([0, 1]),
+                     ["near", "left of", "right of"])
+    assert out == GOLDEN_SQL
+
+
+def test_render_sql_truncates_after_eight_pairs():
+    many = [(v, 0) for v in range(10)]
+    out = render_sql(0, many, [(0, 0)], [0], ["near"])
+    subj_line = out.splitlines()[1]
+    # "(vid, sid)" + IN-opening paren + exactly 8 rendered pairs
+    assert subj_line.count("(") == 2 + 8
+    assert ", ..." in subj_line
+    assert "(8,0)" not in subj_line and "(9,0)" not in subj_line
+    obj_line = out.splitlines()[2]
+    assert "..." not in obj_line             # exactly-one pair: no ellipsis
+
+
+def test_render_sql_no_ellipsis_at_eight_pairs():
+    out = render_sql(0, [(v, 0) for v in range(8)], [(0, 0)], [0], ["near"])
+    assert "..." not in out.splitlines()[1]
+
+
+# ---------------------------------------------------------------------------
+# append invariants
+# ---------------------------------------------------------------------------
+def _entity_store(n, capacity, dim=8, seed=0):
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n, dim)).astype(np.float32)
+    return build_entity_store(np.arange(n), np.arange(n) % 5,
+                              emb, emb, capacity)
+
+
+def _rel_rows(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 7, size=(n, 5)).astype(np.int32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n0=st.integers(1, 6), n1=st.integers(1, 6))
+def test_append_entities_preserves_existing_rows(n0, n1):
+    store = _entity_store(n0, capacity=16)
+    before_vid = np.asarray(store.table["vid"])[:n0].copy()
+    before_emb = np.asarray(store.text_emb)[:n0].copy()
+    rng = np.random.default_rng(7)
+    emb_new = rng.standard_normal((n1, 8)).astype(np.float32)
+    out = append_entities(store, np.arange(n1) + 100, np.arange(n1),
+                          emb_new, emb_new)
+    assert int(np.asarray(out.table.count())) == n0 + n1
+    np.testing.assert_array_equal(np.asarray(out.table["vid"])[:n0],
+                                  before_vid)
+    np.testing.assert_array_equal(np.asarray(out.text_emb)[:n0], before_emb)
+    np.testing.assert_array_equal(
+        np.asarray(out.table["vid"])[n0: n0 + n1], np.arange(n1) + 100)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n0=st.integers(1, 6), n1=st.integers(1, 6))
+def test_append_relationships_preserves_existing_rows(n0, n1):
+    store = build_relationship_store(_rel_rows(n0), capacity=16)
+    before = {k: np.asarray(store.table[k])[:n0].copy() for k in REL_SCHEMA}
+    new = _rel_rows(n1, seed=9)
+    out = append_relationships(store, new)
+    assert int(np.asarray(out.table.count())) == n0 + n1
+    for i, k in enumerate(REL_SCHEMA):
+        np.testing.assert_array_equal(np.asarray(out.table[k])[:n0],
+                                      before[k])
+        np.testing.assert_array_equal(
+            np.asarray(out.table[k])[n0: n0 + n1], new[:, i])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n0=st.integers(0, 8), extra=st.integers(1, 4))
+def test_append_entities_overflow_raises(n0, extra):
+    capacity = 8
+    store = _entity_store(max(n0, 1), capacity) if n0 else \
+        _entity_store(1, capacity)
+    used = max(n0, 1)
+    n_new = capacity - used + extra
+    rng = np.random.default_rng(3)
+    emb = rng.standard_normal((n_new, 8)).astype(np.float32)
+    with pytest.raises(ValueError):
+        append_entities(store, np.arange(n_new), np.arange(n_new), emb, emb)
+
+
+def test_append_relationships_overflow_raises():
+    store = build_relationship_store(_rel_rows(6), capacity=8)
+    with pytest.raises(ValueError):
+        append_relationships(store, _rel_rows(3))
+
+
+def test_build_overflow_raises():
+    with pytest.raises(ValueError):
+        build_relationship_store(_rel_rows(9), capacity=8)
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((9, 8)).astype(np.float32)
+    with pytest.raises(ValueError):
+        build_entity_store(np.arange(9), np.arange(9), emb, emb, capacity=8)

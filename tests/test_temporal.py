@@ -1,7 +1,7 @@
 """Property tests: vectorized temporal DP vs brute-force chain search."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.query import (Entity, FrameSpec, Relationship,
                               TemporalConstraint, Triple, VMRQuery)
