@@ -12,8 +12,10 @@ import time
 
 from repro.core import LazyVLMEngine
 from repro.core.refine import MockVerifier
+from repro.lang import format_query
 from repro.semantic import OracleEmbedder
 from repro.serving import QueryFrontend
+from repro.session import open_video_store
 from repro.video import (SyntheticWorld, WorldConfig, ingest,
                          overlapping_queries)
 
@@ -26,10 +28,14 @@ def main():
     stores = ingest(world, embedder)
     queries = overlapping_queries(world)
 
-    print(f"Submitting {len(queries)} queries to the frontend ...")
-    engine = LazyVLMEngine(stores, embedder, verifier=MockVerifier(world))
-    frontend = QueryFrontend(engine, max_admit=8)
-    tickets = [frontend.submit(q) for q in queries]
+    print(f"Submitting {len(queries)} queries to the frontend "
+          f"(as query-language text) ...")
+    session = open_video_store(stores, embedder,
+                               verifier=MockVerifier(world))
+    engine = session.engine
+    frontend = QueryFrontend(session, max_admit=8)
+    # text round-trip on the way in: the frontend parses each submission
+    tickets = [frontend.submit(format_query(q)) for q in queries]
     t0 = time.perf_counter()
     frontend.drain()
     t_batch = time.perf_counter() - t0
@@ -54,6 +60,8 @@ def main():
           f"{seq_engine.verifier.calls} VLM calls")
     print(f"embedding cache: {engine._embed.hits} hits / "
           f"{engine._embed.misses} misses")
+    print(f"plan cache:      {session.plan_cache.hits} hits / "
+          f"{session.plan_cache.misses} misses")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Quickstart: drop in a video, ask for a moment, get segments back.
+"""Quickstart: drop in a video, ask in the query language, get segments.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -7,11 +7,9 @@ the ground-truth mock verifier, so it runs in seconds on CPU.
 """
 import numpy as np
 
-from repro.core import LazyVLMEngine
-from repro.core.query import (Entity, FrameSpec, Relationship, Triple,
-                              VMRQuery)
 from repro.core.refine import MockVerifier
 from repro.semantic import OracleEmbedder
+from repro.session import open_video_store
 from repro.video import SyntheticWorld, WorldConfig, ingest
 
 
@@ -26,7 +24,8 @@ def main():
           f"{int(np.asarray(stores.relationships.table.count()))} "
           f"relationship rows")
 
-    # 2. Compose a query: pick a "near" pair that actually occurs somewhere.
+    # 2. Compose a query: pick a "near" pair that actually occurs somewhere,
+    #    then write it in the semi-structured text language.
     from collections import Counter
     pair_counts = Counter()
     for vid in range(world.cfg.num_segments):
@@ -37,23 +36,38 @@ def main():
                     pair_counts[(objs[s].description,
                                  objs[o].description)] += 1
     (a, b), _ = pair_counts.most_common(1)[0]
-    print(f"query: find a frame where '{a}' is near '{b}'")
-    query = VMRQuery(
-        entities=(Entity("a", a), Entity("b", b)),
-        relationships=(Relationship("r", "near"),),
-        frames=(FrameSpec((Triple("a", "r", "b"),)),),
-        top_k=16, text_threshold=0.9)
+    text = f"""
+    ENTITIES:
+      a: {a}
+      b: {b}
 
-    # 3. Execute.
-    engine = LazyVLMEngine(stores, embedder,
-                           verifier=MockVerifier(world))
-    result = engine.query(query)
-    print("generated SQL:\n" + result.sql[0])
+    RELATIONSHIPS:
+      r: near
+
+    FRAMES:
+      f0: (a r b)
+
+    OPTIONS:
+      text_threshold = 0.9
+    """
+    print(f"query: find a frame where '{a}' is near '{b}'")
+
+    # 3. Open a session and execute.
+    session = open_video_store(stores, embedder,
+                               verifier=MockVerifier(world))
+    print("\nEXPLAIN:")
+    print(session.explain(text))
+    result = session.query(text)
+    print(f"\nexecuted SQL:\n{result.sql[0]}")
     print(f"matched segments: {result.segments} (scores {result.scores})")
     print(f"stage seconds: { {k: round(v, 4) for k, v in result.stats.stage_seconds.items()} }")
     print(f"VLM verified {result.stats.refine_candidates} candidate frames "
           f"out of {world.cfg.num_segments * world.cfg.frames_per_segment} "
           f"total — that's the 'lazy' in LazyVLM.")
+    # a repeat query compiles nothing: the plan cache serves it
+    session.query(text)
+    print(f"plan cache after repeat: {session.plan_cache.hits} hit(s), "
+          f"{session.plan_cache.misses} miss(es)")
 
 
 if __name__ == "__main__":

@@ -13,14 +13,13 @@ and pass --ckpt to use it; or pass --mock for the ground-truth oracle.
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
-from repro.core import LazyVLMEngine, example_2_1
 from repro.core.refine import MockVerifier, VLMVerifier
+from repro.lang import EXAMPLE_2_1_TEXT
 from repro.semantic import OracleEmbedder
+from repro.session import open_video_store
 from repro.video import SyntheticWorld, WorldConfig, ingest
-from repro.video.synth import ACCESSORIES, CATEGORIES, SyntheticWorld
 
 
 def build_world_with_event(seed: int = 0) -> SyntheticWorld:
@@ -49,13 +48,9 @@ def main():
     print(f"  {stores.num_segments} segments x "
           f"{stores.frames_per_segment} frames")
 
-    print("Step 2-5: entities, relationships, triples, frames, constraint")
-    query = example_2_1(min_gap_frames=5)
-    for e in query.entities:
-        print(f"  entity {e.name}: {e.text!r}")
-    for r in query.relationships:
-        print(f"  relationship {r.name}: {r.text!r}")
-    print(f"  frames: {len(query.frames)}, constraint: f1 - f0 > 4")
+    print("Step 2-5: the query, in the semi-structured text language")
+    for line in EXAMPLE_2_1_TEXT.splitlines():
+        print("  |", line)
 
     if args.mock:
         verifier = MockVerifier(world)
@@ -71,9 +66,11 @@ def main():
         verifier = VLMVerifier(cfg, params, world=world,
                                entity_desc=stores.entity_desc, batch_size=8)
 
-    print("Step 6: query execution")
-    engine = LazyVLMEngine(stores, embedder, verifier=verifier)
-    result = engine.query(query)
+    print("Step 6: EXPLAIN, then query execution")
+    session = open_video_store(stores, embedder, verifier=verifier)
+    for line in str(session.explain(EXAMPLE_2_1_TEXT)).splitlines():
+        print("  ", line)
+    result = session.query(EXAMPLE_2_1_TEXT)
     print("  generated SQL (triple 0):")
     for line in result.sql[0].splitlines():
         print("   ", line)

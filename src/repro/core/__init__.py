@@ -1,5 +1,6 @@
-from repro.core.query import (Entity, FrameSpec, Relationship,  # noqa: F401
-                              TemporalConstraint, Triple, VMRQuery,
-                              example_2_1)
+from repro.core.query import (Entity, FrameSpec, QueryValidationError,  # noqa: F401
+                              Relationship, TemporalConstraint, Triple,
+                              VMRQuery, example_2_1)
+from repro.core.plan import (Plan, PlanCache, compile_plan)  # noqa: F401
 from repro.core.executor import (LazyVLMEngine, QueryResult,  # noqa: F401
                                  QueryStats)

@@ -1,6 +1,14 @@
 """The LazyVLM query engine (Section 2.3, Figure 1).
 
-Pipeline per query:
+Queries enter as ``VMRQuery`` objects (or, through ``repro.session``, as
+semi-structured text) and are first **compiled to a logical plan**
+(:mod:`repro.core.plan`): typed nodes for every pipeline stage, with the
+optimizer passes — cross-frame triple dedupe, shared-entity embed reuse,
+static capacity/bucket selection — run once at compile time. Plans are
+cached by query signature, so repeat and structurally identical queries
+skip compilation (and re-use the already-traced fused programs) entirely.
+
+Execution of a plan:
   1. Entity Matching        — batched vector top-k over the Entity Store
   2. SQL Query Generation   — each SPO triple compiles to a conjunctive SELECT
                               over the Relationship Store (rendered as real SQL
@@ -16,16 +24,17 @@ triples — the TPU-idiomatic reading of the paper's stage parallelism.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import (EntityMatch, Plan, PlanCache, PredicateMatch,
+                             pow2_bucket)
 from repro.core.query import VMRQuery
 from repro.core.stores import REL_SCHEMA, VideoStores
 from repro.core import temporal as temporal_lib
@@ -125,18 +134,6 @@ def _conjoin_bitmaps(bitmaps, idx, pad):
     return sel.all(axis=1)
 
 
-def _pow2_bucket(n: int, minimum: int = 4) -> int:
-    """Pad a batch-dependent dimension to a power-of-two bucket so the fused
-    programs are compiled once per bucket tier, not once per batch shape.
-    Applied to the flattened triple count AND the candidate/predicate/triple
-    widths — padding slots carry all-False validity masks and select
-    nothing."""
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
-
-
 # ---------------------------------------------------------------------------
 # SQL rendering (the paper's "SQL Query Generation" artifact)
 # ---------------------------------------------------------------------------
@@ -160,7 +157,8 @@ def render_sql(triple_idx: int, subj_pairs, obj_pairs, pred_ids,
 class LazyVLMEngine:
     def __init__(self, stores: VideoStores, embedder, verifier=None, *,
                  mesh=None, use_kernels: bool = False,
-                 embed_cache_entries: int = 4096):
+                 embed_cache_entries: int = 4096,
+                 plan_cache_entries: int = 256):
         self.stores = stores
         self.embedder = embedder
         # host-side text->embedding memo; both the single-query and the
@@ -171,6 +169,15 @@ class LazyVLMEngine:
         self.verifier = verifier          # None => trust the symbolic stage
         self.mesh = mesh
         self.use_kernels = use_kernels
+        # query-signature -> compiled Plan (repeat queries skip compilation)
+        self.plan_cache = PlanCache(max_entries=plan_cache_entries)
+
+    # -- compilation -------------------------------------------------------
+    def plan_for(self, query: VMRQuery) -> Plan:
+        """Compile ``query`` to a :class:`Plan` through the plan cache."""
+        plan, _ = self.plan_cache.lookup(query, self.stores,
+                                         verify=self.verifier is not None)
+        return plan
 
     # -- stage 1: entity + predicate matching --------------------------------
     def _search(self, q_emb, emb, valid, k):
@@ -179,72 +186,79 @@ class LazyVLMEngine:
                                            use_kernels=self.use_kernels)
         return _entity_match(q_emb, emb, valid, k)
 
-    def _match_entities(self, query: VMRQuery, stats: QueryStats):
-        texts = query.entity_texts
-        q_emb = jnp.asarray(self._embed.embed_texts(texts))
+    def _match_entities(self, em: EntityMatch, stats: QueryStats):
+        """Candidates per unique entity text (``em.rows`` maps entities to
+        rows); duplicate texts share one embedding row and one search row —
+        the plan's embed-reuse pass."""
+        q_emb = jnp.asarray(self._embed.embed_texts(list(em.texts)))
         ent = self.stores.entities
-        k = min(query.top_k, ent.capacity)
-        scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid, k)
-        ok = scores >= query.text_threshold
-        if query.image_search:
+        scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid,
+                                   em.k)
+        ok = scores >= em.text_threshold
+        if em.image_search:
             # dual-store matching (ete AND eie, Section 2.2): candidates are
             # the union; duplicate (vid,eid) pairs are harmless under the
             # semi-join's set semantics.
-            qi = jnp.asarray(self._embed.embed_for_image(texts))
+            qi = jnp.asarray(self._embed.embed_for_image(list(em.texts)))
             iscores, iidx = self._search(qi, ent.image_emb, ent.table.valid,
-                                         k)
-            iok = iscores >= query.image_threshold
+                                         em.k)
+            iok = iscores >= em.image_threshold
             idx = jnp.concatenate([idx, iidx], axis=1)
             ok = jnp.concatenate([ok, iok], axis=1)
         vids = ent.table["vid"][jnp.clip(idx, 0, ent.capacity - 1)]
         eids = ent.table["eid"][jnp.clip(idx, 0, ent.capacity - 1)]
-        for name, row_ok in zip([e.name for e in query.entities],
-                                np.asarray(ok)):
-            stats.entity_candidates[name] = int(row_ok.sum())
-        return vids, eids, ok  # each (E, k) or (E, 2k) with image search
+        ok_np = np.asarray(ok)
+        for name, row in zip(em.names, em.rows):
+            stats.entity_candidates[name] = int(ok_np[row].sum())
+        return vids, eids, ok  # each (U, k) or (U, 2k) with image search
 
-    def _match_predicates(self, query: VMRQuery):
-        texts = query.relationship_texts
-        q_emb = jnp.asarray(self._embed.embed_texts(texts))
+    def _match_predicates(self, pm: PredicateMatch):
+        q_emb = jnp.asarray(self._embed.embed_texts(list(pm.texts)))
         sims = _predicate_match(q_emb, jnp.asarray(
-            self.stores.predicates.embeddings))     # (R, P)
-        m = min(query.predicate_top_m, sims.shape[1])
-        vals, ids = jax.lax.top_k(sims, m)
-        ok = vals >= query.text_threshold
+            self.stores.predicates.embeddings))     # (U, P)
+        vals, ids = jax.lax.top_k(sims, pm.m)
+        ok = vals >= pm.threshold
         # always keep the argmax label even if below threshold
         ok = ok.at[:, 0].set(True)
-        return ids, ok                                # (R, m)
+        return ids, ok                                # (U, m)
 
     # -- the full pipeline ------------------------------------------------------
     def query(self, query: VMRQuery) -> QueryResult:
-        query.validate()
+        """Compile (with plan-cache) and execute one query."""
+        return self.execute(self.plan_for(query))
+
+    def execute(self, plan: Plan) -> QueryResult:
         stats = QueryStats()
         st = self.stores
         rel = st.relationships.table
         t0 = time.perf_counter()
 
-        vids, eids, ent_ok = self._match_entities(query, stats)
-        pred_ids, pred_ok = self._match_predicates(query)
-        ent_index = {e.name: i for i, e in enumerate(query.entities)}
-        rel_index = {r.name: i for i, r in enumerate(query.relationships)}
+        vids, eids, ent_ok = self._match_entities(plan.entity_match, stats)
+        pred_ids, pred_ok = self._match_predicates(plan.predicate_match)
         stats.stage_seconds["entity_match"] = time.perf_counter() - t0
 
         # -- stage 2+3a: all triples in one fused selection -------------------
         t0 = time.perf_counter()
-        triples = query.all_triples()
-        sv = jnp.stack([vids[ent_index[t.subject]] for t in triples])
-        se = jnp.stack([eids[ent_index[t.subject]] for t in triples])
-        so = jnp.stack([ent_ok[ent_index[t.subject]] for t in triples])
-        ov = jnp.stack([vids[ent_index[t.object]] for t in triples])
-        oe = jnp.stack([eids[ent_index[t.object]] for t in triples])
-        oo = jnp.stack([ent_ok[ent_index[t.object]] for t in triples])
-        pi = jnp.stack([pred_ids[rel_index[t.predicate]] for t in triples])
-        po = jnp.stack([pred_ok[rel_index[t.predicate]] for t in triples])
+        ts = plan.triple_select
+        n_triples = len(ts.triples)
+        srow = np.asarray(ts.subj_row, np.int32)
+        orow = np.asarray(ts.obj_row, np.int32)
+        prow = np.asarray(ts.pred_row, np.int32)
+        pad = ts.bucket - n_triples      # static bucket: programs re-used
+                                         # across queries of different sizes
+
+        def gather_pad(arr, rows):
+            g = arr[jnp.asarray(rows)]
+            return jnp.pad(g, ((0, pad), (0, 0))) if pad else g
+
+        sv, se, so = (gather_pad(a, srow) for a in (vids, eids, ent_ok))
+        ov, oe, oo = (gather_pad(a, orow) for a in (vids, eids, ent_ok))
+        pi, po = gather_pad(pred_ids, prow), gather_pad(pred_ok, prow)
         masks = _triple_selections(
             rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
-            rel.valid, sv, se, so, ov, oe, oo, pi, po)     # (T, cap)
-        stats.sql_rows_per_triple = [int(x) for x in
-                                     np.asarray(masks.sum(axis=1))]
+            rel.valid, sv, se, so, ov, oe, oo, pi, po)    # (bucket, cap)
+        stats.sql_rows_per_triple = [
+            int(x) for x in np.asarray(masks[:n_triples].sum(axis=1))]
         sql = [render_sql(i,
                           list(zip(np.asarray(sv[i])[np.asarray(so[i])],
                                    np.asarray(se[i])[np.asarray(so[i])])),
@@ -252,12 +266,12 @@ class LazyVLMEngine:
                                    np.asarray(oe[i])[np.asarray(oo[i])])),
                           np.asarray(pi[i])[np.asarray(po[i])],
                           st.predicates.labels)
-               for i in range(len(triples))]
+               for i in range(n_triples)]
         stats.stage_seconds["symbolic"] = time.perf_counter() - t0
 
         # -- stage 3b: lazy VLM refinement ------------------------------------
         t0 = time.perf_counter()
-        if self.verifier is not None:
+        if plan.verify.enabled and self.verifier is not None:
             masks = self._refine(rel, masks, stats)
         stats.stage_seconds["refine"] = time.perf_counter() - t0
 
@@ -265,15 +279,12 @@ class LazyVLMEngine:
         t0 = time.perf_counter()
         bitmaps = _masks_to_bitmaps(rel["vid"], rel["fid"], masks,
                                     st.num_segments, st.frames_per_segment)
-        triple_of = {t: i for i, t in enumerate(triples)}
-        frame_maps = []
-        for f in query.frames:
-            bm = jnp.ones((st.num_segments, st.frames_per_segment), bool)
-            for t in f.triples:
-                bm &= bitmaps[triple_of[t]]
-            frame_maps.append(bm)
-        seg_hits, ends = temporal_lib.temporal_match(frame_maps, query)
-        scores, seg_ids = temporal_lib.rank_segments(ends, query.top_k)
+        fmaps = _conjoin_bitmaps(
+            bitmaps, jnp.asarray(np.asarray(plan.conjoin.idx, np.int32)),
+            jnp.asarray(np.asarray(plan.conjoin.pad)))     # (n_frames, V, F)
+        reach = temporal_lib.chain_reach(fmaps, plan.temporal.gaps)
+        scores, seg_ids = temporal_lib.rank_segments(reach,
+                                                     plan.temporal.top_k)
         stats.stage_seconds["temporal"] = time.perf_counter() - t0
 
         scores_np = np.asarray(scores)
@@ -284,85 +295,94 @@ class LazyVLMEngine:
         return QueryResult(
             segments=[int(v) for v in segs_np[keep]],
             scores=[int(s) for s in scores_np[keep]],
-            end_frames=np.asarray(ends),
+            end_frames=np.asarray(reach),
             sql=sql,
             stats=stats,
         )
 
     # -- batched multi-query path -------------------------------------------------
-    def _match_entities_batch(self, queries: List[VMRQuery],
+    def _match_entities_batch(self, plans: List[Plan],
                               stats: List[QueryStats]):
         """Entity matching for a whole batch: ONE ``embed_texts`` call over
-        every query's entity texts (through the host-side cache) and ONE
-        fused top-k launch at the batch-max k; each query's smaller-k view is
-        an exact prefix (``topk_prefix``). Returns per query
-        ``(vids, eids, ok)`` host arrays of shape (E_q, width_q)."""
+        every plan's (deduped) entity texts (through the host-side cache)
+        and ONE fused top-k launch at the batch-max k; each query's
+        smaller-k view is an exact prefix (``topk_prefix``). Returns per
+        plan ``(vids, eids, ok)`` host arrays of shape (U_q, width_q), rows
+        per unique entity text."""
         ent = self.stores.entities
         cap = ent.capacity
-        texts = [t for q in queries for t in q.entity_texts]
-        offs = np.cumsum([0] + [len(q.entities) for q in queries])
+        texts = [t for p in plans for t in p.entity_match.texts]
+        offs = np.cumsum([0] + [len(p.entity_match.texts) for p in plans])
         q_emb = jnp.asarray(self._embed.embed_texts(texts))
-        kmax = min(max(q.top_k for q in queries), cap)
+        kmax = max(p.entity_match.k for p in plans)   # capacity-clamped
         scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid, kmax)
         scores_np, idx_np = np.asarray(scores), np.asarray(idx)
 
-        img_qids = [i for i, q in enumerate(queries) if q.image_search]
-        if img_qids:
-            img_texts = [t for i in img_qids for t in queries[i].entity_texts]
+        img_pids = [i for i, p in enumerate(plans)
+                    if p.entity_match.image_search]
+        if img_pids:
+            img_texts = [t for i in img_pids
+                         for t in plans[i].entity_match.texts]
             img_offs = np.cumsum(
-                [0] + [len(queries[i].entities) for i in img_qids])
+                [0] + [len(plans[i].entity_match.texts) for i in img_pids])
             qi_emb = jnp.asarray(self._embed.embed_for_image(img_texts))
-            kimax = min(max(queries[i].top_k for i in img_qids), cap)
+            kimax = max(plans[i].entity_match.k for i in img_pids)
             iscores, iidx = self._search(qi_emb, ent.image_emb,
                                          ent.table.valid, kimax)
             iscores_np, iidx_np = np.asarray(iscores), np.asarray(iidx)
-        img_pos = {qid: j for j, qid in enumerate(img_qids)}
+        img_pos = {qid: j for j, qid in enumerate(img_pids)}
 
         vid_col = np.asarray(ent.table["vid"])
         eid_col = np.asarray(ent.table["eid"])
         out = []
-        for qi, q in enumerate(queries):
-            k = min(q.top_k, cap)
+        for qi, p in enumerate(plans):
+            em = p.entity_match
             sl = slice(offs[qi], offs[qi + 1])
-            s_q, idx_q = topk_prefix(scores_np[sl], idx_np[sl], k)
-            ok_q = s_q >= q.text_threshold
-            if q.image_search:
+            s_q, idx_q = topk_prefix(scores_np[sl], idx_np[sl], em.k)
+            ok_q = s_q >= em.text_threshold
+            if em.image_search:
                 j = img_pos[qi]
                 isl = slice(img_offs[j], img_offs[j + 1])
-                is_q, ii_q = topk_prefix(iscores_np[isl], iidx_np[isl], k)
+                is_q, ii_q = topk_prefix(iscores_np[isl], iidx_np[isl], em.k)
                 idx_q = np.concatenate([idx_q, ii_q], axis=1)
-                ok_q = np.concatenate([ok_q, is_q >= q.image_threshold],
+                ok_q = np.concatenate([ok_q, is_q >= em.image_threshold],
                                       axis=1)
             ci = np.clip(idx_q, 0, cap - 1)
-            for name, row_ok in zip([e.name for e in q.entities], ok_q):
-                stats[qi].entity_candidates[name] = int(row_ok.sum())
+            for name, row in zip(em.names, em.rows):
+                stats[qi].entity_candidates[name] = int(ok_q[row].sum())
             out.append((vid_col[ci], eid_col[ci], ok_q))
         return out
 
-    def _match_predicates_batch(self, queries: List[VMRQuery]):
+    def _match_predicates_batch(self, plans: List[Plan]):
         """Predicate matching for a whole batch as one einsum + one top-k
-        launch. Returns per query ``(pred_ids, ok)`` host arrays."""
-        texts = [t for q in queries for t in q.relationship_texts]
-        offs = np.cumsum([0] + [len(q.relationships) for q in queries])
+        launch. Returns per plan ``(pred_ids, ok)`` host arrays (rows per
+        unique relationship text)."""
+        texts = [t for p in plans for t in p.predicate_match.texts]
+        offs = np.cumsum([0] + [len(p.predicate_match.texts) for p in plans])
         q_emb = jnp.asarray(self._embed.embed_texts(texts))
         sims = _predicate_match(q_emb, jnp.asarray(
-            self.stores.predicates.embeddings))            # (ΣR, P)
-        num_preds = sims.shape[1]
-        mmax = min(max(q.predicate_top_m for q in queries), num_preds)
+            self.stores.predicates.embeddings))            # (ΣU, P)
+        mmax = max(p.predicate_match.m for p in plans)     # vocab-clamped
         vals, ids = jax.lax.top_k(sims, mmax)
         vals_np, ids_np = np.asarray(vals), np.asarray(ids)
         out = []
-        for qi, q in enumerate(queries):
-            m = min(q.predicate_top_m, num_preds)
+        for qi, p in enumerate(plans):
+            pm = p.predicate_match
             sl = slice(offs[qi], offs[qi + 1])
-            v_q, id_q = topk_prefix(vals_np[sl], ids_np[sl], m)
-            ok = v_q >= q.text_threshold
+            v_q, id_q = topk_prefix(vals_np[sl], ids_np[sl], pm.m)
+            ok = v_q >= pm.threshold
             ok[:, 0] = True    # always keep the argmax label
             out.append((id_q, ok))
         return out
 
     def query_batch(self, queries: List[VMRQuery]) -> List[QueryResult]:
-        """Execute many queries with fused, amortized stage launches.
+        """Compile every query (through the plan cache) and execute the
+        batch; see :meth:`execute_batch` for the fusion/equivalence
+        contract."""
+        return self.execute_batch([self.plan_for(q) for q in queries])
+
+    def execute_batch(self, plans: List[Plan]) -> List[QueryResult]:
+        """Execute many compiled plans with fused, amortized stage launches.
 
         Per query the returned ``QueryResult`` is identical to ``query()``:
         smaller per-query top-k's are exact prefixes of the batch-max top-k,
@@ -380,31 +400,28 @@ class LazyVLMEngine:
         ``stats.stage_seconds`` holds the batch's stage wall-times (summing
         them across a batch's results overcounts by the batch size).
         """
-        if not queries:
+        if not plans:
             return []
-        for q in queries:
-            q.validate()
         st = self.stores
         rel = st.relationships.table
-        stats = [QueryStats() for _ in queries]
+        stats = [QueryStats() for _ in plans]
         t0 = time.perf_counter()
 
         # -- stage 1: batched entity + predicate matching ---------------------
-        ent_cands = self._match_entities_batch(queries, stats)
-        pred_cands = self._match_predicates_batch(queries)
+        ent_cands = self._match_entities_batch(plans, stats)
+        pred_cands = self._match_predicates_batch(plans)
         t_entity = time.perf_counter() - t0
 
         # -- stage 2+3a: every query's triples in ONE fused selection ---------
         t0 = time.perf_counter()
-        trip_lists = [q.all_triples() for q in queries]
-        counts = [len(ts) for ts in trip_lists]
+        counts = [len(p.triple_select.triples) for p in plans]
         row_offs = np.cumsum([0] + counts)
         total = int(row_offs[-1])
-        t_pad = _pow2_bucket(total)
-        width = _pow2_bucket(max(v.shape[1] for v, _, _ in ent_cands),
-                             minimum=8)
-        m_width = _pow2_bucket(max(ids.shape[1] for ids, _ in pred_cands),
-                               minimum=2)
+        t_pad = pow2_bucket(total)
+        width = pow2_bucket(max(v.shape[1] for v, _, _ in ent_cands),
+                            minimum=8)
+        m_width = pow2_bucket(max(ids.shape[1] for ids, _ in pred_cands),
+                              minimum=2)
         sv = np.zeros((t_pad, width), np.int32)
         se = np.zeros((t_pad, width), np.int32)
         ov = np.zeros((t_pad, width), np.int32)
@@ -413,21 +430,21 @@ class LazyVLMEngine:
         oo = np.zeros((t_pad, width), bool)
         pi = np.zeros((t_pad, m_width), np.int32)
         po = np.zeros((t_pad, m_width), bool)
-        for qi, q in enumerate(queries):
+        for qi, p in enumerate(plans):
             vids, eids, eok = ent_cands[qi]
             pids, pok = pred_cands[qi]
-            ei = {e.name: i for i, e in enumerate(q.entities)}
-            ri = {r.name: i for i, r in enumerate(q.relationships)}
+            ts = p.triple_select
             w, m = vids.shape[1], pids.shape[1]
-            for j, t in enumerate(trip_lists[qi]):
+            for j in range(len(ts.triples)):
                 row = row_offs[qi] + j
-                s_i, o_i = ei[t.subject], ei[t.object]
+                s_i, o_i = ts.subj_row[j], ts.obj_row[j]
+                p_i = ts.pred_row[j]
                 sv[row, :w], se[row, :w] = vids[s_i], eids[s_i]
                 so[row, :w] = eok[s_i]
                 ov[row, :w], oe[row, :w] = vids[o_i], eids[o_i]
                 oo[row, :w] = eok[o_i]
-                pi[row, :m] = pids[ri[t.predicate]]
-                po[row, :m] = pok[ri[t.predicate]]
+                pi[row, :m] = pids[p_i]
+                po[row, :m] = pok[p_i]
         masks = _triple_selections(
             rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
             rel.valid,
@@ -436,7 +453,7 @@ class LazyVLMEngine:
             jnp.asarray(pi), jnp.asarray(po))               # (ΣT_pad, cap)
         masks_np = np.asarray(masks)
         sqls: List[List[str]] = []
-        for qi, q in enumerate(queries):
+        for qi, p in enumerate(plans):
             lo = row_offs[qi]
             stats[qi].sql_rows_per_triple = [
                 int(x) for x in masks_np[lo: lo + counts[qi]].sum(axis=1)]
@@ -452,13 +469,22 @@ class LazyVLMEngine:
         t_symbolic = time.perf_counter() - t0
 
         # -- stage 3b: ONE deduped VLM pass across the whole batch ------------
+        # rows of plans compiled with verify disabled are excluded from the
+        # candidate set and keep their symbolic masks, so execution matches
+        # each plan's advertised VlmVerify node even in a mixed batch
         t0 = time.perf_counter()
-        if self.verifier is not None:
-            out = self._verify_rows(rel, masks_np)
+        verif = np.zeros((t_pad,), bool)
+        for qi, p in enumerate(plans):
+            if p.verify.enabled:
+                verif[row_offs[qi]: row_offs[qi] + counts[qi]] = True
+        if self.verifier is not None and verif.any():
+            out = self._verify_rows(rel, masks_np & verif[:, None])
             if out is not None:
                 keep_rows, _, _, cols = out
                 calls = getattr(self.verifier, "calls", 0)
-                for qi in range(len(queries)):
+                for qi, p in enumerate(plans):
+                    if not p.verify.enabled:
+                        continue
                     lo = row_offs[qi]
                     q_any = masks_np[lo: lo + counts[qi]].any(axis=0)
                     ridx = np.nonzero(q_any)[0]
@@ -471,7 +497,8 @@ class LazyVLMEngine:
                         np.unique(qrows, axis=0))
                     stats[qi].refine_passed = len(
                         np.unique(qrows[keep_rows[ridx]], axis=0))
-                masks = masks & jnp.asarray(keep_rows)[None, :]
+                masks = masks & (jnp.asarray(keep_rows)[None, :]
+                                 | ~jnp.asarray(verif)[:, None])
         t_refine = time.perf_counter() - t0
 
         # -- stage 4: conjunction + signature-grouped temporal DP -------------
@@ -481,39 +508,38 @@ class LazyVLMEngine:
         # frame-spec conjunction: one gather + AND-reduce over every
         # (query, frame) pair; pad slots act as identity (all-True), matching
         # the single path's ones-initialized accumulator
-        fcounts = [len(q.frames) for q in queries]
+        fcounts = [len(p.conjoin.frames) for p in plans]
         frame_offs = np.cumsum([0] + fcounts)
         n_qf = int(frame_offs[-1])
-        max_tr = _pow2_bucket(
-            max((len(f.triples) for q in queries for f in q.frames),
+        max_tr = pow2_bucket(
+            max((len(f) for p in plans for f in p.conjoin.frames),
                 default=1) or 1, minimum=2)
-        qf_pad = _pow2_bucket(n_qf)
+        qf_pad = pow2_bucket(n_qf)
         idx_mat = np.zeros((qf_pad, max_tr), np.int32)
         pad_mat = np.ones((qf_pad, max_tr), bool)
-        for qi, q in enumerate(queries):
-            triple_of = {t: row_offs[qi] + j
-                         for j, t in enumerate(trip_lists[qi])}
-            for fj, f in enumerate(q.frames):
+        for qi, p in enumerate(plans):
+            for fj, fr in enumerate(p.conjoin.frames):
                 r = frame_offs[qi] + fj
-                for c, t in enumerate(f.triples):
-                    idx_mat[r, c] = triple_of[t]
+                for c, ti in enumerate(fr):
+                    idx_mat[r, c] = row_offs[qi] + ti
                     pad_mat[r, c] = False
         fmaps = _conjoin_bitmaps(bitmaps, jnp.asarray(idx_mat),
                                  jnp.asarray(pad_mat))      # (qf_pad, V, F)
         frame_maps_all = [
             [fmaps[frame_offs[qi] + j] for j in range(fcounts[qi])]
-            for qi in range(len(queries))]
-        matched = temporal_lib.temporal_match_batch(frame_maps_all, queries)
+            for qi in range(len(plans))]
+        matched = temporal_lib.temporal_match_batch_sigs(
+            frame_maps_all, [p.chain_signature() for p in plans])
         ends_stack = jnp.stack([ends for _, ends in matched])  # (B, V, F)
-        kmax = min(max(q.top_k for q in queries), st.num_segments)
+        kmax = max(p.temporal.top_k for p in plans)   # segment-clamped
         scores_b, seg_b = temporal_lib.rank_segments_batch(ends_stack, kmax)
         scores_np, seg_np = np.asarray(scores_b), np.asarray(seg_b)
         t_temporal = time.perf_counter() - t0
 
         results = []
-        for qi, q in enumerate(queries):
-            k = min(q.top_k, st.num_segments)
-            s_q, g_q = topk_prefix(scores_np[qi], seg_np[qi], k)
+        for qi, p in enumerate(plans):
+            s_q, g_q = topk_prefix(scores_np[qi], seg_np[qi],
+                                   p.temporal.top_k)
             keep = s_q > 0
             stats[qi].frames_scanned_equivalent = (st.num_segments
                                                    * st.frames_per_segment)

@@ -1,0 +1,369 @@
+"""Logical plan IR — the paper's pipeline (Section 2.3) as an explicit,
+inspectable, cacheable artifact.
+
+``compile_plan`` lowers a ``VMRQuery`` against a ``VideoStores`` instance
+into a tree of typed plan nodes:
+
+    Plan
+    ├─ EntityMatch      batched vector top-k over the Entity Store
+    ├─ PredicateMatch   relationship texts vs the closed predicate vocab
+    ├─ TripleSelect     one fused conjunctive selection for ALL triples
+    ├─ VlmVerify        lazy VLM refinement of surviving rows
+    ├─ ConjoinFrames    per-frame AND of triple bitmaps
+    └─ TemporalChain    chain DP over query frames
+
+Compilation runs the optimizer passes that previously lived as ad-hoc logic
+inside the executor:
+
+  * **cross-frame triple dedupe** — a triple appearing in several frame
+    specs becomes ONE ``TripleSelect`` row; frames reference triples by
+    index.
+  * **shared-entity embed reuse** — entities (and relationships) with
+    identical description text share one embedding row; the node keeps an
+    entity→row map instead of re-embedding duplicates.
+  * **static capacity/bucket selection** — top-k/top-m are clamped against
+    store capacities at compile time and the fused selection's row count is
+    padded to a power-of-two bucket, so the jitted programs are compiled
+    once per bucket tier and reused across queries of different shapes.
+
+Plan nodes are frozen dataclasses of primitives — hashable and comparable —
+so structurally identical queries compile to *equal* plans and a
+``PlanCache`` can skip compilation entirely (the cache powers
+``Session.explain``'s cached flag and the warm-vs-cold numbers in
+``benchmarks/multi_query.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import temporal as temporal_lib
+from repro.core.query import Triple, VMRQuery
+
+
+def pow2_bucket(n: int, minimum: int = 4) -> int:
+    """Pad a batch-dependent dimension to a power-of-two bucket so fused
+    programs are compiled once per bucket tier, not once per shape. Padding
+    slots carry all-False validity masks and select nothing."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# plan nodes
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class EntityMatch:
+    """Top-k similarity search of entity descriptions over the Entity Store.
+
+    ``texts`` are the deduped embedding inputs; ``rows[i]`` maps entity i
+    (declaration order, named ``names[i]``) to its row in ``texts`` — the
+    shared-entity embed-reuse pass.
+    """
+
+    names: Tuple[str, ...]
+    texts: Tuple[str, ...]
+    rows: Tuple[int, ...]
+    k: int                      # capacity-clamped top-k (static)
+    text_threshold: float
+    image_search: bool
+    image_threshold: float
+
+    @property
+    def width(self) -> int:
+        """Candidate columns per entity after text/image union."""
+        return self.k * (2 if self.image_search else 1)
+
+    def describe(self) -> List[str]:
+        shared = len(self.names) - len(self.texts)
+        head = (f"EntityMatch k={self.k} threshold={self.text_threshold:g}"
+                + (f" +image(threshold={self.image_threshold:g})"
+                   if self.image_search else "")
+                + (f"  [{shared} shared embed row(s)]" if shared else ""))
+        out = [head]
+        for name, row in zip(self.names, self.rows):
+            out.append(f"  {name} ~ {self.texts[row]!r}")
+        return out
+
+
+@dataclass(frozen=True)
+class PredicateMatch:
+    """Top-m match of relationship texts against the predicate vocab."""
+
+    names: Tuple[str, ...]
+    texts: Tuple[str, ...]
+    rows: Tuple[int, ...]
+    m: int                      # vocab-clamped top-m (static)
+    threshold: float
+
+    def describe(self) -> List[str]:
+        out = [f"PredicateMatch m={self.m} threshold={self.threshold:g}"]
+        for name, row in zip(self.names, self.rows):
+            out.append(f"  {name} ~ {self.texts[row]!r}")
+        return out
+
+
+@dataclass(frozen=True)
+class TripleSelect:
+    """One fused conjunctive selection for every (cross-frame deduped)
+    triple. ``subj_row``/``obj_row`` index into ``EntityMatch.texts``'
+    candidate rows and ``pred_row`` into ``PredicateMatch.texts``' (the
+    embed-reuse maps are already applied at compile time); ``bucket`` is
+    the power-of-two padded row count of the fused launch."""
+
+    triples: Tuple[Triple, ...]
+    subj_row: Tuple[int, ...]
+    obj_row: Tuple[int, ...]
+    pred_row: Tuple[int, ...]
+    bucket: int
+
+    def describe(self) -> List[str]:
+        out = [f"TripleSelect triples={len(self.triples)} "
+               f"bucket={self.bucket}"]
+        for i, t in enumerate(self.triples):
+            out.append(f"  t{i}: ({t.subject} {t.predicate} {t.object})")
+        return out
+
+
+@dataclass(frozen=True)
+class VlmVerify:
+    """Lazy VLM refinement of rows surviving the symbolic selection,
+    deduped by row content."""
+
+    enabled: bool
+
+    def describe(self) -> List[str]:
+        return ["VlmVerify " + ("(content-deduped rows)" if self.enabled
+                                else "(disabled: symbolic stage trusted)")]
+
+
+@dataclass(frozen=True)
+class ConjoinFrames:
+    """Per query frame: AND of its triples' presence bitmaps (indices into
+    ``TripleSelect.triples``). ``idx``/``pad`` are the gather matrices for
+    the fused conjunction launch, padded to a power-of-two column count —
+    pad slots (True) act as identity under the AND — so execution only
+    converts them to device arrays."""
+
+    frames: Tuple[Tuple[int, ...], ...]
+    idx: Tuple[Tuple[int, ...], ...]
+    pad: Tuple[Tuple[bool, ...], ...]
+
+    def describe(self) -> List[str]:
+        out = ["ConjoinFrames"]
+        for j, idxs in enumerate(self.frames):
+            expr = " & ".join(f"t{i}" for i in idxs) or "TRUE"
+            out.append(f"  f{j} <- {expr}")
+        return out
+
+
+@dataclass(frozen=True)
+class TemporalChain:
+    """Chain DP over consecutive query frames. ``gaps[j]`` is the
+    (min_gap, max_gap) window between frames j and j+1 (the normalized
+    constraint form); ``top_k`` is the segment-count-clamped ranking k."""
+
+    gaps: Tuple[Tuple[int, Optional[int]], ...]
+    top_k: int
+
+    def describe(self) -> List[str]:
+        out = [f"TemporalChain steps={len(self.gaps)} top_k={self.top_k}"]
+        for j, (lo, hi) in enumerate(self.gaps):
+            win = f">= {lo}" if hi is None else f"in [{lo}, {hi}]"
+            out.append(f"  f{j + 1} - f{j} {win}")
+        return out
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A compiled, executable VMR query plan (see module docstring)."""
+
+    entity_match: EntityMatch
+    predicate_match: PredicateMatch
+    triple_select: TripleSelect
+    verify: VlmVerify
+    conjoin: ConjoinFrames
+    temporal: TemporalChain
+    num_segments: int
+    frames_per_segment: int
+
+    # -- introspection ------------------------------------------------------
+    def chain_signature(self) -> Tuple:
+        """Queries with equal signatures share one stacked temporal DP."""
+        return (len(self.conjoin.frames), self.temporal.gaps)
+
+    def predicted_launches(self) -> Dict[str, int]:
+        """Static per-stage count of device program launches."""
+        return {
+            "entity_topk": 2 if self.entity_match.image_search else 1,
+            "predicate_match": 2,             # einsum + top-k
+            "triple_select": 1,
+            "bitmaps": 1,
+            "conjoin": 1,
+            "temporal_chain": max(0, len(self.conjoin.frames) - 1),
+            "rank": 1,
+        }
+
+    def total_launches(self) -> int:
+        return sum(self.predicted_launches().values())
+
+    def sql_template(self, i: int) -> str:
+        """Plan-time SQL for triple ``i``: candidate sets are symbolic
+        (they bind to actual (vid, eid) pairs at execution)."""
+        em, pm, ts = self.entity_match, self.predicate_match, \
+            self.triple_select
+        t = ts.triples[i]
+        subj = em.texts[ts.subj_row[i]]
+        obj = em.texts[ts.obj_row[i]]
+        pred = pm.texts[ts.pred_row[i]]
+        k, m = em.width, pm.m
+        return (
+            f"SELECT vid, fid FROM relationships\n"
+            f"  WHERE (vid, sid) IN (top{k}[{subj!r}])\n"
+            f"    AND (vid, oid) IN (top{k}[{obj!r}])\n"
+            f"    AND rl IN (top{m}[{pred!r}])  -- triple {i} "
+            f"({t.subject} {t.predicate} {t.object})")
+
+    def sql_templates(self) -> List[str]:
+        return [self.sql_template(i)
+                for i in range(len(self.triple_select.triples))]
+
+    def render_tree(self) -> str:
+        """Indented plan tree (EXPLAIN's main artifact)."""
+        nodes = [self.entity_match, self.predicate_match, self.triple_select,
+                 self.verify, self.conjoin, self.temporal]
+        lines = [f"Plan  ({self.num_segments} segments x "
+                 f"{self.frames_per_segment} frames, "
+                 f"{self.total_launches()} predicted launches)"]
+        for n, node in enumerate(nodes):
+            head, *rest = node.describe()
+            last = n == len(nodes) - 1
+            lines.append(("└─ " if last else "├─ ") + head)
+            lines += [("   " if last else "│  ") + r for r in rest]
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+def _dedupe_texts(items) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
+    """Shared-embed pass: unique texts in first-occurrence order plus a
+    per-item row map."""
+    texts: List[str] = []
+    row_of: Dict[str, int] = {}
+    rows: List[int] = []
+    for it in items:
+        if it.text not in row_of:
+            row_of[it.text] = len(texts)
+            texts.append(it.text)
+        rows.append(row_of[it.text])
+    return tuple(texts), tuple(rows)
+
+
+def compile_plan(query: VMRQuery, stores, *, verify: bool) -> Plan:
+    """Lower ``query`` to a :class:`Plan` against ``stores``' static shape.
+
+    Raises :class:`repro.core.query.QueryValidationError` on malformed
+    queries.
+    """
+    query.validate()
+
+    ent_texts, ent_rows = _dedupe_texts(query.entities)
+    rel_texts, rel_rows = _dedupe_texts(query.relationships)
+    ent_index = {e.name: i for i, e in enumerate(query.entities)}
+    rel_index = {r.name: i for i, r in enumerate(query.relationships)}
+
+    triples = tuple(query.all_triples())       # cross-frame dedupe
+    triple_of = {t: i for i, t in enumerate(triples)}
+    frames = tuple(tuple(triple_of[t] for t in f.triples)
+                   for f in query.frames)
+    max_tr = pow2_bucket(max((len(f) for f in frames), default=1) or 1,
+                         minimum=2)
+    conjoin_idx = tuple(tuple(f[c] if c < len(f) else 0
+                              for c in range(max_tr)) for f in frames)
+    conjoin_pad = tuple(tuple(c >= len(f) for c in range(max_tr))
+                        for f in frames)
+
+    em = EntityMatch(
+        names=tuple(e.name for e in query.entities),
+        texts=ent_texts, rows=ent_rows,
+        k=min(query.top_k, stores.entities.capacity),
+        text_threshold=query.text_threshold,
+        image_search=query.image_search,
+        image_threshold=query.image_threshold)
+    pm = PredicateMatch(
+        names=tuple(r.name for r in query.relationships),
+        texts=rel_texts, rows=rel_rows,
+        m=min(query.predicate_top_m, len(stores.predicates.labels)),
+        threshold=query.text_threshold)
+    ts = TripleSelect(
+        triples=triples,
+        subj_row=tuple(ent_rows[ent_index[t.subject]] for t in triples),
+        obj_row=tuple(ent_rows[ent_index[t.object]] for t in triples),
+        pred_row=tuple(rel_rows[rel_index[t.predicate]] for t in triples),
+        bucket=pow2_bucket(len(triples)))
+    tc = TemporalChain(
+        gaps=tuple(temporal_lib.normalize_constraints(query)),
+        top_k=min(query.top_k, stores.num_segments))
+    return Plan(entity_match=em, predicate_match=pm, triple_select=ts,
+                verify=VlmVerify(verify),
+                conjoin=ConjoinFrames(frames, conjoin_idx, conjoin_pad),
+                temporal=tc, num_segments=stores.num_segments,
+                frames_per_segment=stores.frames_per_segment)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def store_fingerprint(stores) -> Tuple:
+    """The static store shape a plan depends on: capacity clamps and the
+    (segments, frames) grid."""
+    return (stores.entities.capacity, len(stores.predicates.labels),
+            stores.num_segments, stores.frames_per_segment)
+
+
+class PlanCache:
+    """FIFO-bounded compile cache keyed by query signature.
+
+    The signature is the ``VMRQuery`` itself (frozen ⇒ hashable) plus the
+    store fingerprint and verifier flag: a repeat or structurally identical
+    query — equal entities/relationships/frames/constraints and
+    hyperparameters — hits the cache and skips compilation entirely.
+    ``hits``/``misses`` are the counters ``Session`` and the benchmarks
+    report.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._cache: Dict[Tuple, Plan] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def clear(self) -> None:
+        """Drop cached plans (counters keep running) — benchmarks use this
+        to measure cold-compile latency on an otherwise warm engine."""
+        self._cache.clear()
+
+    @staticmethod
+    def signature(query: VMRQuery, stores, verify: bool) -> Tuple:
+        return (query, store_fingerprint(stores), verify)
+
+    def lookup(self, query: VMRQuery, stores, *, verify: bool
+               ) -> Tuple[Plan, bool]:
+        """Return ``(plan, was_cached)``, compiling on miss."""
+        key = self.signature(query, stores, verify)
+        plan = self._cache.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan, True
+        plan = compile_plan(query, stores, verify=verify)
+        self.misses += 1
+        self._cache[key] = plan
+        while len(self._cache) > self.max_entries:
+            self._cache.pop(next(iter(self._cache)))
+        return plan, False

@@ -13,6 +13,13 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 
+class QueryValidationError(ValueError):
+    """A structurally malformed ``VMRQuery`` (unknown names, bad frame
+    indices, inverted gap windows). Raised by :meth:`VMRQuery.validate` —
+    a real exception, unlike ``assert``, so validation survives
+    ``python -O``."""
+
+
 @dataclass(frozen=True)
 class Entity:
     name: str
@@ -73,10 +80,18 @@ class VMRQuery:
         return [r.text for r in self.relationships]
 
     def entity(self, name: str) -> Entity:
-        return next(e for e in self.entities if e.name == name)
+        for e in self.entities:
+            if e.name == name:
+                return e
+        raise KeyError(f"unknown entity {name!r}; available: "
+                       f"{sorted(e.name for e in self.entities)}")
 
     def relationship(self, name: str) -> Relationship:
-        return next(r for r in self.relationships if r.name == name)
+        for r in self.relationships:
+            if r.name == name:
+                return r
+        raise KeyError(f"unknown relationship {name!r}; available: "
+                       f"{sorted(r.name for r in self.relationships)}")
 
     def all_triples(self) -> List[Triple]:
         seen, out = set(), []
@@ -88,19 +103,45 @@ class VMRQuery:
         return out
 
     def validate(self) -> None:
+        def fail(msg: str) -> None:
+            raise QueryValidationError(msg)
+
         names = {e.name for e in self.entities}
         rels = {r.name for r in self.relationships}
-        for f in self.frames:
+        for fi, f in enumerate(self.frames):
             for t in f.triples:
-                assert t.subject in names, f"unknown subject {t.subject}"
-                assert t.object in names, f"unknown object {t.object}"
-                assert t.predicate in rels, f"unknown predicate {t.predicate}"
+                if t.subject not in names:
+                    fail(f"frame {fi}: unknown subject {t.subject!r}; "
+                         f"available entities: {sorted(names)}")
+                if t.object not in names:
+                    fail(f"frame {fi}: unknown object {t.object!r}; "
+                         f"available entities: {sorted(names)}")
+                if t.predicate not in rels:
+                    fail(f"frame {fi}: unknown predicate {t.predicate!r}; "
+                         f"available relationships: {sorted(rels)}")
         for c in self.constraints:
-            assert 0 <= c.earlier < len(self.frames)
-            assert 0 <= c.later < len(self.frames)
-            assert c.earlier != c.later
-            if c.max_gap is not None:
-                assert c.max_gap >= c.min_gap
+            if not 0 <= c.earlier < len(self.frames):
+                fail(f"constraint references frame {c.earlier}, but the "
+                     f"query has {len(self.frames)} frames")
+            if not 0 <= c.later < len(self.frames):
+                fail(f"constraint references frame {c.later}, but the "
+                     f"query has {len(self.frames)} frames")
+            if c.earlier == c.later:
+                fail(f"constraint relates frame {c.earlier} to itself")
+            if c.later < c.earlier:
+                # the chain DP orders frames by index; a reversed constraint
+                # would otherwise be silently flipped by normalization
+                fail(f"constraints must run forward: frame {c.later} is "
+                     f"declared before frame {c.earlier}; write the "
+                     f"constraint as frame[{c.earlier}] -> "
+                     f"frame[{c.later}]")
+            if c.min_gap < 1:
+                # frames are strictly ordered; normalization would silently
+                # bump a smaller gap to 1
+                fail(f"min_gap must be >= 1 frame, got {c.min_gap}")
+            if c.max_gap is not None and c.max_gap < c.min_gap:
+                fail(f"constraint window empty: max_gap {c.max_gap} < "
+                     f"min_gap {c.min_gap}")
 
 
 def example_2_1(min_gap_frames: int = 5) -> VMRQuery:

@@ -68,6 +68,20 @@ def normalize_constraints(query: VMRQuery) -> List[Tuple[int, Optional[int]]]:
     return gaps
 
 
+def chain_reach(frame_bitmaps, gaps: Sequence[Tuple[int, Optional[int]]]
+                ) -> jax.Array:
+    """The chain DP itself: fold ``chain_step`` over query frames with the
+    normalized per-step ``(min_gap, max_gap)`` windows. ``frame_bitmaps``
+    is anything indexable per query frame — a list of (V, F) arrays, a
+    stacked (B, V, F) group, or an (F, V, Fr) device array. Every temporal
+    matcher (single, batched, plan-driven) runs this one fold."""
+    reach = frame_bitmaps[0]
+    for j in range(1, len(frame_bitmaps)):
+        min_gap, max_gap = gaps[j - 1]
+        reach = chain_step(reach, frame_bitmaps[j], min_gap, max_gap)
+    return reach
+
+
 def temporal_match(frame_bitmaps: Sequence[jax.Array], query: VMRQuery
                    ) -> Tuple[jax.Array, jax.Array]:
     """frame_bitmaps: one (V, F) bool per query frame.
@@ -75,11 +89,7 @@ def temporal_match(frame_bitmaps: Sequence[jax.Array], query: VMRQuery
     Returns (segment_hits: (V,) bool, end_frames: (V, F) bool — positions
     where the *last* query frame can land completing a valid chain).
     """
-    gaps = normalize_constraints(query)
-    reach = frame_bitmaps[0]
-    for j in range(1, len(frame_bitmaps)):
-        min_gap, max_gap = gaps[j - 1]
-        reach = chain_step(reach, frame_bitmaps[j], min_gap, max_gap)
+    reach = chain_reach(frame_bitmaps, normalize_constraints(query))
     return reach.any(axis=-1), reach
 
 
@@ -105,25 +115,33 @@ def temporal_match_batch(frame_bitmaps: Sequence[Sequence[jax.Array]],
                          queries: Sequence[VMRQuery]
                          ) -> List[Tuple[jax.Array, jax.Array]]:
     """Batched ``temporal_match``: per query i, ``frame_bitmaps[i]`` is its
-    list of (V, F) candidate bitmaps (one per query frame).
+    list of (V, F) candidate bitmaps (one per query frame). Thin wrapper
+    over :func:`temporal_match_batch_sigs` keyed by
+    :func:`chain_signature`."""
+    return temporal_match_batch_sigs(frame_bitmaps,
+                                     [chain_signature(q) for q in queries])
 
-    Queries are grouped by :func:`chain_signature`; each group's bitmaps are
-    stacked to (B, V, F) and run through ONE chain-DP pass (``chain_step`` is
+
+def temporal_match_batch_sigs(frame_bitmaps: Sequence[Sequence[jax.Array]],
+                              sigs: Sequence[Tuple]
+                              ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Signature-grouped batched chain DP (``sigs[i]`` is query i's
+    ``(n_frames, gaps)`` chain signature, e.g. ``Plan.chain_signature()``).
+
+    Queries are grouped by signature; each group's bitmaps are stacked to
+    (B, V, F) and run through ONE chain-DP pass (``chain_step`` is
     shape-polymorphic over leading axes), instead of one eager op-chain per
     query. Returns per query ``(segment_hits, end_frames)``, identical to
     ``temporal_match`` applied query-by-query.
     """
-    out: List = [None] * len(queries)
+    out: List = [None] * len(sigs)
     groups: Dict[Tuple, List[int]] = {}
-    for i, q in enumerate(queries):
-        groups.setdefault(chain_signature(q), []).append(i)
+    for i, sig in enumerate(sigs):
+        groups.setdefault(sig, []).append(i)
     for (n_frames, gaps), idxs in groups.items():
         stacked = [jnp.stack([frame_bitmaps[i][j] for i in idxs])
                    for j in range(n_frames)]
-        reach = stacked[0]
-        for j in range(1, n_frames):
-            min_gap, max_gap = gaps[j - 1]
-            reach = chain_step(reach, stacked[j], min_gap, max_gap)
+        reach = chain_reach(stacked, gaps)
         hits = reach.any(axis=-1)
         for b, i in enumerate(idxs):
             out[i] = (hits[b], reach[b])

@@ -1,0 +1,31 @@
+"""Semi-structured VMR query language (the paper's text interface).
+
+``parse_query`` lowers query text to a ``VMRQuery``; ``format_query`` is
+its round-trip inverse. ``EXAMPLE_2_1_TEXT`` is the paper's running
+example as a text literal — ``parse_query(EXAMPLE_2_1_TEXT)`` equals
+``repro.core.example_2_1()``.
+"""
+from repro.lang.format import format_query  # noqa: F401
+from repro.lang.parser import QueryParseError, parse_query  # noqa: F401
+
+# Example 2.1: "a man with a backpack is near a bicycle, and another man in
+# red moves from the left of the bicycle to the right of the bicycle after
+# more than 2 seconds" (2 fps => f1 - f0 > 4).
+EXAMPLE_2_1_TEXT = """\
+ENTITIES:
+  e1: man with backpack
+  e2: bicycle
+  e3: man in red
+
+RELATIONSHIPS:
+  r1: near
+  r2: left of
+  r3: right of
+
+FRAMES:
+  f0: (e1 r1 e2), (e3 r2 e2)
+  f1: (e1 r1 e2), (e3 r3 e2)
+
+CONSTRAINTS:
+  f1 - f0 > 4
+"""

@@ -1,0 +1,47 @@
+"""Round-trip formatter: ``VMRQuery`` -> canonical query text.
+
+``parse_query(format_query(q)) == q`` for any valid query (the inverse
+direction normalizes whitespace/comments only). Frames are named
+``f0..fN-1`` in declaration order; hyperparameters are emitted under
+OPTIONS only when they differ from the ``VMRQuery`` defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.query import TemporalConstraint, VMRQuery
+
+_DEFAULTS = {f.name: f.default for f in dataclasses.fields(VMRQuery)
+             if f.name in ("top_k", "text_threshold", "image_threshold",
+                           "image_search", "predicate_top_m")}
+
+
+def _format_constraint(c: TemporalConstraint) -> str:
+    diff = f"f{c.later} - f{c.earlier}"
+    if c.max_gap is None:
+        return f"{diff} >= {c.min_gap}"
+    return f"{c.min_gap} <= {diff} <= {c.max_gap}"
+
+
+def format_query(query: VMRQuery) -> str:
+    """Render ``query`` as canonical semi-structured text."""
+    out: List[str] = ["ENTITIES:"]
+    out += [f"  {e.name}: {e.text}" for e in query.entities]
+    out += ["", "RELATIONSHIPS:"]
+    out += [f"  {r.name}: {r.text}" for r in query.relationships]
+    out += ["", "FRAMES:"]
+    for j, f in enumerate(query.frames):
+        triples = ", ".join(f"({t.subject} {t.predicate} {t.object})"
+                            for t in f.triples)
+        out.append(f"  f{j}: {triples}" if triples else f"  f{j}:")
+    if query.constraints:
+        out += ["", "CONSTRAINTS:"]
+        out += [f"  {_format_constraint(c)}" for c in query.constraints]
+    opts = {k: getattr(query, k) for k, dflt in _DEFAULTS.items()
+            if getattr(query, k) != dflt}
+    if opts:
+        out += ["", "OPTIONS:"]
+        out += [f"  {k} = {str(v).lower() if isinstance(v, bool) else v}"
+                for k, v in opts.items()]
+    return "\n".join(out) + "\n"

@@ -1,0 +1,342 @@
+"""Parser for the semi-structured VMR query language (Section 2.1).
+
+The text format mirrors the paper's Example 2.1: four declaration blocks
+plus an optional hyperparameter block. Blank lines and full-line ``#``
+comments are ignored everywhere; trailing ``#`` comments are additionally
+allowed on FRAMES/CONSTRAINTS/OPTIONS lines (entity and relationship
+descriptions are free text, so ``#`` there is content). Section headers
+are case-insensitive and the trailing colon is optional.
+
+    ENTITIES:
+      e1: man with backpack
+      e2: bicycle
+
+    RELATIONSHIPS:
+      r1: near
+
+    FRAMES:
+      f0: (e1 r1 e2)
+      f1: (e1 r1 e2), (e1 r1 e2)
+
+    CONSTRAINTS:
+      f1 - f0 > 4          # also: >=, <, <=, ==, 'in [lo, hi]',
+                           #       'lo <= f1 - f0 <= hi'
+
+    OPTIONS:
+      top_k = 16           # any VMRQuery hyperparameter
+
+Every syntax or name error raises :class:`QueryParseError` carrying the
+1-based line and column plus a did-you-mean suggestion for unknown
+entity/relationship/frame/option names.
+"""
+from __future__ import annotations
+
+import difflib
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+
+
+class QueryParseError(ValueError):
+    """A malformed query text; ``line``/``col`` are 1-based positions."""
+
+    def __init__(self, message: str, line: int, col: int):
+        super().__init__(f"line {line}, col {col}: {message}")
+        self.message = message
+        self.line = line
+        self.col = col
+
+
+_SECTIONS = ("ENTITIES", "RELATIONSHIPS", "FRAMES", "CONSTRAINTS", "OPTIONS")
+# sections whose lines can't legitimately contain '#' — trailing comments
+# are stripped there (descriptions keep theirs: '#' may be content)
+_TRAILING_COMMENT_SECTIONS = ("FRAMES", "CONSTRAINTS", "OPTIONS")
+_NAME = r"[A-Za-z_]\w*"
+_DECL_RE = re.compile(rf"({_NAME})\s*:\s*(.*)$")
+_HEADER_RE = re.compile(rf"({_NAME})\s*:?\s*$")
+_TRIPLE_RE = re.compile(r"\(([^()]*)\)")
+_INT = r"[+-]?\d+"
+_DIFF = rf"({_NAME})\s*-\s*({_NAME})"
+_CMP_RE = re.compile(rf"{_DIFF}\s*(>=|>|<=|<|==|=)\s*({_INT})\s*$")
+_RANGE_RE = re.compile(
+    rf"({_INT})\s*(<=|<)\s*{_DIFF}\s*(<=|<)\s*({_INT})\s*$")
+_IN_RE = re.compile(
+    rf"{_DIFF}\s+in\s+\[\s*({_INT})\s*,\s*({_INT})\s*\]\s*$", re.IGNORECASE)
+
+# option name -> coercion; the value space of VMRQuery's hyperparameters
+_OPTIONS = {
+    "top_k": int,
+    "text_threshold": float,
+    "image_threshold": float,
+    "image_search": None,          # bool, parsed specially
+    "predicate_top_m": int,
+}
+
+
+def _suggest(name: str, candidates) -> str:
+    # cutoff 0.5 (not the 0.6 default) so one-char slips between short
+    # names like 'e2' vs 'e1' still get a suggestion
+    close = difflib.get_close_matches(name, list(candidates), n=1,
+                                      cutoff=0.5)
+    return f"; did you mean {close[0]!r}?" if close else ""
+
+
+def _known(candidates) -> str:
+    cands = sorted(candidates)
+    return f" (available: {', '.join(cands)})" if cands else " (none declared)"
+
+
+class _Parser:
+    def __init__(self, text: str):
+        self.text = text
+        # declaration order preserved throughout
+        self.entities: Dict[str, str] = {}
+        self.relationships: Dict[str, str] = {}
+        self.frames: Dict[str, Tuple[Triple, ...]] = {}
+        self.options: Dict[str, object] = {}
+        # name references are resolved at build time so sections may appear
+        # in any order; each ref keeps its position for error reporting
+        self._name_refs: List[Tuple[str, str, int, int]] = []
+        self._raw_constraints: List[Tuple[str, str, Optional[int],
+                                          Optional[int], int, int, int]] = []
+
+    def error(self, msg: str, line: int, col: int) -> "QueryParseError":
+        return QueryParseError(msg, line, col)
+
+    # -- line dispatch -----------------------------------------------------
+    def parse(self) -> VMRQuery:
+        section: Optional[str] = None
+        seen_sections = set()
+        for lineno, raw in enumerate(self.text.splitlines(), 1):
+            stripped = raw.strip()
+            if not stripped or stripped.startswith("#"):
+                continue
+            col0 = raw.index(stripped[0]) + 1
+            header = self._match_header(stripped, lineno, col0)
+            if header is not None:
+                if header in seen_sections:
+                    raise self.error(f"duplicate section {header}", lineno,
+                                     col0)
+                seen_sections.add(header)
+                section = header
+                continue
+            if section is None:
+                raise self.error(
+                    "expected a section header first (one of: "
+                    + ", ".join(_SECTIONS) + ")", lineno, col0)
+            if section in _TRAILING_COMMENT_SECTIONS:
+                stripped = re.sub(r"\s*#.*$", "", stripped)
+                if not stripped:
+                    continue
+            getattr(self, "_parse_" + section.lower())(stripped, lineno,
+                                                       col0)
+        return self._build()
+
+    def _match_header(self, stripped: str, lineno: int,
+                      col0: int) -> Optional[str]:
+        m = _HEADER_RE.fullmatch(stripped)
+        if not m:
+            return None
+        word = m.group(1)
+        if word.upper() in _SECTIONS:
+            return word.upper()
+        if word.isupper():
+            raise self.error(
+                f"unknown section {word!r}"
+                + _suggest(word.upper(), _SECTIONS)
+                + f" (sections: {', '.join(_SECTIONS)})", lineno, col0)
+        return None     # content line (e.g. an entity named 'e1' — invalid
+                        # in its section, reported there)
+
+    # -- sections ----------------------------------------------------------
+    def _parse_decl(self, stripped: str, lineno: int, col0: int, kind: str,
+                    table: Dict[str, str]):
+        m = _DECL_RE.match(stripped)
+        if not m:
+            raise self.error(
+                f"expected '<name>: <description>' in {kind.upper()}S",
+                lineno, col0)
+        name, desc = m.group(1), m.group(2).strip()
+        if not desc:
+            raise self.error(f"empty description for {kind} {name!r}",
+                             lineno, col0 + m.end(1))
+        if name in table:
+            raise self.error(f"duplicate {kind} name {name!r}", lineno, col0)
+        table[name] = desc
+
+    def _parse_entities(self, stripped, lineno, col0):
+        self._parse_decl(stripped, lineno, col0, "entity", self.entities)
+
+    def _parse_relationships(self, stripped, lineno, col0):
+        self._parse_decl(stripped, lineno, col0, "relationship",
+                         self.relationships)
+
+    def _parse_frames(self, stripped, lineno, col0):
+        m = _DECL_RE.match(stripped)
+        if not m:
+            raise self.error(
+                "expected '<frame>: (subject predicate object), ...'",
+                lineno, col0)
+        name, rest = m.group(1), m.group(2)
+        if name in self.frames:
+            raise self.error(f"duplicate frame name {name!r}", lineno, col0)
+        base = col0 + m.start(2)
+        triples: List[Triple] = []
+        pos = 0
+        for g in _TRIPLE_RE.finditer(rest):
+            gap = rest[pos:g.start()]
+            if gap.strip(" ,\t"):
+                raise self.error(
+                    f"unexpected text {gap.strip()!r} between triples",
+                    lineno, base + pos + len(gap) - len(gap.lstrip()))
+            triples.append(self._parse_triple(g.group(1), lineno,
+                                              base + g.start(1)))
+            pos = g.end()
+        tail = rest[pos:]
+        if tail.strip(" ,\t"):
+            raise self.error(
+                f"expected '(subject predicate object)', got "
+                f"{tail.strip()!r}", lineno,
+                base + pos + len(tail) - len(tail.lstrip()))
+        self.frames[name] = tuple(triples)
+
+    def _parse_triple(self, inner: str, lineno: int, col0: int) -> Triple:
+        toks = [(t.group(0), t.start()) for t in
+                re.finditer(_NAME, inner)]
+        leftover = re.sub(rf"{_NAME}|[,\s]", "", inner)
+        if len(toks) != 3 or leftover:
+            raise self.error(
+                f"a triple is '(subject predicate object)', got "
+                f"({inner.strip()})", lineno, col0)
+        (s, s_at), (p, p_at), (o, o_at) = toks
+        # resolution happens in _build so FRAMES may precede ENTITIES
+        self._name_refs.append(("entity", s, lineno, col0 + s_at))
+        self._name_refs.append(("relationship", p, lineno, col0 + p_at))
+        self._name_refs.append(("entity", o, lineno, col0 + o_at))
+        return Triple(s, p, o)
+
+    def _parse_constraints(self, stripped, lineno, col0):
+        if (m := _CMP_RE.match(stripped)):
+            later, earlier = m.group(1), m.group(2)
+            l_at, e_at = m.start(1), m.start(2)
+            n = int(m.group(4))
+            lo, hi = {
+                ">": (n + 1, None), ">=": (n, None),
+                "<": (None, n - 1), "<=": (None, n),
+                "==": (n, n), "=": (n, n),
+            }[m.group(3)]
+        elif (m := _RANGE_RE.match(stripped)):
+            a, op1, later, earlier, op2, b = m.groups()
+            l_at, e_at = m.start(3), m.start(4)
+            lo = int(a) + (1 if op1 == "<" else 0)
+            hi = int(b) - (1 if op2 == "<" else 0)
+        elif (m := _IN_RE.match(stripped)):
+            later, earlier = m.group(1), m.group(2)
+            l_at, e_at = m.start(1), m.start(2)
+            lo, hi = int(m.group(3)), int(m.group(4))
+        else:
+            raise self.error(
+                "expected a constraint like 'f1 - f0 > 4', "
+                "'2 <= f1 - f0 <= 9' or 'f1 - f0 in [2, 9]'",
+                lineno, col0)
+        if later == earlier:
+            raise self.error(
+                f"constraint relates frame {later!r} to itself", lineno,
+                col0)
+        if lo is not None and lo < 1:
+            raise self.error(
+                f"gap bounds must be >= 1 frame (frames are strictly "
+                f"ordered), got a minimum of {lo}", lineno, col0)
+        if hi is not None and hi < (lo if lo is not None else 1):
+            raise self.error(
+                f"empty constraint window: min gap "
+                f"{lo if lo is not None else 1} > max gap {hi}", lineno,
+                col0)
+        self._raw_constraints.append(
+            (later, earlier, lo, hi, lineno, col0 + l_at, col0 + e_at))
+
+    def _parse_options(self, stripped, lineno, col0):
+        m = re.match(rf"({_NAME})\s*[:=]\s*(.+)$", stripped)
+        if not m:
+            raise self.error("expected '<option> = <value>'", lineno, col0)
+        key, val = m.group(1), m.group(2).strip()
+        vcol = col0 + m.start(2)
+        if key not in _OPTIONS:
+            raise self.error(
+                f"unknown option {key!r}" + _suggest(key, _OPTIONS)
+                + f" (options: {', '.join(sorted(_OPTIONS))})", lineno,
+                col0)
+        if key in self.options:
+            raise self.error(f"duplicate option {key!r}", lineno, col0)
+        if _OPTIONS[key] is None:       # bool
+            low = val.lower()
+            if low in ("true", "yes", "on", "1"):
+                self.options[key] = True
+            elif low in ("false", "no", "off", "0"):
+                self.options[key] = False
+            else:
+                raise self.error(
+                    f"option {key!r} expects true/false, got {val!r}",
+                    lineno, vcol)
+            return
+        try:
+            self.options[key] = _OPTIONS[key](val)
+        except ValueError:
+            raise self.error(
+                f"option {key!r} expects {_OPTIONS[key].__name__}, got "
+                f"{val!r}", lineno, vcol) from None
+
+    # -- assembly ----------------------------------------------------------
+    def _build(self) -> VMRQuery:
+        if not self.frames:
+            raise self.error(
+                "query defines no FRAMES — at least one frame spec is "
+                "required", max(1, len(self.text.splitlines())), 1)
+        tables = {"entity": self.entities,
+                  "relationship": self.relationships}
+        for kind, name, lineno, col in self._name_refs:
+            if name not in tables[kind]:
+                raise self.error(
+                    f"unknown {kind} {name!r}"
+                    + _suggest(name, tables[kind]) + _known(tables[kind]),
+                    lineno, col)
+        frame_idx = {n: i for i, n in enumerate(self.frames)}
+        constraints = []
+        for later, earlier, lo, hi, lineno, l_at, e_at in \
+                self._raw_constraints:
+            for name, at in ((later, l_at), (earlier, e_at)):
+                if name not in frame_idx:
+                    raise self.error(
+                        f"unknown frame {name!r}"
+                        + _suggest(name, frame_idx) + _known(frame_idx),
+                        lineno, at)
+            if frame_idx[later] < frame_idx[earlier]:
+                # the engine's chain DP orders frames by declaration; a
+                # reversed difference would be silently flipped
+                raise self.error(
+                    f"constraint direction conflicts with frame order: "
+                    f"{later!r} is declared before {earlier!r} — write "
+                    f"'{earlier} - {later} ...' instead", lineno, l_at)
+            kw = {"min_gap": lo} if lo is not None else {}
+            constraints.append(TemporalConstraint(
+                frame_idx[earlier], frame_idx[later], max_gap=hi, **kw))
+        query = VMRQuery(
+            entities=tuple(Entity(n, t) for n, t in self.entities.items()),
+            relationships=tuple(Relationship(n, t)
+                                for n, t in self.relationships.items()),
+            frames=tuple(FrameSpec(ts) for ts in self.frames.values()),
+            constraints=tuple(constraints),
+            **self.options)
+        query.validate()    # belt & suspenders: parse-time checks cover this
+        return query
+
+
+def parse_query(text: str) -> VMRQuery:
+    """Parse semi-structured query text into a :class:`VMRQuery`.
+
+    Raises :class:`QueryParseError` (with 1-based line/col and
+    did-you-mean suggestions) on malformed input.
+    """
+    return _Parser(text).parse()

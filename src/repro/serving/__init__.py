@@ -1,3 +1,4 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (AdmitResult, Request,  # noqa: F401
+                                  ServingEngine)
 from repro.serving.frontend import QueryFrontend, QueryTicket  # noqa: F401
 from repro.serving.scheduler import Scheduler, StragglerMitigator  # noqa: F401

@@ -36,6 +36,18 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class AdmitResult:
+    """What ``ServingEngine.admit`` did with a request list: ``admitted[i]``
+    was prefilled into slot ``slots[i]``; ``rejected`` holds the requests
+    that did NOT fit into free slots (in submission order) — callers must
+    re-queue them, nothing is silently dropped."""
+
+    slots: List[int]
+    admitted: List["Request"]
+    rejected: List["Request"]
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512, prefill_bucket: int = 128,
@@ -87,12 +99,17 @@ class ServingEngine:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def admit(self, reqs: List[Request]) -> List[int]:
-        """Prefill a padded sub-batch and install into free slots."""
+    def admit(self, reqs: List[Request]) -> AdmitResult:
+        """Prefill a padded sub-batch and install into free slots.
+
+        Requests beyond the free-slot count are returned in
+        ``AdmitResult.rejected`` instead of being silently truncated."""
         if not reqs:
-            return []
+            return AdmitResult([], [], [])
         slots = self._free_slots()[: len(reqs)]
-        reqs = reqs[: len(slots)]
+        reqs, rejected = reqs[: len(slots)], reqs[len(slots):]
+        if not slots:
+            return AdmitResult([], [], rejected)
         plen = self.prefill_bucket
         while plen < max(len(r.tokens) for r in reqs):
             plen *= 2
@@ -110,7 +127,7 @@ class ServingEngine:
             self.slot_req[s] = r
             self.slot_len[s] = lens[i]
             r.out.append(int(next_np[i]))
-        return slots
+        return AdmitResult(slots, reqs, rejected)
 
     def _install(self, slot: int, src_cache, src_row: int, length: int):
         def copy(dst, src):

@@ -1,23 +1,25 @@
 """Multi-query admission frontend for the LazyVLM engine.
 
 ``QueryFrontend`` is the serving-side entry point for VMR queries: callers
-``submit`` a ``VMRQuery`` and get a ticket back; the frontend drains the
-queue in FIFO batches of up to ``max_admit`` through
-``LazyVLMEngine.query_batch`` — the same admission pattern ``Scheduler``
-uses for token requests. Batching is where the engine amortizes work across
-queries: one embedding call (with the host-side text cache), one fused
-top-k / selection / bitmap launch per stage, and one deduped VLM
-verification pass shared by every query in the batch.
+``submit`` query text (the semi-structured language) or a ``VMRQuery`` and
+get a ticket back; the frontend drains the queue in FIFO batches of up to
+``max_admit`` through the session's ``query_batch`` — the same admission
+pattern ``Scheduler`` uses for token requests. Batching is where the engine
+amortizes work across queries: one embedding call (with the host-side text
+cache), one fused top-k / selection / bitmap launch per stage, and one
+deduped VLM verification pass shared by every query in the batch; the plan
+cache additionally lets repeat queries skip compilation.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Union
 
 from repro.core.executor import LazyVLMEngine, QueryResult
 from repro.core.query import VMRQuery
+from repro.session import QueryLike, Session
 
 
 @dataclass
@@ -39,9 +41,13 @@ class QueryTicket:
 
 
 class QueryFrontend:
-    def __init__(self, engine: LazyVLMEngine, *, max_admit: int = 8,
-                 max_finished: int = 4096):
-        self.engine = engine
+    def __init__(self, session: Union[Session, LazyVLMEngine], *,
+                 max_admit: int = 8, max_finished: int = 4096):
+        # accept a bare engine for backward compatibility — the facade is
+        # the query surface either way
+        self.session = (session if isinstance(session, Session)
+                        else Session(session))
+        self.engine = self.session.engine
         self.max_admit = max_admit
         self.waiting: Deque[QueryTicket] = deque()
         # bounded history: callers hold their own tickets; this is only a
@@ -51,9 +57,10 @@ class QueryFrontend:
         self.batches_run = 0
         self._next_qid = 0
 
-    def submit(self, query: VMRQuery) -> QueryTicket:
-        # validate at admission so a malformed query fails its own submitter
-        # immediately instead of poisoning a whole execution batch
+    def submit(self, query: QueryLike) -> QueryTicket:
+        # parse + validate at admission so a malformed query fails its own
+        # submitter immediately instead of poisoning a whole execution batch
+        query = self.session.resolve(query)
         query.validate()
         ticket = QueryTicket(self._next_qid, query, time.perf_counter())
         self._next_qid += 1
@@ -72,7 +79,7 @@ class QueryFrontend:
 
     def _execute(self, batch: List[QueryTicket]) -> None:
         try:
-            results = self.engine.query_batch([t.query for t in batch])
+            results = self.session.query_batch([t.query for t in batch])
         except Exception as exc:
             # never strand tickets: an engine failure completes the whole
             # batch with the error attached (result stays None)

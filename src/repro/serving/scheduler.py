@@ -49,8 +49,11 @@ class Scheduler:
                 admit = [self.waiting.popleft()
                          for _ in range(min(free, self.max_admit,
                                             len(self.waiting)))]
-                self.engine.admit(admit)
-                inflight += admit
+                res = self.engine.admit(admit)
+                inflight += res.admitted
+                # anything the engine couldn't seat goes back to the queue
+                # head (arrival order preserved) for the next free slot
+                self.waiting.extendleft(reversed(res.rejected))
             self.engine.step()
             steps += 1
             done = [r for r in inflight if r.done]

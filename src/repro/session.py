@@ -1,0 +1,120 @@
+"""``Session`` — the user-facing entry point for LazyVLM video analytics.
+
+The paper's promised workflow in three lines: drop in video data, ask in
+the semi-structured text language, get ranked segments back.
+
+    from repro.session import open_video_store
+
+    session = open_video_store(stores, embedder, verifier=verifier)
+    result = session.query('''
+        ENTITIES:
+          e1: man with backpack
+          e2: bicycle
+        RELATIONSHIPS:
+          r1: near
+        FRAMES:
+          f0: (e1 r1 e2)
+    ''')
+    print(session.explain(text))       # plan tree + SQL + launch counts
+
+``query``/``query_batch``/``explain`` accept either query text or a
+``VMRQuery`` object; text goes through ``repro.lang.parse_query``, and
+every query is compiled through the engine's plan cache — a repeat or
+structurally identical query skips compilation entirely (``explain``
+reports whether it hit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Union
+
+from repro.core.executor import LazyVLMEngine, QueryResult
+from repro.core.plan import Plan, PlanCache
+from repro.core.query import VMRQuery
+from repro.lang import parse_query
+
+QueryLike = Union[str, VMRQuery]
+
+
+@dataclass
+class Explanation:
+    """``Session.explain`` output: the compiled plan and its renderings.
+
+    ``sql`` holds the plan-time SQL template per triple (candidate sets are
+    symbolic until execution binds them); ``launches`` is the static
+    per-stage device-launch prediction; ``cached`` says whether this
+    explain's compile was served from the plan cache.
+    """
+
+    plan: Plan
+    tree: str
+    sql: List[str]
+    launches: Dict[str, int]
+    cached: bool
+
+    @property
+    def total_launches(self) -> int:
+        return sum(self.launches.values())
+
+    def __str__(self) -> str:
+        parts = [self.tree, "",
+                 f"plan cache: {'HIT' if self.cached else 'MISS (compiled)'}"]
+        if self.sql:
+            parts += ["", "-- generated SQL (plan-time templates)"]
+            parts += self.sql
+        return "\n".join(parts)
+
+
+class Session:
+    """Facade over a :class:`LazyVLMEngine`: text in, ranked segments out.
+
+    Construct via :func:`open_video_store`, or wrap an existing engine
+    directly (``Session(engine)``) to share its plan/embedding caches.
+    """
+
+    def __init__(self, engine: LazyVLMEngine):
+        self.engine = engine
+
+    # -- query entry points ------------------------------------------------
+    def resolve(self, query: QueryLike) -> VMRQuery:
+        """Text -> ``VMRQuery`` (parse), ``VMRQuery`` -> itself."""
+        return parse_query(query) if isinstance(query, str) else query
+
+    def query(self, query: QueryLike) -> QueryResult:
+        """Parse (if text), compile through the plan cache, execute."""
+        return self.engine.query(self.resolve(query))
+
+    def query_batch(self, queries: List[QueryLike]) -> List[QueryResult]:
+        """Batched execution with fused stage launches (see
+        ``LazyVLMEngine.execute_batch``)."""
+        return self.engine.query_batch([self.resolve(q) for q in queries])
+
+    def explain(self, query: QueryLike) -> Explanation:
+        """Compile only: return the plan tree, per-triple SQL templates,
+        the predicted launch counts, and whether the plan cache hit."""
+        q = self.resolve(query)
+        plan, cached = self.engine.plan_cache.lookup(
+            q, self.engine.stores, verify=self.engine.verifier is not None)
+        return Explanation(plan=plan, tree=plan.render_tree(),
+                           sql=plan.sql_templates(),
+                           launches=plan.predicted_launches(),
+                           cached=cached)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def plan_cache(self) -> PlanCache:
+        return self.engine.plan_cache
+
+    @property
+    def stores(self):
+        return self.engine.stores
+
+
+def open_video_store(stores, embedder, *, verifier=None, mesh=None,
+                     use_kernels: bool = False, **engine_kwargs) -> Session:
+    """Open a query session over ingested video stores (the 'drop in video
+    data' step is ``repro.video.ingest``; this wires the engine around its
+    output)."""
+    engine = LazyVLMEngine(stores, embedder, verifier=verifier, mesh=mesh,
+                           use_kernels=use_kernels, **engine_kwargs)
+    return Session(engine)

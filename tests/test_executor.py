@@ -6,8 +6,9 @@ import numpy as np
 import pytest
 
 from repro.core import LazyVLMEngine, example_2_1
-from repro.core.query import (Entity, FrameSpec, Relationship,
-                              TemporalConstraint, Triple, VMRQuery)
+from repro.core.query import (Entity, FrameSpec, QueryValidationError,
+                              Relationship, TemporalConstraint, Triple,
+                              VMRQuery)
 from repro.core.refine import MockVerifier
 from repro.semantic import OracleEmbedder
 from repro.serving import QueryFrontend
@@ -176,7 +177,7 @@ def test_frontend_rejects_invalid_query_at_submit(world, stores):
     good = frontend.submit(_single(_descs(world)[0], _descs(world)[1], 0))
     bad = VMRQuery(entities=(Entity("a", "x"),), relationships=(),
                    frames=(FrameSpec((Triple("a", "nope", "a"),)),))
-    with pytest.raises(AssertionError):
+    with pytest.raises(QueryValidationError):
         frontend.submit(bad)
     frontend.drain()
     assert good.done and good.error is None and good.result is not None

@@ -1,0 +1,242 @@
+"""Query language: parse/format round-trips (including the paper's Example
+2.1 as a text literal), precise parse-error positions and did-you-mean
+suggestions, and hypothesis round-trip properties."""
+import pytest
+
+from repro.core import example_2_1
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.lang import (EXAMPLE_2_1_TEXT, QueryParseError, format_query,
+                        parse_query)
+
+from tests._hyp import given, settings, st
+
+
+def test_example_2_1_text_literal():
+    assert parse_query(EXAMPLE_2_1_TEXT) == example_2_1()
+
+
+def test_example_2_1_format_parse_roundtrip():
+    q = example_2_1()
+    assert parse_query(format_query(q)) == q
+
+
+def test_roundtrip_with_options_and_windows():
+    q = VMRQuery(
+        entities=(Entity("a", "red car"), Entity("b", "red car"),
+                  Entity("c", "stop sign")),
+        relationships=(Relationship("r", "next to"),),
+        frames=(FrameSpec((Triple("a", "r", "c"), Triple("b", "r", "c"))),
+                FrameSpec(()),
+                FrameSpec((Triple("a", "r", "b"),))),
+        constraints=(TemporalConstraint(0, 2, min_gap=3, max_gap=9),
+                     TemporalConstraint(1, 2, min_gap=1)),
+        top_k=8, text_threshold=0.5, image_search=True,
+        image_threshold=0.7, predicate_top_m=3)
+    assert parse_query(format_query(q)) == q
+
+
+def test_parse_accepts_comma_and_space_triple_forms():
+    base = ("ENTITIES:\n  a: man\n  b: dog\nRELATIONSHIPS:\n  r: near\n"
+            "FRAMES:\n  f0: %s\n")
+    want = VMRQuery(entities=(Entity("a", "man"), Entity("b", "dog")),
+                    relationships=(Relationship("r", "near"),),
+                    frames=(FrameSpec((Triple("a", "r", "b"),)),))
+    for form in ["(a r b)", "(a, r, b)", "( a ,r, b )"]:
+        assert parse_query(base % form) == want
+
+
+def test_trailing_comments_on_structured_lines():
+    """FRAMES/CONSTRAINTS/OPTIONS lines allow trailing '#' comments;
+    entity/relationship descriptions keep '#' as content."""
+    q = parse_query(
+        "ENTITIES:\n"
+        "  a: runner with #7 bib\n"          # '#' is content here
+        "RELATIONSHIPS:\n  r: near\n"
+        "FRAMES:\n"
+        "  f0: (a r a)   # both roles\n"
+        "  f1:           # unconstrained\n"
+        "CONSTRAINTS:\n"
+        "  f1 - f0 > 4   # also: >=, <=, ==, in [lo, hi]\n"
+        "OPTIONS:\n"
+        "  top_k = 8     # any VMRQuery hyperparameter\n")
+    assert q.entities[0].text == "runner with #7 bib"
+    assert q.frames[1].triples == ()
+    assert q.constraints[0].min_gap == 5
+    assert q.top_k == 8
+
+
+def test_parse_is_case_insensitive_on_headers_and_skips_comments():
+    text = ("# top comment\nentities\n  a: man\nRelationships:\n  r: near\n"
+            "frames:\n  f0: (a r a)\n\n# trailing comment\n")
+    q = parse_query(text)
+    assert q.frames[0].triples == (Triple("a", "r", "a"),)
+
+
+@pytest.mark.parametrize("op,lo,hi", [
+    ("f1 - f0 > 4", 5, None), ("f1 - f0 >= 5", 5, None),
+    ("f1 - f0 <= 9", 1, 9), ("f1 - f0 < 9", 1, 8),
+    ("f1 - f0 == 3", 3, 3), ("f1 - f0 = 3", 3, 3),
+    ("2 <= f1 - f0 <= 9", 2, 9), ("2 < f1 - f0 < 9", 3, 8),
+    ("f1 - f0 in [2, 9]", 2, 9), ("f1 - f0 IN [2, 9]", 2, 9),
+])
+def test_constraint_forms(op, lo, hi):
+    text = ("ENTITIES:\n  a: man\nFRAMES:\n  f0: (a r a)\n  f1:\n"
+            "RELATIONSHIPS:\n  r: near\nCONSTRAINTS:\n  " + op + "\n")
+    # frames before relationships on purpose: section order is free
+    c = parse_query(text).constraints[0]
+    assert (c.earlier, c.later, c.min_gap, c.max_gap) == (0, 1, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# error positions + suggestions
+# ---------------------------------------------------------------------------
+def _err(text: str) -> QueryParseError:
+    with pytest.raises(QueryParseError) as ei:
+        parse_query(text)
+    return ei.value
+
+
+def test_unknown_section_suggestion():
+    e = _err("ENTITYS:\n  a: man\n")
+    assert e.line == 1 and e.col == 1
+    assert "did you mean 'ENTITIES'" in str(e)
+
+
+def test_unknown_entity_in_triple_has_position_and_suggestion():
+    e = _err("ENTITIES:\n  e1: man\nRELATIONSHIPS:\n  r1: near\n"
+             "FRAMES:\n  f0: (e2 r1 e1)\n")
+    assert e.line == 6
+    assert e.col == 8                       # points at 'e2'
+    assert "unknown entity 'e2'" in e.message
+    assert "did you mean 'e1'" in e.message
+
+
+def test_unknown_relationship_lists_available():
+    e = _err("ENTITIES:\n  a: man\nRELATIONSHIPS:\n  near: near\n"
+             "  far: far from\nFRAMES:\n  f0: (a nearr a)\n")
+    assert "did you mean 'near'" in e.message
+    assert "available: far, near" in e.message
+
+
+def test_unknown_frame_in_constraint():
+    e = _err("ENTITIES:\n  a: man\nRELATIONSHIPS:\n  r: near\n"
+             "FRAMES:\n  f0: (a r a)\nCONSTRAINTS:\n  f1 - f0 > 4\n")
+    assert e.line == 8 and "unknown frame 'f1'" in e.message
+
+
+def test_unknown_option_suggestion_and_bad_value():
+    e = _err("ENTITIES:\n  a: man\nFRAMES:\n  f0:\nOPTIONS:\n  topk = 4\n")
+    assert "did you mean 'top_k'" in e.message
+    e = _err("ENTITIES:\n  a: man\nFRAMES:\n  f0:\nOPTIONS:\n"
+             "  text_threshold = hot\n")
+    assert e.line == 6 and "expects float" in e.message
+
+
+def test_duplicate_names_rejected():
+    assert "duplicate entity" in _err(
+        "ENTITIES:\n  a: man\n  a: dog\nFRAMES:\n  f0:\n").message
+    assert "duplicate frame" in _err(
+        "ENTITIES:\n  a: man\nFRAMES:\n  f0:\n  f0:\n").message
+    assert "duplicate section" in _err(
+        "ENTITIES:\n  a: man\nENTITIES:\n  b: dog\nFRAMES:\n  f0:\n").message
+
+
+def test_content_before_any_section():
+    e = _err("e1: man\n")
+    assert e.line == 1 and "section header" in e.message
+
+
+def test_empty_description_and_missing_frames():
+    assert "empty description" in _err("ENTITIES:\n  a:\nFRAMES:\n f0:\n"
+                                       ).message
+    assert "no FRAMES" in _err("ENTITIES:\n  a: man\n").message
+
+
+def test_malformed_triple_and_stray_text():
+    e = _err("ENTITIES:\n  a: man\nRELATIONSHIPS:\n  r: near\n"
+             "FRAMES:\n  f0: (a r)\n")
+    assert "a triple is" in e.message
+    e = _err("ENTITIES:\n  a: man\nRELATIONSHIPS:\n  r: near\n"
+             "FRAMES:\n  f0: (a r a) junk\n")
+    assert "junk" in e.message
+
+
+def test_self_constraint_and_empty_window():
+    base = ("ENTITIES:\n  a: man\nFRAMES:\n  f0:\n  f1:\nCONSTRAINTS:\n  %s\n")
+    assert "to itself" in _err(base % "f0 - f0 > 2").message
+    assert "empty constraint window" in _err(base % "9 <= f1 - f0 <= 2"
+                                             ).message
+
+
+def test_reversed_constraint_direction_rejected():
+    """'f0 - f1 > 4' would be silently flipped by gap normalization —
+    the parser must reject it instead of executing the opposite query."""
+    base = ("ENTITIES:\n  a: man\nFRAMES:\n  f0:\n  f1:\nCONSTRAINTS:\n  %s\n")
+    e = _err(base % "f0 - f1 > 4")
+    assert "direction conflicts with frame order" in e.message
+    assert "'f1 - f0 ...'" in e.message
+
+
+def test_nonpositive_gap_bounds_rejected():
+    """Gaps below 1 frame would be silently bumped to 1 by normalization —
+    reject them up front (frames are strictly ordered)."""
+    base = ("ENTITIES:\n  a: man\nFRAMES:\n  f0:\n  f1:\nCONSTRAINTS:\n  %s\n")
+    for form in ["f1 - f0 >= 0", "f1 - f0 > -3", "f1 - f0 == 0",
+                 "f1 - f0 in [0, 5]", "0 <= f1 - f0 <= 5"]:
+        assert "must be >= 1" in _err(base % form).message
+
+
+# ---------------------------------------------------------------------------
+# property tests (skipped cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+_texts = st.text(alphabet="abcdefgh XYZ-'_.0123456789", min_size=1,
+                 max_size=16).map(lambda s: s.strip()).filter(bool)
+
+
+@st.composite
+def _queries(draw):
+    n_e = draw(st.integers(1, 4))
+    n_r = draw(st.integers(1, 3))
+    n_f = draw(st.integers(1, 3))
+    entities = tuple(Entity(f"e{i}", draw(_texts)) for i in range(n_e))
+    rels = tuple(Relationship(f"r{i}", draw(_texts)) for i in range(n_r))
+    frames = tuple(
+        FrameSpec(tuple(
+            Triple(f"e{draw(st.integers(0, n_e - 1))}",
+                   f"r{draw(st.integers(0, n_r - 1))}",
+                   f"e{draw(st.integers(0, n_e - 1))}")
+            for _ in range(draw(st.integers(0, 3)))))
+        for _ in range(n_f))
+    constraints = []
+    for _ in range(draw(st.integers(0, 2)) if n_f > 1 else 0):
+        a = draw(st.integers(0, n_f - 1))
+        b = draw(st.integers(0, n_f - 1))
+        if a == b:
+            continue
+        a, b = min(a, b), max(a, b)       # constraints must run forward
+        lo = draw(st.integers(1, 6))
+        hi = draw(st.one_of(st.none(), st.integers(lo, 12)))
+        constraints.append(TemporalConstraint(a, b, min_gap=lo, max_gap=hi))
+    opts = {}
+    if draw(st.booleans()):
+        opts["top_k"] = draw(st.integers(1, 64))
+    if draw(st.booleans()):
+        opts["image_search"] = True
+    if draw(st.booleans()):
+        opts["predicate_top_m"] = draw(st.integers(1, 4))
+    return VMRQuery(entities=entities, relationships=rels, frames=frames,
+                    constraints=tuple(constraints), **opts)
+
+
+@given(q=_queries())
+@settings(max_examples=60, deadline=None)
+def test_parse_format_roundtrip_property(q):
+    assert parse_query(format_query(q)) == q
+
+
+@given(q=_queries())
+@settings(max_examples=30, deadline=None)
+def test_format_is_stable_property(q):
+    text = format_query(q)
+    assert format_query(parse_query(text)) == text

@@ -1,0 +1,175 @@
+"""Logical plan IR: compilation, optimizer passes (cross-frame triple
+dedupe, shared-entity embed reuse, static capacity/bucket selection), plan
+equality, and the query-signature plan cache."""
+import pytest
+
+from repro.core import LazyVLMEngine, compile_plan, example_2_1
+from repro.core.plan import PlanCache, pow2_bucket, store_fingerprint
+from repro.core.query import (Entity, FrameSpec, QueryValidationError,
+                              Relationship, Triple, VMRQuery)
+from repro.semantic import OracleEmbedder
+from repro.video import SyntheticWorld, WorldConfig, ingest
+
+
+@pytest.fixture(scope="module")
+def stores():
+    world = SyntheticWorld(WorldConfig(num_segments=6, frames_per_segment=32,
+                                       objects_per_segment=7, seed=5))
+    return ingest(world, OracleEmbedder(dim=64))
+
+
+def _query(**kw):
+    base = dict(
+        entities=(Entity("a", "man"), Entity("b", "dog"),
+                  Entity("c", "man")),
+        relationships=(Relationship("r1", "near"),
+                       Relationship("r2", "near")),
+        frames=(FrameSpec((Triple("a", "r1", "b"), Triple("c", "r2", "b"))),
+                FrameSpec((Triple("a", "r1", "b"),))))
+    base.update(kw)
+    return VMRQuery(**base)
+
+
+def test_cross_frame_triple_dedupe(stores):
+    plan = compile_plan(example_2_1(), stores, verify=False)
+    # 4 triple occurrences across 2 frames, 3 unique
+    assert len(plan.triple_select.triples) == 3
+    assert plan.conjoin.frames == ((0, 1), (0, 2))
+
+
+def test_shared_entity_embed_reuse(stores):
+    plan = compile_plan(_query(), stores, verify=False)
+    em = plan.entity_match
+    assert em.texts == ("man", "dog")      # 'man' embedded once for a and c
+    assert em.rows == (0, 1, 0)
+    pm = plan.predicate_match
+    assert pm.texts == ("near",)           # r1/r2 share one embedding row
+    assert pm.rows == (0, 0)
+
+
+def test_static_capacity_and_bucket_selection(stores):
+    cap = stores.entities.capacity
+    plan = compile_plan(_query(top_k=10 * cap), stores, verify=False)
+    assert plan.entity_match.k == cap                 # capacity clamp
+    assert plan.predicate_match.m <= len(stores.predicates.labels)
+    assert plan.temporal.top_k == stores.num_segments
+    assert plan.triple_select.bucket == pow2_bucket(
+        len(plan.triple_select.triples))
+    assert plan.triple_select.bucket >= len(plan.triple_select.triples)
+
+
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 4, 5, 8, 9)] == [4, 4, 8, 8, 16]
+    assert pow2_bucket(3, minimum=2) == 4
+
+
+def test_structurally_identical_queries_compile_to_equal_plans(stores):
+    p1 = compile_plan(example_2_1(), stores, verify=True)
+    p2 = compile_plan(example_2_1(), stores, verify=True)
+    assert p1 == p2
+    assert p1.chain_signature() == p2.chain_signature()
+    p3 = compile_plan(example_2_1(min_gap_frames=7), stores, verify=True)
+    assert p1 != p3
+
+
+def test_compile_rejects_invalid_query(stores):
+    bad = VMRQuery(entities=(Entity("a", "x"),), relationships=(),
+                   frames=(FrameSpec((Triple("a", "nope", "a"),)),))
+    with pytest.raises(QueryValidationError):
+        compile_plan(bad, stores, verify=False)
+
+
+def test_plan_rendering_and_sql_templates(stores):
+    plan = compile_plan(example_2_1(), stores, verify=True)
+    tree = plan.render_tree()
+    for node in ("EntityMatch", "PredicateMatch", "TripleSelect",
+                 "VlmVerify", "ConjoinFrames", "TemporalChain"):
+        assert node in tree
+    assert "man with backpack" in tree
+    sqls = plan.sql_templates()
+    assert len(sqls) == 3
+    assert all(s.startswith("SELECT vid, fid FROM relationships")
+               for s in sqls)
+    assert "'man with backpack'" in sqls[0]
+    launches = plan.predicted_launches()
+    assert launches["temporal_chain"] == 1          # 2 frames -> 1 step
+    assert plan.total_launches() == sum(launches.values())
+
+
+def test_plan_cache_hit_and_counters(stores):
+    cache = PlanCache()
+    p1, cached1 = cache.lookup(example_2_1(), stores, verify=False)
+    p2, cached2 = cache.lookup(example_2_1(), stores, verify=False)
+    assert not cached1 and cached2
+    assert p1 is p2                    # no recompilation on hit
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a different verify flag (or store shape) is a different signature
+    _, cached3 = cache.lookup(example_2_1(), stores, verify=True)
+    assert not cached3
+
+
+def test_plan_cache_eviction_is_bounded(stores):
+    cache = PlanCache(max_entries=2)
+    for k in (4, 8, 16):
+        cache.lookup(_query(top_k=k), stores, verify=False)
+    assert len(cache) == 2
+    # the oldest (top_k=4) was evicted FIFO -> recompiles
+    _, cached = cache.lookup(_query(top_k=4), stores, verify=False)
+    assert not cached
+
+
+def test_engine_query_uses_plan_cache(stores):
+    engine = LazyVLMEngine(stores, OracleEmbedder(dim=64))
+    q = example_2_1()
+    r1 = engine.query(q)
+    assert (engine.plan_cache.hits, engine.plan_cache.misses) == (0, 1)
+    r2 = engine.query(example_2_1())          # structurally identical
+    assert (engine.plan_cache.hits, engine.plan_cache.misses) == (1, 1)
+    assert r1.segments == r2.segments and r1.scores == r2.scores
+    engine.query_batch([q, example_2_1(min_gap_frames=2)])
+    assert engine.plan_cache.hits == 2        # q hit again inside the batch
+    assert engine.plan_cache.misses == 2
+
+
+def test_execute_honors_plan_verify_node(stores):
+    """A plan compiled with verify=False must skip refinement even on an
+    engine that has a verifier — execution matches the EXPLAINed plan."""
+    from repro.core.refine import MockVerifier
+    world = SyntheticWorld(WorldConfig(num_segments=6, frames_per_segment=32,
+                                       objects_per_segment=7, seed=5))
+    st = ingest(world, OracleEmbedder(dim=64))
+    engine = LazyVLMEngine(st, OracleEmbedder(dim=64),
+                           verifier=MockVerifier(world))
+    q = example_2_1()
+    no_verify = compile_plan(q, st, verify=False)
+    res = engine.execute(no_verify)
+    assert engine.verifier.calls == 0
+    assert res.stats.refine_candidates == 0
+    # batch path: the verify-disabled plan keeps its symbolic masks
+    res_b = engine.execute_batch([no_verify])[0]
+    assert engine.verifier.calls == 0
+    assert res.segments == res_b.segments and res.scores == res_b.scores
+
+
+def test_execute_plan_directly_matches_query(stores):
+    engine = LazyVLMEngine(stores, OracleEmbedder(dim=64))
+    q = example_2_1()
+    plan = engine.plan_for(q)
+    r_plan = engine.execute(plan)
+    r_query = engine.query(q)
+    assert r_plan.segments == r_query.segments
+    assert r_plan.scores == r_query.scores
+    assert r_plan.sql == r_query.sql
+
+
+def test_store_fingerprint_distinguishes_shapes(stores):
+    other = ingest(SyntheticWorld(WorldConfig(num_segments=3,
+                                              frames_per_segment=16,
+                                              objects_per_segment=5,
+                                              seed=1)),
+                   OracleEmbedder(dim=64))
+    assert store_fingerprint(stores) != store_fingerprint(other)
+    cache = PlanCache()
+    cache.lookup(example_2_1(), stores, verify=False)
+    _, cached = cache.lookup(example_2_1(), other, verify=False)
+    assert not cached                   # different store shape -> recompile

@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serving import Request, Scheduler, ServingEngine, StragglerMitigator
+from repro.serving import (AdmitResult, Request, Scheduler, ServingEngine,
+                           StragglerMitigator)
 
 
 @pytest.fixture(scope="module")
@@ -56,6 +57,63 @@ def test_scheduler_handles_more_requests_than_slots(setup):
     done = sched.run()
     assert len(done) == 9
     assert all(len(r.out) == 4 or r.out[-1] == 2 for r in done)
+
+
+def test_admit_returns_rejected_requests(setup):
+    """Over-submission must hand back the unadmitted tail, not silently
+    truncate it."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                        prefill_bucket=16)
+    reqs = [Request(i, np.array([3 + i, 4], np.int32), max_new_tokens=4)
+            for i in range(5)]
+    res = eng.admit(reqs)
+    assert res.admitted == reqs[:2] and res.rejected == reqs[2:]
+    assert len(res.slots) == 2
+    # engine full: nothing admitted, everything returned untouched
+    res2 = eng.admit(reqs[2:])
+    assert res2.slots == [] and res2.admitted == []
+    assert res2.rejected == reqs[2:]
+    assert all(r.out == [] for r in reqs[2:])     # no prefill happened
+    # empty admit is a no-op
+    res3 = eng.admit([])
+    assert (res3.slots, res3.admitted, res3.rejected) == ([], [], [])
+    # after freeing slots, the rejected tail is admittable
+    while any(r is not None for r in eng.slot_req):
+        eng.step()
+    res4 = eng.admit(res2.rejected)
+    assert len(res4.admitted) == 2 and res4.rejected == reqs[4:]
+
+
+def test_scheduler_requeues_rejected_requests():
+    """If admission hands back rejects (engine seats fewer than its free
+    slots suggested), the scheduler must re-queue them at the head —
+    arrival order preserved, nothing lost."""
+
+    class OneSeatEngine:
+        def __init__(self):
+            self.seat = None
+
+        def _free_slots(self):
+            return [0, 1]           # over-reports: only one real seat
+
+        def admit(self, reqs):
+            take = reqs[:1] if self.seat is None else []
+            if take:
+                self.seat = take[0]
+            return AdmitResult([0] * len(take), take, reqs[len(take):])
+
+        def step(self):
+            if self.seat is None:
+                return 0
+            self.seat.done = True
+            self.seat = None
+            return 1
+
+    sched = Scheduler(OneSeatEngine(), max_admit=8)
+    reqs = [sched.submit(np.array([1], np.int32)) for _ in range(4)]
+    done = sched.run()
+    assert [r.rid for r in done] == [r.rid for r in reqs]   # FIFO, complete
 
 
 def test_straggler_reissue_policy():

@@ -1,0 +1,119 @@
+"""Session facade: text queries end-to-end, equivalence with the raw
+engine, EXPLAIN output, and plan-cache behavior through the facade."""
+import numpy as np
+import pytest
+
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.refine import MockVerifier
+from repro.lang import EXAMPLE_2_1_TEXT, QueryParseError
+from repro.semantic import OracleEmbedder
+from repro.serving import QueryFrontend
+from repro.session import Session, open_video_store
+from repro.video import SyntheticWorld, WorldConfig, ingest
+
+
+@pytest.fixture(scope="module")
+def world():
+    # the paper's Example 2.1 event staged into segment 6, plus spurious
+    # noise so refinement has real work to do
+    w = SyntheticWorld(WorldConfig(num_segments=10, frames_per_segment=32,
+                                   objects_per_segment=8, seed=0,
+                                   spurious_prob=0.2))
+    w.stage_event_2_1(vid=6)
+    return w
+
+
+@pytest.fixture(scope="module")
+def stores(world):
+    return ingest(world, OracleEmbedder(dim=64))
+
+
+def _assert_same(r1, r2):
+    assert r1.segments == r2.segments
+    assert r1.scores == r2.scores
+    assert (r1.end_frames == r2.end_frames).all()
+    assert r1.sql == r2.sql
+
+
+def test_session_text_query_equals_engine_query(world, stores):
+    """The acceptance check: the Example 2.1 text literal through the
+    Session equals ``LazyVLMEngine.query(example_2_1())``."""
+    session = open_video_store(stores, OracleEmbedder(dim=64),
+                               verifier=MockVerifier(world))
+    engine = LazyVLMEngine(stores, OracleEmbedder(dim=64),
+                           verifier=MockVerifier(world))
+    _assert_same(session.query(EXAMPLE_2_1_TEXT), engine.query(example_2_1()))
+
+
+def test_session_accepts_text_and_objects(world, stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64))
+    r_text = session.query(EXAMPLE_2_1_TEXT)
+    r_obj = session.query(example_2_1())
+    _assert_same(r_text, r_obj)
+    batch = session.query_batch([EXAMPLE_2_1_TEXT, example_2_1()])
+    for r in batch:
+        _assert_same(r, r_obj)
+
+
+def test_session_parse_error_propagates(stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64))
+    with pytest.raises(QueryParseError):
+        session.query("ENTITIES:\n  a man\n")
+
+
+def test_explain_renders_plan_sql_and_launches(world, stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64),
+                               verifier=MockVerifier(world))
+    exp = session.explain(EXAMPLE_2_1_TEXT)
+    assert not exp.cached
+    assert "EntityMatch" in exp.tree and "TemporalChain" in exp.tree
+    assert len(exp.sql) == 3                      # one per deduped triple
+    assert all("SELECT vid, fid FROM relationships" in s for s in exp.sql)
+    assert exp.total_launches == sum(exp.launches.values()) > 0
+    text = str(exp)
+    assert "MISS" in text and "SELECT" in text
+    # explain compiled the plan -> the execution path now hits the cache
+    exp2 = session.explain(EXAMPLE_2_1_TEXT)
+    assert exp2.cached and "HIT" in str(exp2)
+    assert session.plan_cache.hits == 1
+
+
+def test_repeat_query_skips_compilation(world, stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64),
+                               verifier=MockVerifier(world))
+    session.query(EXAMPLE_2_1_TEXT)
+    assert (session.plan_cache.hits, session.plan_cache.misses) == (0, 1)
+    session.query(EXAMPLE_2_1_TEXT)
+    assert (session.plan_cache.hits, session.plan_cache.misses) == (1, 1)
+
+
+def test_frontend_accepts_session_and_text(world, stores):
+    emb = OracleEmbedder(dim=64)
+    session = open_video_store(stores, emb, verifier=MockVerifier(world))
+    frontend = QueryFrontend(session, max_admit=4)
+    t_text = frontend.submit(EXAMPLE_2_1_TEXT)
+    t_obj = frontend.submit(example_2_1())
+    frontend.drain()
+    _assert_same(t_text.result, t_obj.result)
+    # a malformed text query fails its submitter at submit time
+    with pytest.raises(QueryParseError):
+        frontend.submit("FRAMES\n  f0: (a r b)\n")
+    # frontend still shares the session's plan cache
+    assert frontend.session.plan_cache is session.plan_cache
+    assert session.plan_cache.hits >= 1
+
+
+def test_frontend_wraps_bare_engine(world, stores):
+    engine = LazyVLMEngine(stores, OracleEmbedder(dim=64))
+    frontend = QueryFrontend(engine)
+    assert isinstance(frontend.session, Session)
+    assert frontend.engine is engine
+    t = frontend.submit(EXAMPLE_2_1_TEXT)
+    frontend.drain()
+    assert t.done and t.result is not None
+
+
+def test_session_stores_property(stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64))
+    assert session.stores is stores
+    assert int(np.asarray(stores.entities.table.count())) > 0
