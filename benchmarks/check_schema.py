@@ -1,0 +1,35 @@
+"""Assert the BENCH_lazyvlm.json perf artifact matches the v1 schema.
+
+CI's benchmark smoke step runs ``python -m benchmarks.check_schema
+BENCH_lazyvlm.json`` after the top-k module, so every PR produces a
+machine-readable perf trajectory and fails loudly if the artifact shape or
+the int8 acceptance ratios regress.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str) -> int:
+    d = json.load(open(path))
+    assert d["schema"] == "lazyvlm-bench-v1", d.get("schema")
+    assert d["backend"] and d["git_sha"]
+    assert not d["failed"], f"benchmark modules failed: {d['failed']}"
+    rows = d["rows"]
+    assert rows and all({"module", "name", "value", "derived"} <= set(r)
+                        for r in rows), "malformed rows"
+    ratios = [r for r in rows if "ratio_int8_vs_fp32" in r["name"]]
+    if ratios:
+        bad = [r for r in ratios if r["value"] > 0.3]
+        assert not bad, f"int8 bytes-moved ratio above 0.3x fp32: {bad}"
+    exact = [r for r in rows if r["name"].endswith("int8_exact_vs_ref")]
+    if exact:
+        assert exact[0]["value"] == 1, "int8 two-phase diverged from oracle"
+    print(f"bench schema OK: {len(rows)} rows "
+          f"({len(ratios)} ratio checks, exactness={'yes' if exact else 'n/a'})")
+    return len(rows)
+
+
+if __name__ == "__main__":
+    check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_lazyvlm.json")

@@ -27,14 +27,15 @@ def run():
     q_emb = jnp.asarray(emb.embed_texts(texts))
 
     def fused():
-        s, i = _entity_match(q_emb, ent.text_emb, ent.table.valid, 16)
+        s, i = _entity_match(q_emb, ent.text_emb, ent.text_i8,
+                             ent.table.valid, 16, "fp32", False)
         jax.block_until_ready((s, i))
 
     def sequential():
         outs = []
         for r in range(q_emb.shape[0]):
-            s, i = _entity_match(q_emb[r:r + 1], ent.text_emb,
-                                 ent.table.valid, 16)
+            s, i = _entity_match(q_emb[r:r + 1], ent.text_emb, ent.text_i8,
+                                 ent.table.valid, 16, "fp32", False)
             outs.append((s, i))
         jax.block_until_ready(outs)
 

@@ -7,26 +7,81 @@
   multi_query  — batched multi-query throughput vs sequential query loop
   accuracy     — refinement fixes detector noise (robustness)
   kernels      — fused top-k data-movement model + CPU sanity timing
+  topk_search  — fp32 fused vs int8 two-phase vs oracle (bytes + wall-clock)
   roofline     — printed separately: python -m benchmarks.roofline
+
+``--json [PATH]`` additionally writes the machine-readable perf trajectory
+(default ``BENCH_lazyvlm.json``): every row as {module, name, value, derived}
+plus the backend and git sha, so CI archives comparable numbers per commit.
+``--modules a,b`` restricts the run (the CI smoke step runs just
+``topk_search`` this way).
 """
+import argparse
+import json
+import subprocess
 import sys
 import traceback
 
 
-def main() -> None:
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "HEAD"],
+                              capture_output=True, text=True, check=True,
+                              timeout=10).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_lazyvlm.json",
+                    default=None, metavar="PATH",
+                    help="write results as JSON (default %(const)s)")
+    ap.add_argument("--modules", default=None,
+                    help="comma-separated subset of benchmark modules")
+    args = ap.parse_args(argv)
+
     from benchmarks import (accuracy, kernels, multi_query, parallelism,
-                            pruning, scaling, updates)
+                            pruning, scaling, topk_search, updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
-               kernels]
+               kernels, topk_search]
+    if args.modules:
+        want = {m.strip() for m in args.modules.split(",")}
+        short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}
+        unknown = want - set(short)
+        if unknown:
+            raise SystemExit(f"unknown benchmark module(s): {sorted(unknown)};"
+                             f" available: {sorted(short)}")
+        modules = [short[name] for name in sorted(want)]
+
     print("name,value,derived")
+    results = []
     failed = []
     for m in modules:
+        mod_name = m.__name__.rsplit(".", 1)[-1]
         try:
             for row in m.run():
                 print(",".join(str(x) for x in row), flush=True)
+                name, value, derived = row
+                results.append({"module": mod_name, "name": str(name),
+                                "value": value, "derived": str(derived)})
         except Exception:
             failed.append(m.__name__)
             traceback.print_exc()
+
+    if args.json:
+        import jax
+        payload = {
+            "schema": "lazyvlm-bench-v1",
+            "backend": jax.default_backend(),
+            "git_sha": _git_sha(),
+            "failed": failed,
+            "rows": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json} ({len(results)} rows)", file=sys.stderr)
+
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,93 @@
+"""Top-k entity-search micro-benchmark: fp32 fused kernel vs int8 two-phase
+vs the two-pass jnp oracle.
+
+Two artifact families:
+
+  * **bytes-moved model** at production store sizes — the quantity the int8
+    path actually attacks. The fp32 fused kernel's HBM cost is the fp32 DB
+    read; the two-phase path reads int8 codes (+8 bytes/row of scale/err
+    statistics) and gathers only k' = min(4k, 128) fp32 rows per query for
+    the exact rescore. The ratio lands around D/(D+8)/4 ≈ 0.25 and is
+    asserted ≤ 0.3 by the CI smoke test.
+  * **measured CPU wall-clock sanity** at small scale (both phases as jitted
+    XLA programs — interpret-mode Pallas would time Python, not the
+    algorithm) plus an exactness row: the two-phase result must equal the
+    oracle bitwise, every run, on the benchmark workload.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.kernels import ref
+from repro.kernels.topk_similarity_i8 import (K_PAD, OVERFETCH,
+                                              quantize_rows,
+                                              topk_similarity_i8)
+
+
+def traffic_model(Q: int, N: int, D: int, k: int):
+    """HBM bytes per search for the three implementations."""
+    kprime = min(OVERFETCH * k, K_PAD)
+    out = Q * k * 8
+    two_pass = (N * D * 4            # read fp32 DB
+                + Q * N * 4          # write scores
+                + Q * N * 4          # read scores for top-k
+                + out)
+    fused_fp32 = N * D * 4 + out
+    int8_two_phase = (N * (D + 8)    # int8 codes + fp32 scale + err
+                      + Q * kprime * D * 4   # phase-2 candidate gather
+                      + out)
+    return two_pass, fused_fp32, int8_two_phase
+
+
+def run():
+    rows = []
+    for (Q, N, D, k) in [(8, 1_000_000, 1024, 64),
+                         (64, 10_000_000, 1024, 64),
+                         (512, 10_000_000, 1024, 64)]:
+        two, fused, i8 = traffic_model(Q, N, D, k)
+        tag = f"Q{Q}_N{N // 1000}k"
+        rows.append((f"topk_search/bytes_2pass_{tag}", two, "bytes"))
+        rows.append((f"topk_search/bytes_fp32_fused_{tag}", fused, "bytes"))
+        rows.append((f"topk_search/bytes_int8_2phase_{tag}", i8, "bytes"))
+        rows.append((f"topk_search/bytes_ratio_int8_vs_fp32_{tag}",
+                     round(i8 / fused, 4), "int8/fp32 (<=0.3 target)"))
+
+    # -- measured CPU sanity + exactness at small scale -----------------------
+    # D = 128: within the one-panel contraction depth where the rescore's
+    # fp32 dots round bitwise-identically to the oracle's (docs/performance.md)
+    Q, N, D, k = 8, 65536, 128, 32
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    q = jax.random.normal(ks[0], (Q, D))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    db = jax.random.normal(ks[1], (N, D))
+    db = db / jnp.linalg.norm(db, axis=-1, keepdims=True)
+    valid = jnp.ones((N,), bool)
+    db_i8 = quantize_rows(db)
+
+    f_ref = jax.jit(partial(ref.naive_topk, k=k))
+    f_i8 = jax.jit(partial(topk_similarity_i8, k=k, use_kernel_phase1=False))
+    t_ref = C.timeit(lambda: jax.block_until_ready(f_ref(q, db, valid)),
+                     warmup=2, iters=5)
+    t_i8 = C.timeit(lambda: jax.block_until_ready(f_i8(q, db_i8, db, valid)),
+                    warmup=2, iters=5)
+    ws, wi = f_ref(q, db, valid)
+    gs, gi = f_i8(q, db_i8, db, valid)
+    exact = bool((np.asarray(gs) == np.asarray(ws)).all()
+                 and (np.asarray(gi) == np.asarray(wi)).all())
+    shape = f"Q{Q} N{N} D{D} k{k}"
+    rows.append(("topk_search/ref_cpu_wall_s", t_ref, shape))
+    rows.append(("topk_search/int8_2phase_cpu_wall_s", t_i8, shape))
+    rows.append(("topk_search/int8_exact_vs_ref", int(exact),
+                 "1 = bitwise identical at k"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

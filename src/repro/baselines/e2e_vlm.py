@@ -96,6 +96,5 @@ class E2EVLMBaseline:
             segments=[int(x) for x in segs_np[keep]],
             scores=[int(s) for s in scores_np[keep]],
             end_frames=np.asarray(ends),
-            sql=[],
             stats=stats,
         )

@@ -27,7 +27,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +39,22 @@ from repro.core.query import VMRQuery
 from repro.core.stores import REL_SCHEMA, VideoStores
 from repro.core import temporal as temporal_lib
 from repro.semantic.embed import CachingEmbedder
-from repro.semantic.search import (sharded_topk_similarity, topk_prefix,
-                                   topk_similarity)
+from repro.semantic.search import (SEARCH_MODES, sharded_topk_similarity,
+                                   topk_prefix, topk_similarity)
 from repro.symbolic import ops as sops
 from repro.symbolic.table import Table
+
+
+def _to_host(x) -> np.ndarray:
+    """The single device→host funnel for the execution path.
+
+    Every transfer the executor makes goes through here so tests can spy on
+    transfer *shapes*: with no verifier configured, the symbolic stage must
+    never round-trip a full-capacity ``(ΣT, cap)`` row mask — only the
+    ``(ΣT,)`` per-triple row counts (a fused device reduction) and the small
+    candidate arrays come back to host.
+    """
+    return np.asarray(x)
 
 
 @dataclass
@@ -65,21 +77,40 @@ class QueryResult:
     query's last frame spec can land, see ``temporal.rank_segments``) inside
     ``segments[i]``; more completions = stronger match. Only segments with at
     least one completion are returned, best first.
+
+    ``sql`` (the paper's SQL-generation artifact, one statement per triple)
+    is rendered **lazily** on first access from candidate arrays that are
+    already on host — query execution itself does no string formatting and
+    no extra device transfers for it.
     """
 
     segments: List[int]                  # ranked segment ids
     scores: List[int]                    # chain-completion count per segment
     end_frames: np.ndarray               # (V, F) bool
-    sql: List[str]                       # generated SQL, one per triple
     stats: QueryStats = field(default_factory=QueryStats)
+    sql_renderer: Optional[Callable[[], List[str]]] = None
+    _sql: Optional[List[str]] = field(default=None, repr=False)
+
+    @property
+    def sql(self) -> List[str]:
+        """Generated SQL, one statement per triple (rendered on demand)."""
+        if self._sql is None:
+            self._sql = self.sql_renderer() if self.sql_renderer else []
+        return self._sql
 
 
 # ---------------------------------------------------------------------------
 # jitted stage kernels
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("k",))
-def _entity_match(queries, db, db_valid, k: int):
-    return topk_similarity(queries, db, db_valid, k)
+@partial(jax.jit, static_argnames=("k", "mode", "use_kernels"))
+def _entity_match(queries, db, db_i8, db_valid, k: int, mode: str,
+                  use_kernels: bool):
+    """One fused search launch: mode/kernel dispatch happens at trace time
+    (the Pallas kernels run in interpret mode off-TPU), so the engine's
+    ``use_kernels``/``search_mode`` flags reach the single-device path too,
+    not just the sharded one."""
+    return topk_similarity(queries, db, db_valid, k, use_kernels=use_kernels,
+                           mode=mode, i8=db_i8)
 
 
 @jax.jit
@@ -151,12 +182,30 @@ def render_sql(triple_idx: int, subj_pairs, obj_pairs, pred_ids,
     )
 
 
+def _make_sql_renderer(n_triples: int, offset: int,
+                       sv, se, so, ov, oe, oo, pi, po, predicates
+                       ) -> Callable[[], List[str]]:
+    """Closure rendering a query's SQL from host candidate arrays on demand
+    (``QueryResult.sql``); rows ``offset..offset+n_triples`` of the arrays
+    belong to this query."""
+    def render() -> List[str]:
+        return [render_sql(i,
+                           list(zip(sv[offset + i][so[offset + i]],
+                                    se[offset + i][so[offset + i]])),
+                           list(zip(ov[offset + i][oo[offset + i]],
+                                    oe[offset + i][oo[offset + i]])),
+                           pi[offset + i][po[offset + i]], predicates)
+                for i in range(n_triples)]
+    return render
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 class LazyVLMEngine:
     def __init__(self, stores: VideoStores, embedder, verifier=None, *,
                  mesh=None, use_kernels: bool = False,
+                 search_mode: str = "fp32",
                  embed_cache_entries: int = 4096,
                  plan_cache_entries: int = 256):
         self.stores = stores
@@ -169,6 +218,16 @@ class LazyVLMEngine:
         self.verifier = verifier          # None => trust the symbolic stage
         self.mesh = mesh
         self.use_kernels = use_kernels
+        if search_mode not in SEARCH_MODES:
+            raise ValueError(f"search_mode must be one of {SEARCH_MODES}, "
+                             f"got {search_mode!r}")
+        if search_mode == "int8" and (stores.entities.text_i8 is None
+                                      or stores.entities.image_i8 is None):
+            raise ValueError("search_mode='int8' needs int8 entity banks "
+                             "(text and image); this store was built "
+                             "without them (build_entity_store quantizes "
+                             "at ingest)")
+        self.search_mode = search_mode
         # query-signature -> compiled Plan (repeat queries skip compilation)
         self.plan_cache = PlanCache(max_entries=plan_cache_entries)
 
@@ -176,15 +235,18 @@ class LazyVLMEngine:
     def plan_for(self, query: VMRQuery) -> Plan:
         """Compile ``query`` to a :class:`Plan` through the plan cache."""
         plan, _ = self.plan_cache.lookup(query, self.stores,
-                                         verify=self.verifier is not None)
+                                         verify=self.verifier is not None,
+                                         search_mode=self.search_mode)
         return plan
 
     # -- stage 1: entity + predicate matching --------------------------------
-    def _search(self, q_emb, emb, valid, k):
+    def _search(self, q_emb, emb, emb_i8, valid, k):
         if self.mesh is not None:
             return sharded_topk_similarity(q_emb, emb, valid, k, self.mesh,
-                                           use_kernels=self.use_kernels)
-        return _entity_match(q_emb, emb, valid, k)
+                                           use_kernels=self.use_kernels,
+                                           mode=self.search_mode, i8=emb_i8)
+        return _entity_match(q_emb, emb, emb_i8, valid, k,
+                             self.search_mode, self.use_kernels)
 
     def _match_entities(self, em: EntityMatch, stats: QueryStats):
         """Candidates per unique entity text (``em.rows`` maps entities to
@@ -192,22 +254,22 @@ class LazyVLMEngine:
         the plan's embed-reuse pass."""
         q_emb = jnp.asarray(self._embed.embed_texts(list(em.texts)))
         ent = self.stores.entities
-        scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid,
-                                   em.k)
+        scores, idx = self._search(q_emb, ent.text_emb, ent.text_i8,
+                                   ent.table.valid, em.k)
         ok = scores >= em.text_threshold
         if em.image_search:
             # dual-store matching (ete AND eie, Section 2.2): candidates are
             # the union; duplicate (vid,eid) pairs are harmless under the
             # semi-join's set semantics.
             qi = jnp.asarray(self._embed.embed_for_image(list(em.texts)))
-            iscores, iidx = self._search(qi, ent.image_emb, ent.table.valid,
-                                         em.k)
+            iscores, iidx = self._search(qi, ent.image_emb, ent.image_i8,
+                                         ent.table.valid, em.k)
             iok = iscores >= em.image_threshold
             idx = jnp.concatenate([idx, iidx], axis=1)
             ok = jnp.concatenate([ok, iok], axis=1)
         vids = ent.table["vid"][jnp.clip(idx, 0, ent.capacity - 1)]
         eids = ent.table["eid"][jnp.clip(idx, 0, ent.capacity - 1)]
-        ok_np = np.asarray(ok)
+        ok_np = _to_host(ok)
         for name, row in zip(em.names, em.rows):
             stats.entity_candidates[name] = int(ok_np[row].sum())
         return vids, eids, ok  # each (U, k) or (U, 2k) with image search
@@ -257,16 +319,16 @@ class LazyVLMEngine:
         masks = _triple_selections(
             rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
             rel.valid, sv, se, so, ov, oe, oo, pi, po)    # (bucket, cap)
+        # per-triple row counts: fused device reduction, ONE (bucket,)
+        # transfer — the (bucket, cap) mask itself never leaves the device
+        # unless the verifier below needs row identities
         stats.sql_rows_per_triple = [
-            int(x) for x in np.asarray(masks[:n_triples].sum(axis=1))]
-        sql = [render_sql(i,
-                          list(zip(np.asarray(sv[i])[np.asarray(so[i])],
-                                   np.asarray(se[i])[np.asarray(so[i])])),
-                          list(zip(np.asarray(ov[i])[np.asarray(oo[i])],
-                                   np.asarray(oe[i])[np.asarray(oo[i])])),
-                          np.asarray(pi[i])[np.asarray(po[i])],
-                          st.predicates.labels)
-               for i in range(n_triples)]
+            int(x) for x in _to_host(masks.sum(axis=1))[:n_triples]]
+        sql_renderer = _make_sql_renderer(
+            n_triples, 0,
+            _to_host(sv), _to_host(se), _to_host(so),
+            _to_host(ov), _to_host(oe), _to_host(oo),
+            _to_host(pi), _to_host(po), st.predicates.labels)
         stats.stage_seconds["symbolic"] = time.perf_counter() - t0
 
         # -- stage 3b: lazy VLM refinement ------------------------------------
@@ -287,16 +349,16 @@ class LazyVLMEngine:
                                                      plan.temporal.top_k)
         stats.stage_seconds["temporal"] = time.perf_counter() - t0
 
-        scores_np = np.asarray(scores)
-        segs_np = np.asarray(seg_ids)
+        scores_np = _to_host(scores)
+        segs_np = _to_host(seg_ids)
         keep = scores_np > 0
         stats.frames_scanned_equivalent = (st.num_segments
                                            * st.frames_per_segment)
         return QueryResult(
             segments=[int(v) for v in segs_np[keep]],
             scores=[int(s) for s in scores_np[keep]],
-            end_frames=np.asarray(reach),
-            sql=sql,
+            end_frames=_to_host(reach),
+            sql_renderer=sql_renderer,
             stats=stats,
         )
 
@@ -315,8 +377,9 @@ class LazyVLMEngine:
         offs = np.cumsum([0] + [len(p.entity_match.texts) for p in plans])
         q_emb = jnp.asarray(self._embed.embed_texts(texts))
         kmax = max(p.entity_match.k for p in plans)   # capacity-clamped
-        scores, idx = self._search(q_emb, ent.text_emb, ent.table.valid, kmax)
-        scores_np, idx_np = np.asarray(scores), np.asarray(idx)
+        scores, idx = self._search(q_emb, ent.text_emb, ent.text_i8,
+                                   ent.table.valid, kmax)
+        scores_np, idx_np = _to_host(scores), _to_host(idx)
 
         img_pids = [i for i, p in enumerate(plans)
                     if p.entity_match.image_search]
@@ -327,13 +390,13 @@ class LazyVLMEngine:
                 [0] + [len(plans[i].entity_match.texts) for i in img_pids])
             qi_emb = jnp.asarray(self._embed.embed_for_image(img_texts))
             kimax = max(plans[i].entity_match.k for i in img_pids)
-            iscores, iidx = self._search(qi_emb, ent.image_emb,
+            iscores, iidx = self._search(qi_emb, ent.image_emb, ent.image_i8,
                                          ent.table.valid, kimax)
-            iscores_np, iidx_np = np.asarray(iscores), np.asarray(iidx)
+            iscores_np, iidx_np = _to_host(iscores), _to_host(iidx)
         img_pos = {qid: j for j, qid in enumerate(img_pids)}
 
-        vid_col = np.asarray(ent.table["vid"])
-        eid_col = np.asarray(ent.table["eid"])
+        vid_col = _to_host(ent.table["vid"])
+        eid_col = _to_host(ent.table["eid"])
         out = []
         for qi, p in enumerate(plans):
             em = p.entity_match
@@ -364,7 +427,7 @@ class LazyVLMEngine:
             self.stores.predicates.embeddings))            # (ΣU, P)
         mmax = max(p.predicate_match.m for p in plans)     # vocab-clamped
         vals, ids = jax.lax.top_k(sims, mmax)
-        vals_np, ids_np = np.asarray(vals), np.asarray(ids)
+        vals_np, ids_np = _to_host(vals), _to_host(ids)
         out = []
         for qi, p in enumerate(plans):
             pm = p.predicate_match
@@ -451,21 +514,20 @@ class LazyVLMEngine:
             jnp.asarray(sv), jnp.asarray(se), jnp.asarray(so),
             jnp.asarray(ov), jnp.asarray(oe), jnp.asarray(oo),
             jnp.asarray(pi), jnp.asarray(po))               # (ΣT_pad, cap)
-        masks_np = np.asarray(masks)
-        sqls: List[List[str]] = []
+        # symbolic-stage bookkeeping stays device-resident: per-triple row
+        # counts come back as ONE fused (ΣT_pad,) reduction, and SQL text is
+        # a lazy closure over the (already-host) candidate arrays — the
+        # full-capacity (ΣT, cap) mask is only materialized on host further
+        # down, if (and only if) a verifier needs row identities
+        row_counts = _to_host(masks.sum(axis=1))            # (ΣT_pad,)
+        renderers: List[Callable[[], List[str]]] = []
         for qi, p in enumerate(plans):
             lo = row_offs[qi]
             stats[qi].sql_rows_per_triple = [
-                int(x) for x in masks_np[lo: lo + counts[qi]].sum(axis=1)]
-            sqls.append([
-                render_sql(j,
-                           list(zip(sv[lo + j][so[lo + j]],
-                                    se[lo + j][so[lo + j]])),
-                           list(zip(ov[lo + j][oo[lo + j]],
-                                    oe[lo + j][oo[lo + j]])),
-                           pi[lo + j][po[lo + j]],
-                           st.predicates.labels)
-                for j in range(counts[qi])])
+                int(x) for x in row_counts[lo: lo + counts[qi]]]
+            renderers.append(_make_sql_renderer(
+                counts[qi], lo, sv, se, so, ov, oe, oo, pi, po,
+                st.predicates.labels))
         t_symbolic = time.perf_counter() - t0
 
         # -- stage 3b: ONE deduped VLM pass across the whole batch ------------
@@ -478,6 +540,9 @@ class LazyVLMEngine:
             if p.verify.enabled:
                 verif[row_offs[qi]: row_offs[qi] + counts[qi]] = True
         if self.verifier is not None and verif.any():
+            # row identities are needed now: this is the ONE place the
+            # no-verifier fast path never reaches
+            masks_np = _to_host(masks)
             out = self._verify_rows(rel, masks_np & verif[:, None])
             if out is not None:
                 keep_rows, _, _, cols = out
@@ -533,7 +598,7 @@ class LazyVLMEngine:
         ends_stack = jnp.stack([ends for _, ends in matched])  # (B, V, F)
         kmax = max(p.temporal.top_k for p in plans)   # segment-clamped
         scores_b, seg_b = temporal_lib.rank_segments_batch(ends_stack, kmax)
-        scores_np, seg_np = np.asarray(scores_b), np.asarray(seg_b)
+        scores_np, seg_np = _to_host(scores_b), _to_host(seg_b)
         t_temporal = time.perf_counter() - t0
 
         results = []
@@ -549,8 +614,8 @@ class LazyVLMEngine:
             results.append(QueryResult(
                 segments=[int(v) for v in g_q[keep]],
                 scores=[int(x) for x in s_q[keep]],
-                end_frames=np.asarray(matched[qi][1]),
-                sql=sqls[qi],
+                end_frames=_to_host(matched[qi][1]),
+                sql_renderer=renderers[qi],
                 stats=stats[qi],
             ))
         return results
@@ -569,7 +634,7 @@ class LazyVLMEngine:
         rows_idx = np.nonzero(any_mask)[0]
         if len(rows_idx) == 0:
             return None
-        cols = {k: np.asarray(rel[k]) for k in REL_SCHEMA}
+        cols = {k: _to_host(rel[k]) for k in REL_SCHEMA}
         rows = np.stack([cols[k][rows_idx] for k in REL_SCHEMA], axis=1)
         uniq, inv = np.unique(rows, axis=0, return_inverse=True)
         verdict_u = self.verifier.verify(uniq)
@@ -580,7 +645,7 @@ class LazyVLMEngine:
 
     def _refine(self, rel: Table, masks: jax.Array, stats: QueryStats
                 ) -> jax.Array:
-        masks_np = np.asarray(masks)
+        masks_np = _to_host(masks)
         out = self._verify_rows(rel, masks_np)
         if out is None:
             return masks

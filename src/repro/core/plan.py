@@ -51,6 +51,24 @@ def pow2_bucket(n: int, minimum: int = 4) -> int:
     return b
 
 
+def predicted_search_bytes(mode: str, capacity: int, dim: int,
+                           n_texts: int, k: int) -> int:
+    """Plan-time HBM-traffic model of ONE entity-search launch.
+
+    fp32 brute force reads the whole fp32 bank; the int8 two-phase path
+    reads the int8 codes + per-row scale/err and gathers only k′ candidate
+    fp32 rows per query for the exact rescore (k′ = min(4k, 128), the
+    kernel's overfetch — see ``repro.kernels.topk_similarity_i8``).
+    """
+    out = n_texts * k * 8                        # (scores, idx) results
+    if mode == "int8":
+        kprime = min(4 * k, 128)
+        return (capacity * (dim + 8)             # int8 codes + scale + err
+                + n_texts * kprime * dim * 4     # phase-2 fp32 gather
+                + out)
+    return capacity * dim * 4 + out
+
+
 # ---------------------------------------------------------------------------
 # plan nodes
 # ---------------------------------------------------------------------------
@@ -61,6 +79,11 @@ class EntityMatch:
     ``texts`` are the deduped embedding inputs; ``rows[i]`` maps entity i
     (declaration order, named ``names[i]``) to its row in ``texts`` — the
     shared-entity embed-reuse pass.
+
+    ``search_mode`` is the engine's scan precision (``"fp32"`` brute force
+    or ``"int8"`` two-phase with exact rescore) and ``predicted_bytes`` the
+    plan-time model of HBM bytes the search launches will move — both are
+    EXPLAIN artifacts (``Session.explain``).
     """
 
     names: Tuple[str, ...]
@@ -70,6 +93,8 @@ class EntityMatch:
     text_threshold: float
     image_search: bool
     image_threshold: float
+    search_mode: str = "fp32"
+    predicted_bytes: int = 0    # modeled HBM traffic of the search launches
 
     @property
     def width(self) -> int:
@@ -82,7 +107,9 @@ class EntityMatch:
                 + (f" +image(threshold={self.image_threshold:g})"
                    if self.image_search else "")
                 + (f"  [{shared} shared embed row(s)]" if shared else ""))
-        out = [head]
+        out = [head,
+               f"  search_mode={self.search_mode} "
+               f"predicted_bytes={self.predicted_bytes:,}"]
         for name, row in zip(self.names, self.rows):
             out.append(f"  {name} ~ {self.texts[row]!r}")
         return out
@@ -262,11 +289,14 @@ def _dedupe_texts(items) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
     return tuple(texts), tuple(rows)
 
 
-def compile_plan(query: VMRQuery, stores, *, verify: bool) -> Plan:
+def compile_plan(query: VMRQuery, stores, *, verify: bool,
+                 search_mode: str = "fp32") -> Plan:
     """Lower ``query`` to a :class:`Plan` against ``stores``' static shape.
 
-    Raises :class:`repro.core.query.QueryValidationError` on malformed
-    queries.
+    ``search_mode`` selects the entity-search precision the executing
+    engine will use (it is part of the plan so EXPLAIN can show it and the
+    cache can key on it). Raises
+    :class:`repro.core.query.QueryValidationError` on malformed queries.
     """
     query.validate()
 
@@ -286,13 +316,24 @@ def compile_plan(query: VMRQuery, stores, *, verify: bool) -> Plan:
     conjoin_pad = tuple(tuple(c >= len(f) for c in range(max_tr))
                         for f in frames)
 
+    cap = stores.entities.capacity
+    k_ent = min(query.top_k, cap)
+    dims = (int(stores.entities.text_emb.shape[1]),
+            int(stores.entities.image_emb.shape[1]))
+    pred_bytes = predicted_search_bytes(search_mode, cap, dims[0],
+                                        len(ent_texts), k_ent)
+    if query.image_search:
+        pred_bytes += predicted_search_bytes(search_mode, cap, dims[1],
+                                             len(ent_texts), k_ent)
     em = EntityMatch(
         names=tuple(e.name for e in query.entities),
         texts=ent_texts, rows=ent_rows,
-        k=min(query.top_k, stores.entities.capacity),
+        k=k_ent,
         text_threshold=query.text_threshold,
         image_search=query.image_search,
-        image_threshold=query.image_threshold)
+        image_threshold=query.image_threshold,
+        search_mode=search_mode,
+        predicted_bytes=pred_bytes)
     pm = PredicateMatch(
         names=tuple(r.name for r in query.relationships),
         texts=rel_texts, rows=rel_rows,
@@ -318,10 +359,13 @@ def compile_plan(query: VMRQuery, stores, *, verify: bool) -> Plan:
 # plan cache
 # ---------------------------------------------------------------------------
 def store_fingerprint(stores) -> Tuple:
-    """The static store shape a plan depends on: capacity clamps and the
-    (segments, frames) grid."""
+    """The static store shape a plan depends on: capacity clamps, the
+    (segments, frames) grid, and the embedding dims (they size the
+    predicted-bytes model)."""
     return (stores.entities.capacity, len(stores.predicates.labels),
-            stores.num_segments, stores.frames_per_segment)
+            stores.num_segments, stores.frames_per_segment,
+            int(stores.entities.text_emb.shape[1]),
+            int(stores.entities.image_emb.shape[1]))
 
 
 class PlanCache:
@@ -350,18 +394,20 @@ class PlanCache:
         self._cache.clear()
 
     @staticmethod
-    def signature(query: VMRQuery, stores, verify: bool) -> Tuple:
-        return (query, store_fingerprint(stores), verify)
+    def signature(query: VMRQuery, stores, verify: bool,
+                  search_mode: str = "fp32") -> Tuple:
+        return (query, store_fingerprint(stores), verify, search_mode)
 
-    def lookup(self, query: VMRQuery, stores, *, verify: bool
-               ) -> Tuple[Plan, bool]:
+    def lookup(self, query: VMRQuery, stores, *, verify: bool,
+               search_mode: str = "fp32") -> Tuple[Plan, bool]:
         """Return ``(plan, was_cached)``, compiling on miss."""
-        key = self.signature(query, stores, verify)
+        key = self.signature(query, stores, verify, search_mode)
         plan = self._cache.get(key)
         if plan is not None:
             self.hits += 1
             return plan, True
-        plan = compile_plan(query, stores, verify=verify)
+        plan = compile_plan(query, stores, verify=verify,
+                            search_mode=search_mode)
         self.misses += 1
         self._cache[key] = plan
         while len(self._cache) > self.max_entries:

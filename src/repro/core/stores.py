@@ -1,13 +1,24 @@
 """Entity Store and Relationship Store (Section 2.2).
 
 Entity Store rows: (vid, eid, ete, eie) — segment id, entity id (unique within
-segment, from tracking), text embedding, image embedding.
+segment, from tracking), text embedding, image embedding. Alongside each fp32
+embedding bank the store keeps a per-row symmetric **int8 quantization**
+(codes + scales, :class:`repro.kernels.topk_similarity_i8.Int8Rows`): the
+two-phase search scans the int8 codes (~4× less HBM traffic) and rescores the
+few candidates against the fp32 rows, so results stay exact. Both forms are
+built at ingest and maintained by ``append_entities`` — per-row quantization
+is independent row-to-row, so incremental appends reproduce a full rebuild.
 Relationship Store rows: (vid, fid, sid, rl, oid).
 
 Both are device-resident, fixed-capacity, mask-valid structures; the vector
 parts shard over the ``data`` mesh axis, the relational parts over rows.
 Incremental update (the paper's update-friendliness claim) = append segments
 into spare capacity — no reprocessing of existing rows.
+
+Ingested ids are validated against the ``isin_pairs`` radix-pack bounds
+(:func:`validate_pack_bounds`): the symbolic stage packs (vid, eid/sid/oid)
+pairs into int32 keys, so out-of-range ids would make joins silently wrong —
+they are rejected here, at build/append time, with the offending column named.
 """
 from __future__ import annotations
 
@@ -19,22 +30,85 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.topk_similarity_i8 import Int8Rows, quantize_rows
+from repro.symbolic.ops import PAIR_FIRST_LIMIT, PAIR_RADIX
 from repro.symbolic.table import Table
 
 ENTITY_SCHEMA = ("vid", "eid")
 REL_SCHEMA = ("vid", "fid", "sid", "rl", "oid")
 
+# which bound applies to which id column when (vid, x) pairs are packed
+_PACK_FIRST_COLS = ("vid",)
+_PACK_SECOND_COLS = ("eid", "sid", "oid")
+_PACK_SENTINEL = 2**31 - 1      # isin_pairs masks invalid keys with this
+
+
+def _validate_pack_pairs(first_col: str, second_col: str,
+                         firsts, seconds) -> None:
+    """Reject the id pairs whose radix pack collides with ``isin_pairs``'
+    int32 invalid-key sentinel (2^31 − 1).
+
+    Per-column bounds alone still admit exactly one poisoned pair —
+    (2^16−1, 2^15−1) packs to the sentinel itself — which the masked
+    semi-join would then treat as *invalid* and silently never match.
+    """
+    f = np.asarray(firsts, np.int64)
+    s = np.asarray(seconds, np.int64)
+    if f.size == 0:
+        return
+    packed = f * PAIR_RADIX + s
+    i = int(packed.argmax())
+    if packed[i] >= _PACK_SENTINEL:
+        raise ValueError(
+            f"pair ({first_col}={int(f[i])}, {second_col}={int(s[i])}) "
+            f"radix-packs to {int(packed[i])} >= the isin_pairs invalid-key "
+            f"sentinel {_PACK_SENTINEL}; this pair would silently never "
+            f"match in packed joins")
+
+
+def validate_pack_bounds(col: str, values) -> None:
+    """Reject ids that would overflow ``isin_pairs``' int32 radix packing.
+
+    ``vid`` is the pack's first component (< 2^31 / radix); entity ids
+    (``eid``/``sid``/``oid``) are the second (< radix). Raises ``ValueError``
+    naming the offending column and its limit — a silent violation would
+    produce wrong join results, not an error, downstream.
+    """
+    if col in _PACK_FIRST_COLS:
+        limit = PAIR_FIRST_LIMIT
+    elif col in _PACK_SECOND_COLS:
+        limit = PAIR_RADIX
+    else:
+        return
+    arr = np.asarray(values)
+    if arr.size == 0:
+        return
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or hi >= limit:
+        bad = lo if lo < 0 else hi
+        raise ValueError(
+            f"column '{col}' has id {bad} outside the isin_pairs "
+            f"radix-pack range [0, {limit}) (radix {PAIR_RADIX}); "
+            f"ids this large would make packed joins silently wrong")
+
 
 @jax.tree_util.register_pytree_node_class
 class EntityStore:
     def __init__(self, table: Table, text_emb: jax.Array,
-                 image_emb: jax.Array):
+                 image_emb: jax.Array,
+                 text_i8: Optional[Int8Rows] = None,
+                 image_i8: Optional[Int8Rows] = None):
         self.table = table          # columns vid, eid; capacity N
         self.text_emb = text_emb    # (N, Dt) L2-normalized
         self.image_emb = image_emb  # (N, Di) L2-normalized
+        # per-row int8 codes + scales for the two-phase search; None on
+        # hand-built stores (fp32 search only)
+        self.text_i8 = text_i8
+        self.image_i8 = image_i8
 
     def tree_flatten(self):
-        return (self.table, self.text_emb, self.image_emb), None
+        return (self.table, self.text_emb, self.image_emb, self.text_i8,
+                self.image_i8), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -99,16 +173,19 @@ def build_entity_store(vids: np.ndarray, eids: np.ndarray,
     n = vids.shape[0]
     if n > capacity:
         raise ValueError(f"entity overflow {n} > {capacity}")
+    validate_pack_bounds("vid", vids)
+    validate_pack_bounds("eid", eids)
+    _validate_pack_pairs("vid", "eid", vids, eids)
     valid = np.zeros((capacity,), bool)
     valid[:n] = True
     table = Table({"vid": jnp.asarray(_pad_rows(vids.astype(np.int32), capacity)),
                    "eid": jnp.asarray(_pad_rows(eids.astype(np.int32), capacity))},
                   jnp.asarray(valid))
-    return EntityStore(table,
-                       jnp.asarray(_pad_rows(text_emb.astype(np.float32),
-                                             capacity)),
-                       jnp.asarray(_pad_rows(image_emb.astype(np.float32),
-                                             capacity)))
+    text = jnp.asarray(_pad_rows(text_emb.astype(np.float32), capacity))
+    image = jnp.asarray(_pad_rows(image_emb.astype(np.float32), capacity))
+    return EntityStore(table, text, image,
+                       text_i8=quantize_rows(text),
+                       image_i8=quantize_rows(image))
 
 
 def build_relationship_store(rows: np.ndarray, capacity: int
@@ -117,6 +194,10 @@ def build_relationship_store(rows: np.ndarray, capacity: int
     m = rows.shape[0]
     if m > capacity:
         raise ValueError(f"relationship overflow {m} > {capacity}")
+    for i, name in enumerate(REL_SCHEMA):
+        validate_pack_bounds(name, rows[:, i])
+    _validate_pack_pairs("vid", "sid", rows[:, 0], rows[:, 2])
+    _validate_pack_pairs("vid", "oid", rows[:, 0], rows[:, 4])
     valid = np.zeros((capacity,), bool)
     valid[:m] = True
     cols = {name: jnp.asarray(_pad_rows(rows[:, i].astype(np.int32), capacity))
@@ -132,6 +213,20 @@ def _insert(arr: jax.Array, vals: jax.Array, start) -> jax.Array:
                                                start, axis=0)
 
 
+def _insert_i8(bank: Optional[Int8Rows], new_emb: jax.Array, s) -> \
+        Optional[Int8Rows]:
+    """Quantize the new rows and write them into the bank's spare capacity.
+
+    Row-independent quantization ⇒ the appended bank is bit-identical to
+    requantizing the whole fp32 bank from scratch."""
+    if bank is None:
+        return None
+    new = quantize_rows(new_emb)
+    return Int8Rows(_insert(bank.codes, new.codes, s),
+                    _insert(bank.scale, new.scale, s),
+                    _insert(bank.err, new.err, s))
+
+
 def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
                     ) -> EntityStore:
     """Incremental ingest: write new rows into spare capacity."""
@@ -139,14 +234,21 @@ def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
     start = int(np.asarray(store.table.count()))
     if start + n_new > store.capacity:
         raise ValueError("entity store capacity exhausted; grow the store")
+    validate_pack_bounds("vid", vids)
+    validate_pack_bounds("eid", eids)
+    _validate_pack_pairs("vid", "eid", vids, eids)
     s = jnp.asarray(start, jnp.int32)
     cols = dict(store.table.columns)
     cols["vid"] = _insert(cols["vid"], jnp.asarray(vids, jnp.int32), s)
     cols["eid"] = _insert(cols["eid"], jnp.asarray(eids, jnp.int32), s)
     valid = _insert(store.table.valid, jnp.ones((n_new,), bool), s)
+    text_emb = jnp.asarray(text_emb)
+    image_emb = jnp.asarray(image_emb)
     return EntityStore(Table(cols, valid),
-                       _insert(store.text_emb, jnp.asarray(text_emb), s),
-                       _insert(store.image_emb, jnp.asarray(image_emb), s))
+                       _insert(store.text_emb, text_emb, s),
+                       _insert(store.image_emb, image_emb, s),
+                       text_i8=_insert_i8(store.text_i8, text_emb, s),
+                       image_i8=_insert_i8(store.image_i8, image_emb, s))
 
 
 def append_relationships(store: RelationshipStore, rows: np.ndarray
@@ -155,6 +257,10 @@ def append_relationships(store: RelationshipStore, rows: np.ndarray
     start = int(np.asarray(store.table.count()))
     if start + m_new > store.capacity:
         raise ValueError("relationship store capacity exhausted")
+    for i, name in enumerate(REL_SCHEMA):
+        validate_pack_bounds(name, rows[:, i])
+    _validate_pack_pairs("vid", "sid", rows[:, 0], rows[:, 2])
+    _validate_pack_pairs("vid", "oid", rows[:, 0], rows[:, 4])
     s = jnp.asarray(start, jnp.int32)
     cols = dict(store.table.columns)
     for i, name in enumerate(REL_SCHEMA):

@@ -3,7 +3,9 @@
 Kernels:
   flash_attention  — prefill attention, online softmax over KV blocks
   decode_attention — flash-decode over a long KV cache
-  topk_similarity  — fused similarity + running top-k (semantic search)
-  ssd_scan         — Mamba-2 SSD chunked scan with VMEM-resident state
+  topk_similarity     — fused similarity + running top-k (semantic search)
+  topk_similarity_i8  — two-phase int8 search: streaming int8 approximate
+                        top-k' + exact fp32 rescore (still exact at k)
+  ssd_scan            — Mamba-2 SSD chunked scan with VMEM-resident state
 """
 from repro.kernels import ops  # noqa: F401

@@ -19,6 +19,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import topk_similarity as _topk
+from repro.kernels import topk_similarity_i8 as _topk_i8
 
 
 def _interpret() -> bool:
@@ -59,6 +60,20 @@ def topk_similarity(queries, db, db_valid, k: int):
         return _ref.naive_topk(queries, db, db_valid, k)
     return _topk.topk_similarity(queries, db, db_valid, k,
                                  interpret=_interpret())
+
+
+def topk_similarity_i8(queries, db_i8, db, db_valid, k: int):
+    """Exact two-phase int8 top-k (see ``topk_similarity_i8.py``).
+
+    Under ``REPRO_FORCE_REF`` phase 1 runs as plain jnp instead of the
+    Pallas kernel — the two-phase result stays exact either way (the
+    margin check certifies the candidate set, however it was produced).
+    """
+    if k > _topk.K_PAD:
+        return _ref.naive_topk(queries, db, db_valid, k)
+    return _topk_i8.topk_similarity_i8(
+        queries, db_i8, db, db_valid, k, interpret=_interpret(),
+        use_kernel_phase1=not _force_ref())
 
 
 def ssd_scan(x, a, B, C, *, chunk: int = 128):

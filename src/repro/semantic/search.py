@@ -1,8 +1,16 @@
 """Semantic search: exact batched top-k similarity over the Entity Store.
 
-Single-device path: fused scores + top-k (Pallas kernel on TPU, jnp oracle on
-CPU). Distributed path: DB rows sharded over the ``data`` (and ``pod``) mesh
-axes via ``shard_map`` — each shard computes a local top-k, the k·n_shards
+Single-device path: fused scores + top-k. ``mode`` selects the scan
+precision — ``"fp32"`` brute-force (Pallas kernel or jnp oracle) or
+``"int8"`` two-phase (streaming int8 approximate top-k′, then exact fp32
+rescore of the candidates — ~4× less HBM read, still exact; see
+``repro.kernels.topk_similarity_i8``). Kernel entry points go through
+``repro.kernels.ops`` dispatch, so non-TPU backends run the kernels in
+interpret mode and ``REPRO_FORCE_REF=1`` pins the jnp oracles.
+
+Distributed path: DB rows sharded over the ``data`` (and ``pod``) mesh
+axes via ``shard_map`` — each shard computes a local top-k (either mode;
+the int8 banks shard row-wise exactly like the fp32 rows), the k·n_shards
 partials are all-gathered, and a final top-k merges them. Exact (not ANN):
 on the MXU the Q·DBᵀ matmul is compute-cheap and fully regular, which beats
 graph-traversal ANN structures on TPU for per-shard DB sizes in the millions.
@@ -18,6 +26,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
+SEARCH_MODES = ("fp32", "int8")
+
 
 def topk_similarity_ref(queries: jax.Array, db: jax.Array, db_valid: jax.Array,
                         k: int) -> Tuple[jax.Array, jax.Array]:
@@ -31,7 +41,18 @@ def topk_similarity_ref(queries: jax.Array, db: jax.Array, db_valid: jax.Array,
     return jax.lax.top_k(scores, k)
 
 
-def topk_similarity(queries, db, db_valid, k: int, *, use_kernels: bool = False):
+def topk_similarity(queries, db, db_valid, k: int, *, use_kernels: bool = False,
+                    mode: str = "fp32", i8=None):
+    """Mode/kernel dispatch for one device. ``i8`` is the store's
+    ``Int8Rows`` bank backing ``db`` (required for ``mode="int8"``)."""
+    if mode not in SEARCH_MODES:
+        raise ValueError(f"unknown search mode {mode!r}; one of {SEARCH_MODES}")
+    if mode == "int8":
+        if i8 is None:
+            raise ValueError("mode='int8' needs the store's Int8Rows bank "
+                             "(build_entity_store creates it)")
+        from repro.kernels import ops as kops
+        return kops.topk_similarity_i8(queries, i8, db, db_valid, k)
     if use_kernels:
         from repro.kernels import ops as kops
         return kops.topk_similarity(queries, db, db_valid, k)
@@ -39,17 +60,20 @@ def topk_similarity(queries, db, db_valid, k: int, *, use_kernels: bool = False)
 
 
 def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
-                            shard_axes=("data",), *, use_kernels: bool = False):
+                            shard_axes=("data",), *, use_kernels: bool = False,
+                            mode: str = "fp32", i8=None):
     """Distributed exact top-k. db rows sharded over ``shard_axes``.
 
     Returns (scores, global_idx): (Q, k) — indices are into the logical
-    (unsharded) DB.
+    (unsharded) DB. Each shard's local top-k is exact (both modes), so the
+    all-gather + merge of partials is exact too.
     """
     n_local = db.shape[0] // int(
         jnp.prod(jnp.array([mesh.shape[a] for a in shard_axes])))
 
-    def local(q, dbs, dvs):
-        s, i = topk_similarity(q, dbs, dvs, k, use_kernels=use_kernels)
+    def local(q, dbs, dvs, i8s):
+        s, i = topk_similarity(q, dbs, dvs, k, use_kernels=use_kernels,
+                               mode=mode, i8=i8s)
         # global index = shard offset + local index
         ax_index = jax.lax.axis_index(shard_axes)
         offset = ax_index * n_local
@@ -62,11 +86,14 @@ def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
         return sm, final_i
 
     spec_db = P(shard_axes)
+    # the int8 bank shards row-wise alongside the fp32 rows; None (fp32
+    # mode) is an empty pytree and needs no spec entries
+    i8_spec = jax.tree_util.tree_map(lambda _: spec_db, i8)
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(), spec_db, spec_db),
+                   in_specs=(P(), spec_db, spec_db, i8_spec),
                    out_specs=(P(), P()),
                    check_replication=False)  # holds post all-gather+merge
-    return fn(queries, db, db_valid)
+    return fn(queries, db, db_valid, i8)
 
 
 def threshold_candidates(scores: jax.Array, idx: jax.Array, threshold: float

@@ -90,11 +90,14 @@ class Session:
         return self.engine.query_batch([self.resolve(q) for q in queries])
 
     def explain(self, query: QueryLike) -> Explanation:
-        """Compile only: return the plan tree, per-triple SQL templates,
-        the predicted launch counts, and whether the plan cache hit."""
+        """Compile only: return the plan tree (which shows the engine's
+        entity-search mode and its predicted HBM bytes moved), per-triple
+        SQL templates, the predicted launch counts, and whether the plan
+        cache hit."""
         q = self.resolve(query)
         plan, cached = self.engine.plan_cache.lookup(
-            q, self.engine.stores, verify=self.engine.verifier is not None)
+            q, self.engine.stores, verify=self.engine.verifier is not None,
+            search_mode=self.engine.search_mode)
         return Explanation(plan=plan, tree=plan.render_tree(),
                            sql=plan.sql_templates(),
                            launches=plan.predicted_launches(),
@@ -111,10 +114,14 @@ class Session:
 
 
 def open_video_store(stores, embedder, *, verifier=None, mesh=None,
-                     use_kernels: bool = False, **engine_kwargs) -> Session:
+                     use_kernels: bool = False, search_mode: str = "fp32",
+                     **engine_kwargs) -> Session:
     """Open a query session over ingested video stores (the 'drop in video
     data' step is ``repro.video.ingest``; this wires the engine around its
-    output)."""
+    output). ``search_mode="int8"`` flips entity search to the two-phase
+    quantized scan (exact results, ~4× less HBM read — see
+    docs/performance.md)."""
     engine = LazyVLMEngine(stores, embedder, verifier=verifier, mesh=mesh,
-                           use_kernels=use_kernels, **engine_kwargs)
+                           use_kernels=use_kernels, search_mode=search_mode,
+                           **engine_kwargs)
     return Session(engine)

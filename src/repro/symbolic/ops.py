@@ -25,6 +25,14 @@ from repro.symbolic.table import Table
 
 INVALID = jnp.int32(2**31 - 1)
 
+# ``isin_pairs`` packs (first, second) id pairs into one int32 as
+# first * PAIR_RADIX + second. Both components must stay inside these
+# bounds or packed keys collide / overflow and joins are silently wrong —
+# the store builders validate ingested ids against them (see
+# ``repro.core.stores.validate_pack_bounds``).
+PAIR_RADIX = 1 << 15                        # second component: 0 <= x < 2^15
+PAIR_FIRST_LIMIT = (2**31) // PAIR_RADIX    # first component:  0 <= x < 2^16
+
 
 def filter_(t: Table, mask: jax.Array) -> Table:
     return t.with_valid(t.valid & mask)
@@ -58,7 +66,7 @@ def semi_join(t: Table, col: str, keys: jax.Array, keys_valid: jax.Array
 
 
 def isin_pairs(a1: jax.Array, a2: jax.Array, k1: jax.Array, k2: jax.Array,
-               keys_valid: jax.Array, radix: int = 1 << 15) -> jax.Array:
+               keys_valid: jax.Array, radix: int = PAIR_RADIX) -> jax.Array:
     """Membership of pairs (a1, a2) in the masked key-pair set (k1, k2).
 
     Pairs are radix-packed into int32 (JAX default has x64 disabled), so both

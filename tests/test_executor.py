@@ -213,3 +213,65 @@ def test_frontend_fifo_batching(world, stores):
     for t in tickets:
         assert t.done and t.latency is not None
         _assert_same(reference.query(t.query), t.result)
+
+
+# ---------------------------------------------------------------------------
+# device-resident symbolic stats (PR 3)
+# ---------------------------------------------------------------------------
+def test_no_full_capacity_transfer_without_verifier(world, stores,
+                                                    monkeypatch):
+    """With no verifier configured the executor must never round-trip a
+    full-capacity ``(ΣT, cap)`` row mask to host — per-triple counts come
+    back as one fused ``(ΣT,)`` reduction and SQL renders lazily from the
+    small candidate arrays. Spies on the executor's single device→host
+    funnel and checks every transferred shape."""
+    from repro.core import executor as ex
+    emb = OracleEmbedder(dim=64)
+    queries = _workload(world)
+    cap = stores.relationships.capacity
+
+    shapes = []
+    orig = ex._to_host
+
+    def spy(x):
+        arr = orig(x)
+        shapes.append(arr.shape)
+        return arr
+
+    monkeypatch.setattr(ex, "_to_host", spy)
+    engine = LazyVLMEngine(stores, emb)
+    results = engine.query_batch(queries)
+    r_single = engine.query(queries[0])
+    full_cap = [s for s in shapes if len(s) == 2 and s[1] == cap]
+    assert not full_cap, f"full-capacity host transfers: {full_cap}"
+    # the stats and (lazy) SQL artifacts still come out intact
+    assert r_single.stats.sql_rows_per_triple
+    assert r_single.sql == results[0].sql
+    for q, r in zip(queries, results):
+        assert len(r.stats.sql_rows_per_triple) == len(q.all_triples())
+
+    # a verifier NEEDS row identities: the mask transfer must then happen
+    shapes.clear()
+    engine_v = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    engine_v.query_batch(queries)
+    assert any(len(s) == 2 and s[1] == cap for s in shapes)
+
+
+def test_sql_renders_lazily_and_stably(world, stores):
+    emb = OracleEmbedder(dim=64)
+    engine = LazyVLMEngine(stores, emb)
+    r = engine.query(_workload(world)[0])
+    assert r._sql is None                 # nothing rendered yet
+    first = r.sql
+    assert first and all("SELECT vid, fid" in s for s in first)
+    assert r.sql is first                 # memoized, no re-render
+
+
+def test_use_kernels_single_device_matches_ref(world, stores):
+    """The fused Pallas top-k must be reachable from the engine without a
+    mesh (interpret mode off-TPU) and return identical results."""
+    emb = OracleEmbedder(dim=64)
+    ref_engine = LazyVLMEngine(stores, emb)
+    kern_engine = LazyVLMEngine(stores, emb, use_kernels=True)
+    for q in _workload(world)[:3]:
+        _assert_same(ref_engine.query(q), kern_engine.query(q))

@@ -1,0 +1,296 @@
+"""Two-phase int8 entity search: quantization invariants, phase-1 kernel
+parity, exactness-after-rescore (bitwise vs the fp32 oracle, including the
+margin-triggered fallback), and engine-level fp32/int8 result equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.query import Entity, FrameSpec, Relationship, Triple, VMRQuery
+from repro.core.refine import MockVerifier
+from repro.core.stores import append_entities, build_entity_store
+from repro.kernels.topk_similarity_i8 import (K_PAD, OVERFETCH,
+                                              dequantize_rows, quantize_rows,
+                                              topk_i8_phase1,
+                                              topk_i8_phase1_ref,
+                                              topk_similarity_i8)
+from repro.semantic import OracleEmbedder
+from repro.semantic.search import topk_similarity, topk_similarity_ref
+from repro.video import PREDICATES, SyntheticWorld, WorldConfig, ingest
+
+
+def _normal(key, shape):
+    x = jax.random.normal(key, shape)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# quantization invariants
+# ---------------------------------------------------------------------------
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 48)) * 3.0
+    rows = quantize_rows(x)
+    assert rows.codes.dtype == jnp.int8
+    # scale is max|row| / 127 and codes stay in the symmetric range
+    np.testing.assert_allclose(np.asarray(rows.scale),
+                               np.abs(np.asarray(x)).max(axis=1) / 127.0,
+                               rtol=1e-6)
+    assert int(jnp.max(jnp.abs(rows.codes.astype(jnp.int32)))) <= 127
+    # round-to-nearest: elementwise error <= scale/2 (+ fp slop)
+    err = np.abs(np.asarray(dequantize_rows(rows)) - np.asarray(x))
+    bound = np.asarray(rows.scale)[:, None] / 2 * (1 + 1e-6)
+    assert (err <= bound).all()
+
+
+def test_quantize_zero_row_guard():
+    x = jnp.zeros((4, 16)).at[0, 0].set(1.0)
+    rows = quantize_rows(x)
+    assert np.isfinite(np.asarray(rows.scale)).all()
+    assert (np.asarray(rows.codes)[1:] == 0).all()
+
+
+def test_append_entities_matches_full_requantize():
+    """Per-row quantization is row-independent, so incremental appends must
+    reproduce a from-scratch rebuild of the combined store bitwise."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((5, 16)).astype(np.float32)
+    b = rng.standard_normal((3, 16)).astype(np.float32)
+    s0 = build_entity_store(np.arange(5), np.arange(5), a, a, capacity=16)
+    s1 = append_entities(s0, np.arange(3) + 50, np.arange(3), b, b)
+    both = build_entity_store(np.concatenate([np.arange(5), np.arange(3) + 50]),
+                              np.concatenate([np.arange(5), np.arange(3)]),
+                              np.concatenate([a, b]), np.concatenate([a, b]),
+                              capacity=16)
+    for got, want in [(s1.text_i8, both.text_i8), (s1.image_i8, both.image_i8)]:
+        np.testing.assert_array_equal(np.asarray(got.codes),
+                                      np.asarray(want.codes))
+        np.testing.assert_array_equal(np.asarray(got.scale),
+                                      np.asarray(want.scale))
+        np.testing.assert_array_equal(np.asarray(got.err),
+                                      np.asarray(want.err))
+
+
+# ---------------------------------------------------------------------------
+# phase-1 kernel parity (interpret mode)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Q,N,D,k", [
+    (4, 512, 64, 8),
+    (3, 1000, 32, 16),    # ragged N (padding path)
+    (1, 256, 128, 1),     # k = 1
+    (8, 300, 16, 32),     # kprime hits K_PAD
+    (2, 40, 64, 16),      # kprime > N (junk-slot path)
+])
+def test_phase1_kernel_matches_jnp_ref(Q, N, D, k):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q8 = quantize_rows(_normal(ks[0], (Q, D)))
+    db = quantize_rows(_normal(ks[1], (N, D)))
+    valid = jax.random.bernoulli(ks[2], 0.9, (N,))
+    kp = min(OVERFETCH * k, K_PAD)
+    gs, gi = topk_i8_phase1(q8.codes, q8.scale, db, valid, kp,
+                            blk_q=8, blk_n=128, interpret=True)
+    ws, wi = topk_i8_phase1_ref(q8.codes, q8.scale, db, valid, kp)
+    # int32 dots are exact and both sides rescale in the same order, so
+    # phase-1 scores agree bitwise; indices agree wherever slots are real
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    finite = np.asarray(gs) > -1e29
+    np.testing.assert_array_equal(np.asarray(gi)[finite],
+                                  np.asarray(wi)[finite])
+
+
+# ---------------------------------------------------------------------------
+# two-phase exactness: bitwise vs the fp32 oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Q,N,D,k,p_valid", [
+    (4, 512, 64, 8, 0.9),
+    (3, 1000, 32, 16, 0.9),
+    (1, 256, 128, 1, 1.0),
+    (8, 300, 16, 32, 0.9),
+    (2, 40, 64, 16, 0.9),       # tiny DB: coverage path
+    (5, 64, 64, 4, 0.2),        # mostly-invalid rows
+    (2, 256, 64, 33, 1.0),      # kprime clamped to K_PAD (132 > 128)
+    (19, 512, 64, 8, 0.9),      # Q spans multiple rescore tiles (+1-row-free tail)
+])
+def test_two_phase_bitwise_exact(Q, N, D, k, p_valid):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _normal(ks[0], (Q, D))
+    db = _normal(ks[1], (N, D))
+    valid = jax.random.bernoulli(ks[2], p_valid, (N,))
+    if int(valid.sum()) < k:    # keep >= k valid rows: the oracle's -inf
+        valid = valid.at[:k].set(True)   # slots have no canonical indices
+    i8 = quantize_rows(db)
+    gs, gi = topk_similarity_i8(q, i8, db, valid, k, blk_q=8, blk_n=128,
+                                interpret=True)
+    ws, wi = topk_similarity_ref(q, db, valid, k)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_two_phase_exact_on_adversarial_cluster():
+    """Tightly clustered rows defeat the overfetch margin — the fallback
+    path must fire and still return the oracle's exact answer."""
+    for seed in range(4):
+        ks = jax.random.split(jax.random.PRNGKey(100 + seed), 2)
+        base = jax.random.normal(ks[0], (1, 32))
+        db = base + 1e-3 * jax.random.normal(ks[1], (2048, 32))
+        db = db / jnp.linalg.norm(db, axis=-1, keepdims=True)
+        q = base / jnp.linalg.norm(base)
+        valid = jnp.ones((2048,), bool)
+        gs, gi = topk_similarity_i8(q, quantize_rows(db), db, valid, 8,
+                                    blk_q=8, blk_n=256, interpret=True)
+        ws, wi = topk_similarity_ref(q, db, valid, 8)
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_two_phase_jnp_phase1_also_exact():
+    """REPRO_FORCE_REF path: plain-jnp phase 1, same exactness contract."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _normal(ks[0], (4, 64))
+    db = _normal(ks[1], (512, 64))
+    valid = jax.random.bernoulli(ks[2], 0.8, (512,))
+    gs, gi = topk_similarity_i8(q, quantize_rows(db), db, valid, 8,
+                                use_kernel_phase1=False)
+    ws, wi = topk_similarity_ref(q, db, valid, 8)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 400),
+       d=st.sampled_from([8, 16, 32, 64, 128]), k=st.integers(1, 32),
+       spread=st.floats(1e-4, 1.0))
+def test_exactness_after_rescore_property(seed, n, d, k, spread):
+    """Property: for ANY data distribution (including near-duplicate rows,
+    where quantization ties are common), the two-phase result equals the
+    oracle bitwise at the final k."""
+    k = min(k, n)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    center = jax.random.normal(ks[0], (1, d))
+    db = center + spread * jax.random.normal(ks[1], (n, d))
+    db = db / jnp.linalg.norm(db, axis=-1, keepdims=True)
+    q = _normal(ks[2], (2, d))
+    valid = jnp.ones((n,), bool)
+    gs, gi = topk_similarity_i8(q, quantize_rows(db), db, valid, k,
+                                use_kernel_phase1=False)
+    ws, wi = topk_similarity_ref(q, db, valid, k)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_mode_dispatch_validates():
+    q = jnp.zeros((1, 8))
+    db = jnp.zeros((4, 8))
+    valid = jnp.ones((4,), bool)
+    with pytest.raises(ValueError, match="int8"):
+        topk_similarity(q, db, valid, 2, mode="int8")      # no bank
+    with pytest.raises(ValueError, match="search mode"):
+        topk_similarity(q, db, valid, 2, mode="fp16")
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence: search_mode="int8" == "fp32" on the seed workloads
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    return SyntheticWorld(WorldConfig(num_segments=6, frames_per_segment=32,
+                                      objects_per_segment=7, seed=5,
+                                      spurious_prob=0.3))
+
+
+@pytest.fixture(scope="module")
+def stores(world):
+    return ingest(world, OracleEmbedder(dim=64))
+
+
+def _workload(world):
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    rng = np.random.default_rng(0)
+
+    def single(da, db, rel, **kw):
+        base = dict(top_k=16, text_threshold=0.9)
+        base.update(kw)
+        return VMRQuery(entities=(Entity("a", da), Entity("b", db)),
+                        relationships=(Relationship("r", PREDICATES[rel]),),
+                        frames=(FrameSpec((Triple("a", "r", "b"),)),), **base)
+
+    qs = [example_2_1()]
+    for _ in range(4):
+        da, db = rng.choice(descs, 2, replace=False)
+        qs.append(single(da, db, int(rng.integers(len(PREDICATES)))))
+    qs.append(single(descs[0], descs[1], 0, top_k=8, image_search=True,
+                     image_threshold=0.9))
+    qs.append(single("xqzzt flibber", "vorpal snark", 0))  # empty result
+    return qs
+
+
+def _assert_same(r1, r2):
+    assert r1.segments == r2.segments
+    assert r1.scores == r2.scores
+    assert (r1.end_frames == r2.end_frames).all()
+    assert r1.sql == r2.sql
+    assert r1.stats.entity_candidates == r2.stats.entity_candidates
+    assert r1.stats.sql_rows_per_triple == r2.stats.sql_rows_per_triple
+
+
+def test_engine_int8_equals_fp32_single_and_batch(world, stores):
+    emb = OracleEmbedder(dim=64)
+    queries = _workload(world)
+    e32 = LazyVLMEngine(stores, emb)
+    e8 = LazyVLMEngine(stores, emb, search_mode="int8")
+    for q in queries:
+        _assert_same(e32.query(q), e8.query(q))
+    for r1, r2 in zip(e32.query_batch(queries), e8.query_batch(queries)):
+        _assert_same(r1, r2)
+
+
+def test_engine_int8_equals_fp32_with_verifier(world, stores):
+    emb = OracleEmbedder(dim=64)
+    queries = _workload(world)
+    e32 = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    e8 = LazyVLMEngine(stores, emb, verifier=MockVerifier(world),
+                       search_mode="int8")
+    for r1, r2 in zip(e32.query_batch(queries), e8.query_batch(queries)):
+        _assert_same(r1, r2)
+        assert r1.stats.refine_candidates == r2.stats.refine_candidates
+        assert r1.stats.refine_passed == r2.stats.refine_passed
+
+
+def test_engine_rejects_int8_without_banks(stores):
+    bare = build_entity_store(np.arange(2), np.arange(2),
+                              np.eye(2, 8, dtype=np.float32),
+                              np.eye(2, 8, dtype=np.float32), capacity=4)
+    bare.text_i8 = None          # a hand-built store without int8 banks
+    import dataclasses
+    crippled = dataclasses.replace(stores, entities=bare)
+    with pytest.raises(ValueError, match="int8"):
+        LazyVLMEngine(crippled, OracleEmbedder(dim=64), search_mode="int8")
+    with pytest.raises(ValueError, match="search_mode"):
+        LazyVLMEngine(stores, OracleEmbedder(dim=64), search_mode="fp16")
+
+
+def test_explain_shows_search_mode(stores):
+    from repro.session import open_video_store
+    s8 = open_video_store(stores, OracleEmbedder(dim=64), search_mode="int8")
+    exp = s8.explain(example_2_1())
+    assert "search_mode=int8" in exp.tree
+    assert "predicted_bytes=" in exp.tree
+    s32 = open_video_store(stores, OracleEmbedder(dim=64))
+    exp32 = s32.explain(example_2_1())
+    assert "search_mode=fp32" in exp32.tree
+    # distinct modes are distinct plans (and distinct plan-cache entries)
+    assert exp.plan != exp32.plan
+
+
+def test_predicted_bytes_model_at_production_scale():
+    """The bytes model must show the int8 win where it exists — large
+    stores (the acceptance target is <= 0.3x fp32) — and honestly show the
+    phase-2 gather dominating on toy stores."""
+    from repro.core.plan import predicted_search_bytes
+    big_i8 = predicted_search_bytes("int8", 1_000_000, 1024, 8, 64)
+    big_fp = predicted_search_bytes("fp32", 1_000_000, 1024, 8, 64)
+    assert big_i8 <= 0.3 * big_fp
+    tiny_i8 = predicted_search_bytes("int8", 64, 64, 3, 16)
+    tiny_fp = predicted_search_bytes("fp32", 64, 64, 3, 16)
+    assert tiny_i8 > tiny_fp      # EXPLAIN warns you off int8 here

@@ -65,3 +65,19 @@ def test_sharded_topk_matches_single_device():
     s2, i2 = sharded_topk_similarity(q, db, valid, 8, mesh)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_sharded_int8_matches_single_device():
+    from repro.compat import make_mesh
+    from repro.kernels.topk_similarity_i8 import quantize_rows
+    mesh = make_mesh((1, 1), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (4, 32))
+    db = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+    valid = jnp.ones((256,), bool)
+    s1, i1 = topk_similarity(q, db, valid, 8)
+    s2, i2 = sharded_topk_similarity(q, db, valid, 8, mesh, mode="int8",
+                                     i8=quantize_rows(db))
+    # two-phase is exact per shard, so the sharded merge is bitwise exact
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

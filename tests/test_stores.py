@@ -129,3 +129,84 @@ def test_build_overflow_raises():
     emb = rng.standard_normal((9, 8)).astype(np.float32)
     with pytest.raises(ValueError):
         build_entity_store(np.arange(9), np.arange(9), emb, emb, capacity=8)
+
+
+# ---------------------------------------------------------------------------
+# radix-pack bounds validation (isin_pairs int32 packing)
+# ---------------------------------------------------------------------------
+def test_build_rejects_ids_beyond_pack_bounds():
+    from repro.symbolic.ops import PAIR_FIRST_LIMIT, PAIR_RADIX
+
+    rows = _rel_rows(2)
+    rows[0, 2] = PAIR_RADIX                    # sid is a pack second component
+    with pytest.raises(ValueError, match="'sid'.*32768"):
+        build_relationship_store(rows, capacity=8)
+
+    rows = _rel_rows(2)
+    rows[1, 4] = PAIR_RADIX + 7                # oid too
+    with pytest.raises(ValueError, match="'oid'"):
+        build_relationship_store(rows, capacity=8)
+
+    rows = _rel_rows(2)
+    rows[0, 0] = PAIR_FIRST_LIMIT              # vid is the first component
+    with pytest.raises(ValueError, match="'vid'"):
+        build_relationship_store(rows, capacity=8)
+
+    rows = _rel_rows(2)
+    rows[0, 1] = -3                            # negative ids also break packs
+    rows[0, 0] = -3
+    with pytest.raises(ValueError, match="'vid'"):
+        build_relationship_store(rows, capacity=8)
+
+    emb = np.zeros((1, 8), np.float32)
+    with pytest.raises(ValueError, match="'eid'"):
+        build_entity_store(np.array([0]), np.array([PAIR_RADIX]), emb, emb,
+                           capacity=4)
+    with pytest.raises(ValueError, match="'vid'"):
+        build_entity_store(np.array([PAIR_FIRST_LIMIT]), np.array([0]),
+                           emb, emb, capacity=4)
+
+
+def test_append_rejects_ids_beyond_pack_bounds():
+    from repro.symbolic.ops import PAIR_FIRST_LIMIT, PAIR_RADIX
+
+    rel = build_relationship_store(_rel_rows(2), capacity=8)
+    bad = _rel_rows(1, seed=2)
+    bad[0, 2] = PAIR_RADIX
+    with pytest.raises(ValueError, match="'sid'"):
+        append_relationships(rel, bad)
+
+    ent = _entity_store(2, capacity=8)
+    emb = np.zeros((1, 8), np.float32)
+    with pytest.raises(ValueError, match="'vid'"):
+        append_entities(ent, np.array([PAIR_FIRST_LIMIT]), np.array([0]),
+                        emb, emb)
+
+
+def test_in_range_ids_still_accepted_at_bounds_edge():
+    from repro.symbolic.ops import PAIR_FIRST_LIMIT, PAIR_RADIX
+    rows = np.zeros((1, 5), np.int32)
+    rows[0, 0] = PAIR_FIRST_LIMIT - 1
+    rows[0, 2] = PAIR_RADIX - 2
+    rows[0, 4] = PAIR_RADIX - 2
+    store = build_relationship_store(rows, capacity=4)   # no raise
+    assert int(np.asarray(store.table.count())) == 1
+    rows[0, 0] = PAIR_FIRST_LIMIT - 2
+    rows[0, 2] = PAIR_RADIX - 1
+    build_relationship_store(rows, capacity=4)           # no raise either
+
+
+def test_sentinel_colliding_pair_rejected():
+    """(2^16-1, 2^15-1) packs to exactly isin_pairs' invalid-key sentinel
+    (2^31-1): per-column bounds admit it, the joint check must not — the
+    packed join would silently never match that pair."""
+    from repro.symbolic.ops import PAIR_FIRST_LIMIT, PAIR_RADIX
+    rows = np.zeros((1, 5), np.int32)
+    rows[0, 0] = PAIR_FIRST_LIMIT - 1
+    rows[0, 2] = PAIR_RADIX - 1
+    with pytest.raises(ValueError, match="sentinel"):
+        build_relationship_store(rows, capacity=4)
+    emb = np.zeros((1, 8), np.float32)
+    with pytest.raises(ValueError, match="sentinel"):
+        build_entity_store(np.array([PAIR_FIRST_LIMIT - 1]),
+                           np.array([PAIR_RADIX - 1]), emb, emb, capacity=4)
