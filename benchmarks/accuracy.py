@@ -92,7 +92,6 @@ def run():
     queries = _sample_queries(world, 60, seed=1)
     gts = [_gt_single(world, q) for q in queries]
     keep = [i for i, g in enumerate(gts) if g]   # evaluate non-empty GT
-    res_rows = []
 
     def mean_f1(verifier_fn):
         ps, rs, fs, cands = [], [], [], 0

@@ -1,17 +1,20 @@
 """Assert the BENCH_lazyvlm.json perf artifact matches the v1 schema.
 
 CI's benchmark smoke step runs ``python -m benchmarks.check_schema
-BENCH_lazyvlm.json`` after the top-k module, so every PR produces a
-machine-readable perf trajectory and fails loudly if the artifact shape or
-the int8 acceptance ratios regress.
+BENCH_lazyvlm.json --expect-modules topk_search,cascade`` after the smoke
+modules, so every PR produces a machine-readable perf trajectory and fails
+loudly if the artifact shape, the int8 acceptance ratios, the cascade
+exactness bit, or the expected module coverage regress. A module listed in
+``--expect-modules`` that contributed no rows is a hard failure — a
+benchmark silently falling out of the smoke run must not pass CI.
 """
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 
 
-def check(path: str) -> int:
+def check(path: str, expect_modules=()) -> int:
     d = json.load(open(path))
     assert d["schema"] == "lazyvlm-bench-v1", d.get("schema")
     assert d["backend"] and d["git_sha"]
@@ -19,6 +22,10 @@ def check(path: str) -> int:
     rows = d["rows"]
     assert rows and all({"module", "name", "value", "derived"} <= set(r)
                         for r in rows), "malformed rows"
+    present = {r["module"] for r in rows}
+    missing = sorted(set(expect_modules) - present)
+    assert not missing, (f"expected benchmark modules missing from the "
+                         f"artifact: {missing} (present: {sorted(present)})")
     ratios = [r for r in rows if "ratio_int8_vs_fp32" in r["name"]]
     if ratios:
         bad = [r for r in ratios if r["value"] > 0.3]
@@ -26,10 +33,25 @@ def check(path: str) -> int:
     exact = [r for r in rows if r["name"].endswith("int8_exact_vs_ref")]
     if exact:
         assert exact[0]["value"] == 1, "int8 two-phase diverged from oracle"
-    print(f"bench schema OK: {len(rows)} rows "
-          f"({len(ratios)} ratio checks, exactness={'yes' if exact else 'n/a'})")
+    casc = [r for r in rows if r["name"] == "cascade/exact_vs_full"]
+    if casc:
+        assert casc[0]["value"] == 1, \
+            "verification cascade diverged from full verification"
+    print(f"bench schema OK: {len(rows)} rows from {sorted(present)} "
+          f"({len(ratios)} ratio checks, "
+          f"exactness={'yes' if exact or casc else 'n/a'})")
     return len(rows)
 
 
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="BENCH_lazyvlm.json")
+    ap.add_argument("--expect-modules", default="",
+                    help="comma-separated modules that MUST have rows")
+    args = ap.parse_args(argv)
+    expect = [m.strip() for m in args.expect_modules.split(",") if m.strip()]
+    check(args.path, expect)
+
+
 if __name__ == "__main__":
-    check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_lazyvlm.json")
+    main()

@@ -2,18 +2,15 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Tuple
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core import LazyVLMEngine, VMRQuery, example_2_1
+from repro.core import LazyVLMEngine, VMRQuery
 from repro.core.query import (Entity, FrameSpec, Relationship,
                               TemporalConstraint, Triple)
-from repro.core.refine import MockVerifier, VLMVerifier
 from repro.semantic import OracleEmbedder
-from repro.video import PREDICATES, SyntheticWorld, WorldConfig, ingest
+from repro.video import SyntheticWorld, WorldConfig, ingest
 
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:

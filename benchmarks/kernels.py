@@ -11,7 +11,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common as C
 from repro.kernels import ref

@@ -10,11 +10,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common as C
-from repro.core.executor import _entity_match, _triple_selections
-from repro.symbolic import ops as sops
+from repro.core.executor import _entity_match
 
 
 def run():

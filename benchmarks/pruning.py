@@ -11,7 +11,6 @@ measured wall time of both paths at test scale (reduced VLM on CPU).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 from repro.configs import get_config

@@ -29,7 +29,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -45,7 +45,6 @@ SHAPE_DIMS = {"train_4k": (4096, 256), "prefill_32k": (32_768, 32),
 def hbm_traffic(rec: dict) -> float:
     """Analytic per-device HBM bytes per step (TPU kernel path assumed)."""
     from repro.configs import get_config
-    from repro.models import transformer as tf
 
     cfg = get_config(rec["arch"])
     seq, batch = SHAPE_DIMS[rec["shape"]]

@@ -8,6 +8,7 @@
   accuracy     — refinement fixes detector noise (robustness)
   kernels      — fused top-k data-movement model + CPU sanity timing
   topk_search  — fp32 fused vs int8 two-phase vs oracle (bytes + wall-clock)
+  cascade      — budgeted VLM cascade: calls avoided + wall-clock vs full
   roofline     — printed separately: python -m benchmarks.roofline
 
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
@@ -41,10 +42,11 @@ def main(argv=None) -> None:
                     help="comma-separated subset of benchmark modules")
     args = ap.parse_args(argv)
 
-    from benchmarks import (accuracy, kernels, multi_query, parallelism,
-                            pruning, scaling, topk_search, updates)
+    from benchmarks import (accuracy, cascade, kernels, multi_query,
+                            parallelism, pruning, scaling, topk_search,
+                            updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
-               kernels, topk_search]
+               kernels, topk_search, cascade]
     if args.modules:
         want = {m.strip() for m in args.modules.split(",")}
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}

@@ -7,7 +7,6 @@ queries over the merged store equal queries over a from-scratch store.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 from repro.core import LazyVLMEngine

@@ -3,7 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Uses the synthetic world (the CV-frontend stand-in), oracle embeddings, and
-the ground-truth mock verifier, so it runs in seconds on CPU.
+the ground-truth mock verifier, so it runs in seconds on CPU. For the full
+layer map (lang -> plan -> physical -> kernels/symbolic/semantic ->
+serving) and the invariants each layer pins, see docs/architecture.md.
 """
 import numpy as np
 
@@ -68,6 +70,11 @@ def main():
     session.query(text)
     print(f"plan cache after repeat: {session.plan_cache.hits} hit(s), "
           f"{session.plan_cache.misses} miss(es)")
+
+    # 4. EXPLAIN ANALYZE: the physical operator pipeline with estimated vs
+    #    actual rows per operator (the cost model keeps itself honest).
+    print("\nEXPLAIN ANALYZE (physical pipeline):")
+    print(session.explain(text, analyze=True).physical)
 
 
 if __name__ == "__main__":

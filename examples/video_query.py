@@ -87,7 +87,6 @@ def main():
 
 
 def _segment_has_event(world, vid, min_gap):
-    objs = {o.eid: o for o in world.segments[vid]}
     by_desc = {}
     for o in world.segments[vid]:
         by_desc.setdefault(o.description, []).append(o.eid)

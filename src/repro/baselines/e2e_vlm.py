@@ -17,7 +17,6 @@ is the oracle; cost differs by the pruning factor.
 from __future__ import annotations
 
 import time
-from typing import List
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,57 +1,68 @@
 """The LazyVLM query engine (Section 2.3, Figure 1).
 
 Queries enter as ``VMRQuery`` objects (or, through ``repro.session``, as
-semi-structured text) and are first **compiled to a logical plan**
-(:mod:`repro.core.plan`): typed nodes for every pipeline stage, with the
-optimizer passes — cross-frame triple dedupe, shared-entity embed reuse,
-static capacity/bucket selection — run once at compile time. Plans are
-cached by query signature, so repeat and structurally identical queries
-skip compilation (and re-use the already-traced fused programs) entirely.
+semi-structured text) and are **compiled twice**:
 
-Execution of a plan:
-  1. Entity Matching        — batched vector top-k over the Entity Store
-  2. SQL Query Generation   — each SPO triple compiles to a conjunctive SELECT
-                              over the Relationship Store (rendered as real SQL
-                              text for display; executed by repro.symbolic)
-  3. Relationship Matching  — one fused jit evaluates ALL triples' selections
-     & Refinement             (vmapped); surviving rows go to the lazy VLM
-                              verifier in fixed-size batches
-  4. Temporal Matching      — presence bitmaps + chain DP over frames
+  1. to a **logical plan** (:mod:`repro.core.plan`) — typed nodes per
+     pipeline stage, compile-time optimizer passes (cross-frame triple
+     dedupe, shared-entity embed reuse, static capacity/bucket selection),
+     cached by query signature;
+  2. to a **physical pipeline** (:mod:`repro.core.physical`) — typed
+     operators (``EmbedOp``/``TopKSearchOp``/``TripleFilterOp``/
+     ``VlmVerifyOp``/``BitmapConjoinOp``/``TemporalChainOp``), each with a
+     ``CostEstimate``; a cost-based pass orders independent triple filters
+     by estimated selectivity fed from the device-resident store stats.
 
-Host Python only orchestrates; every stage's math is a jitted program. The
-whole symbolic stage is ONE program launch regardless of the number of
-triples — the TPU-idiomatic reading of the paper's stage parallelism.
+``execute`` is orchestration only: it walks the pipeline's operators and
+assembles the ``QueryResult``; every stage's math is a fused jitted program
+(the kernels live in :mod:`repro.core.physical.stages`). ``execute_batch``
+drives the same stage kernels with a fused multi-query schedule — one
+launch per stage for the whole batch and ONE content-deduped VLM pass.
+With the verification cascade off, both paths are bit-identical to the
+pre-physical executor (pinned by the equivalence tests); with a
+``verify_budget``, ``VlmVerifyOp`` verifies lazily in semantic-score order
+and exits early on an exactness certificate.
+
+Host Python only orchestrates; device→host transfers all route through the
+``_to_host`` funnel below so tests can spy on transfer shapes.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import (EntityMatch, Plan, PlanCache, PredicateMatch,
-                             pow2_bucket)
+from repro.core.physical import compile_physical
+from repro.core.physical.cost import StoreStats
+from repro.core.physical.ops import ExecContext, cascade_for_plan
+# stage kernels re-exported for compatibility (benchmarks import them here)
+from repro.core.physical.stages import (_conjoin_bitmaps,  # noqa: F401
+                                        _entity_match, _masks_to_bitmaps,
+                                        _predicate_match, _triple_selections,
+                                        make_sql_renderer, render_sql)
+from repro.core.plan import Plan, PlanCache, pow2_bucket
 from repro.core.query import VMRQuery
 from repro.core.stores import REL_SCHEMA, VideoStores
 from repro.core import temporal as temporal_lib
 from repro.semantic.embed import CachingEmbedder
 from repro.semantic.search import (SEARCH_MODES, sharded_topk_similarity,
-                                   topk_prefix, topk_similarity)
-from repro.symbolic import ops as sops
+                                   topk_prefix)
 from repro.symbolic.table import Table
 
 
 def _to_host(x) -> np.ndarray:
     """The single device→host funnel for the execution path.
 
-    Every transfer the executor makes goes through here so tests can spy on
-    transfer *shapes*: with no verifier configured, the symbolic stage must
-    never round-trip a full-capacity ``(ΣT, cap)`` row mask — only the
-    ``(ΣT,)`` per-triple row counts (a fused device reduction) and the small
+    Every transfer the executor AND the physical operators make goes
+    through here (the operators call ``physical.stages.to_host``, which
+    delegates to this attribute at call time) so tests can spy on transfer
+    *shapes*: with no verifier configured, the symbolic stage must never
+    round-trip a full-capacity ``(ΣT, cap)`` row mask — only the ``(ΣT,)``
+    per-triple row counts (a fused device reduction) and the small
     candidate arrays come back to host.
     """
     return np.asarray(x)
@@ -63,6 +74,8 @@ class QueryStats:
     sql_rows_per_triple: List[int] = field(default_factory=list)
     refine_candidates: int = 0
     refine_passed: int = 0
+    refine_verified: int = 0    # candidates whose verdict was resolved
+    verify_rounds: int = 0      # cascade rounds (0 = single full pass)
     vlm_calls: int = 0
     frames_scanned_equivalent: int = 0   # what an e2e VLM would have ingested
     stage_seconds: Dict[str, float] = field(default_factory=dict)
@@ -100,112 +113,13 @@ class QueryResult:
 
 
 # ---------------------------------------------------------------------------
-# jitted stage kernels
-# ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("k", "mode", "use_kernels"))
-def _entity_match(queries, db, db_i8, db_valid, k: int, mode: str,
-                  use_kernels: bool):
-    """One fused search launch: mode/kernel dispatch happens at trace time
-    (the Pallas kernels run in interpret mode off-TPU), so the engine's
-    ``use_kernels``/``search_mode`` flags reach the single-device path too,
-    not just the sharded one."""
-    return topk_similarity(queries, db, db_valid, k, use_kernels=use_kernels,
-                           mode=mode, i8=db_i8)
-
-
-@jax.jit
-def _predicate_match(queries, pred_emb):
-    """Similarity of each relationship text to each predicate label."""
-    return jnp.einsum("rd,pd->rp", queries, pred_emb)
-
-
-@partial(jax.jit, static_argnames=())
-def _triple_selections(rel_cols_vid, rel_cols_fid, rel_cols_sid, rel_cols_rl,
-                       rel_cols_oid, rel_valid,
-                       subj_vid, subj_eid, subj_ok,
-                       obj_vid, obj_eid, obj_ok,
-                       pred_ids, pred_ok):
-    """Evaluate all triples' conjunctive selections in one fused program.
-
-    subj_*/obj_*: (T, k) candidate (vid,eid) pairs per triple;
-    pred_*: (T, m) candidate predicate labels per triple.
-    Returns (T, cap) row masks.
-    """
-    def one(svid, seid, sok, ovid, oeid, ook, pid, pok):
-        m = rel_valid
-        m &= sops.isin_pairs(rel_cols_vid, rel_cols_sid, svid, seid, sok)
-        m &= sops.isin_pairs(rel_cols_vid, rel_cols_oid, ovid, oeid, ook)
-        m &= sops.isin(rel_cols_rl, pid, pok)
-        return m
-
-    return jax.vmap(one)(subj_vid, subj_eid, subj_ok,
-                         obj_vid, obj_eid, obj_ok, pred_ids, pred_ok)
-
-
-@partial(jax.jit, static_argnames=("num_segments", "frames_per_segment"))
-def _masks_to_bitmaps(rel_vid, rel_fid, masks, num_segments: int,
-                      frames_per_segment: int):
-    """(T, cap) row masks -> (T, V, F) presence bitmaps."""
-    def one(mask):
-        t = Table({"vid": rel_vid, "fid": rel_fid}, mask)
-        return sops.scatter_bitmap(t, "vid", "fid", num_segments,
-                                   frames_per_segment)
-    return jax.vmap(one)(masks)
-
-
-@jax.jit
-def _conjoin_bitmaps(bitmaps, idx, pad):
-    """Frame-spec conjunction for a whole batch in one fused program.
-
-    bitmaps: (T, V, F); idx/pad: (n_frames, max_triples) — row r ANDs the
-    bitmaps of its non-pad triple indices (pad slots act as identity/True).
-    Returns (n_frames, V, F).
-    """
-    sel = bitmaps[idx] | pad[:, :, None, None]
-    return sel.all(axis=1)
-
-
-# ---------------------------------------------------------------------------
-# SQL rendering (the paper's "SQL Query Generation" artifact)
-# ---------------------------------------------------------------------------
-def render_sql(triple_idx: int, subj_pairs, obj_pairs, pred_ids,
-               predicates) -> str:
-    def pairs_sql(pairs):
-        return ", ".join(f"({int(v)},{int(e)})" for v, e in pairs[:8]) + (
-            ", ..." if len(pairs) > 8 else "")
-    preds = ", ".join(f"'{predicates[int(p)]}'" for p in pred_ids)
-    return (
-        f"SELECT vid, fid FROM relationships\n"
-        f"  WHERE (vid, sid) IN ({pairs_sql(subj_pairs)})\n"
-        f"    AND (vid, oid) IN ({pairs_sql(obj_pairs)})\n"
-        f"    AND rl IN ({preds})  -- triple {triple_idx}"
-    )
-
-
-def _make_sql_renderer(n_triples: int, offset: int,
-                       sv, se, so, ov, oe, oo, pi, po, predicates
-                       ) -> Callable[[], List[str]]:
-    """Closure rendering a query's SQL from host candidate arrays on demand
-    (``QueryResult.sql``); rows ``offset..offset+n_triples`` of the arrays
-    belong to this query."""
-    def render() -> List[str]:
-        return [render_sql(i,
-                           list(zip(sv[offset + i][so[offset + i]],
-                                    se[offset + i][so[offset + i]])),
-                           list(zip(ov[offset + i][oo[offset + i]],
-                                    oe[offset + i][oo[offset + i]])),
-                           pi[offset + i][po[offset + i]], predicates)
-                for i in range(n_triples)]
-    return render
-
-
-# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 class LazyVLMEngine:
     def __init__(self, stores: VideoStores, embedder, verifier=None, *,
                  mesh=None, use_kernels: bool = False,
                  search_mode: str = "fp32",
+                 reorder_filters: bool = True,
                  embed_cache_entries: int = 4096,
                  plan_cache_entries: int = 256):
         self.stores = stores
@@ -228,8 +142,15 @@ class LazyVLMEngine:
                              "without them (build_entity_store quantizes "
                              "at ingest)")
         self.search_mode = search_mode
+        # cost-based triple ordering (invariant-preserving; off = keep the
+        # query's declaration order in the fused selection)
+        self.reorder_filters = reorder_filters
         # query-signature -> compiled Plan (repeat queries skip compilation)
         self.plan_cache = PlanCache(max_entries=plan_cache_entries)
+        # logical Plan -> PhysicalPipeline (FIFO-bounded like the plan cache)
+        self._physical_cache: Dict[Plan, object] = {}
+        self._physical_cache_entries = plan_cache_entries
+        self._store_stats: Optional[StoreStats] = None
 
     # -- compilation -------------------------------------------------------
     def plan_for(self, query: VMRQuery) -> Plan:
@@ -239,7 +160,43 @@ class LazyVLMEngine:
                                          search_mode=self.search_mode)
         return plan
 
-    # -- stage 1: entity + predicate matching --------------------------------
+    @property
+    def store_stats(self) -> StoreStats:
+        """Device-resident symbolic statistics (computed once per engine:
+        one fused reduction, small transfers through the funnel). Stores
+        are immutable (incremental ingest builds NEW store objects), so
+        the snapshot can't silently go stale — but an engine re-pointed at
+        updated stores must call :meth:`refresh_store_stats`."""
+        if self._store_stats is None:
+            self._store_stats = StoreStats.from_stores(self.stores)
+        return self._store_stats
+
+    def refresh_store_stats(self) -> None:
+        """Recompute the statistics snapshot and drop compiled physical
+        pipelines (their cost ordering priced against the old stats). Call
+        after swapping ``self.stores`` for an incrementally-updated store —
+        results never depend on stats freshness, only cost ordering and
+        admission pricing do."""
+        self._store_stats = None
+        self._physical_cache.clear()
+
+    def physical_for(self, plan: Plan):
+        """Lower ``plan`` to a :class:`PhysicalPipeline` (cached)."""
+        pipe = self._physical_cache.get(plan)
+        if pipe is None:
+            pipe = compile_physical(plan, self.store_stats,
+                                    reorder=self.reorder_filters)
+            self._physical_cache[plan] = pipe
+            while len(self._physical_cache) > self._physical_cache_entries:
+                self._physical_cache.pop(next(iter(self._physical_cache)))
+        return pipe
+
+    def estimate_cost(self, query: VMRQuery):
+        """Total pipeline :class:`CostEstimate` for one query (the serving
+        scheduler's admission currency)."""
+        return self.physical_for(self.plan_for(query)).total_estimate()
+
+    # -- stage 1 search dispatch (used by TopKSearchOp) ----------------------
     def _search(self, q_emb, emb, emb_i8, valid, k):
         if self.mesh is not None:
             return sharded_topk_similarity(q_emb, emb, valid, k, self.mesh,
@@ -248,118 +205,42 @@ class LazyVLMEngine:
         return _entity_match(q_emb, emb, emb_i8, valid, k,
                              self.search_mode, self.use_kernels)
 
-    def _match_entities(self, em: EntityMatch, stats: QueryStats):
-        """Candidates per unique entity text (``em.rows`` maps entities to
-        rows); duplicate texts share one embedding row and one search row —
-        the plan's embed-reuse pass."""
-        q_emb = jnp.asarray(self._embed.embed_texts(list(em.texts)))
-        ent = self.stores.entities
-        scores, idx = self._search(q_emb, ent.text_emb, ent.text_i8,
-                                   ent.table.valid, em.k)
-        ok = scores >= em.text_threshold
-        if em.image_search:
-            # dual-store matching (ete AND eie, Section 2.2): candidates are
-            # the union; duplicate (vid,eid) pairs are harmless under the
-            # semi-join's set semantics.
-            qi = jnp.asarray(self._embed.embed_for_image(list(em.texts)))
-            iscores, iidx = self._search(qi, ent.image_emb, ent.image_i8,
-                                         ent.table.valid, em.k)
-            iok = iscores >= em.image_threshold
-            idx = jnp.concatenate([idx, iidx], axis=1)
-            ok = jnp.concatenate([ok, iok], axis=1)
-        vids = ent.table["vid"][jnp.clip(idx, 0, ent.capacity - 1)]
-        eids = ent.table["eid"][jnp.clip(idx, 0, ent.capacity - 1)]
-        ok_np = _to_host(ok)
-        for name, row in zip(em.names, em.rows):
-            stats.entity_candidates[name] = int(ok_np[row].sum())
-        return vids, eids, ok  # each (U, k) or (U, 2k) with image search
-
-    def _match_predicates(self, pm: PredicateMatch):
-        q_emb = jnp.asarray(self._embed.embed_texts(list(pm.texts)))
-        sims = _predicate_match(q_emb, jnp.asarray(
-            self.stores.predicates.embeddings))     # (U, P)
-        vals, ids = jax.lax.top_k(sims, pm.m)
-        ok = vals >= pm.threshold
-        # always keep the argmax label even if below threshold
-        ok = ok.at[:, 0].set(True)
-        return ids, ok                                # (U, m)
-
     # -- the full pipeline ------------------------------------------------------
     def query(self, query: VMRQuery) -> QueryResult:
         """Compile (with plan-cache) and execute one query."""
         return self.execute(self.plan_for(query))
 
-    def execute(self, plan: Plan) -> QueryResult:
-        stats = QueryStats()
+    def execute(self, plan: Plan, *, _analyze: Optional[dict] = None
+                ) -> QueryResult:
+        """Walk the physical pipeline's operators and assemble the result.
+
+        ``_analyze`` (EXPLAIN ANALYZE, see ``Session.explain``) collects
+        per-operator actual row counts into the given dict — analyze mode
+        may issue extra small reductions the hot path skips.
+        """
         st = self.stores
-        rel = st.relationships.table
-        t0 = time.perf_counter()
-
-        vids, eids, ent_ok = self._match_entities(plan.entity_match, stats)
-        pred_ids, pred_ok = self._match_predicates(plan.predicate_match)
-        stats.stage_seconds["entity_match"] = time.perf_counter() - t0
-
-        # -- stage 2+3a: all triples in one fused selection -------------------
-        t0 = time.perf_counter()
-        ts = plan.triple_select
-        n_triples = len(ts.triples)
-        srow = np.asarray(ts.subj_row, np.int32)
-        orow = np.asarray(ts.obj_row, np.int32)
-        prow = np.asarray(ts.pred_row, np.int32)
-        pad = ts.bucket - n_triples      # static bucket: programs re-used
-                                         # across queries of different sizes
-
-        def gather_pad(arr, rows):
-            g = arr[jnp.asarray(rows)]
-            return jnp.pad(g, ((0, pad), (0, 0))) if pad else g
-
-        sv, se, so = (gather_pad(a, srow) for a in (vids, eids, ent_ok))
-        ov, oe, oo = (gather_pad(a, orow) for a in (vids, eids, ent_ok))
-        pi, po = gather_pad(pred_ids, prow), gather_pad(pred_ok, prow)
-        masks = _triple_selections(
-            rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
-            rel.valid, sv, se, so, ov, oe, oo, pi, po)    # (bucket, cap)
-        # per-triple row counts: fused device reduction, ONE (bucket,)
-        # transfer — the (bucket, cap) mask itself never leaves the device
-        # unless the verifier below needs row identities
-        stats.sql_rows_per_triple = [
-            int(x) for x in _to_host(masks.sum(axis=1))[:n_triples]]
-        sql_renderer = _make_sql_renderer(
-            n_triples, 0,
-            _to_host(sv), _to_host(se), _to_host(so),
-            _to_host(ov), _to_host(oe), _to_host(oo),
-            _to_host(pi), _to_host(po), st.predicates.labels)
-        stats.stage_seconds["symbolic"] = time.perf_counter() - t0
-
-        # -- stage 3b: lazy VLM refinement ------------------------------------
-        t0 = time.perf_counter()
-        if plan.verify.enabled and self.verifier is not None:
-            masks = self._refine(rel, masks, stats)
-        stats.stage_seconds["refine"] = time.perf_counter() - t0
-
-        # -- stage 4: conjunction + temporal ----------------------------------
-        t0 = time.perf_counter()
-        bitmaps = _masks_to_bitmaps(rel["vid"], rel["fid"], masks,
-                                    st.num_segments, st.frames_per_segment)
-        fmaps = _conjoin_bitmaps(
-            bitmaps, jnp.asarray(np.asarray(plan.conjoin.idx, np.int32)),
-            jnp.asarray(np.asarray(plan.conjoin.pad)))     # (n_frames, V, F)
-        reach = temporal_lib.chain_reach(fmaps, plan.temporal.gaps)
-        scores, seg_ids = temporal_lib.rank_segments(reach,
-                                                     plan.temporal.top_k)
-        stats.stage_seconds["temporal"] = time.perf_counter() - t0
-
-        scores_np = _to_host(scores)
-        segs_np = _to_host(seg_ids)
+        pipe = self.physical_for(plan)
+        ctx = ExecContext(engine=self, plan=plan, pipeline=pipe,
+                          stats=QueryStats(), analyze=_analyze is not None)
+        for op in pipe.ops:
+            t0 = time.perf_counter()
+            op.run(ctx)
+            ctx.stats.stage_seconds[op.stage] = (
+                ctx.stats.stage_seconds.get(op.stage, 0.0)
+                + time.perf_counter() - t0)
+        scores_np, segs_np, reach = ctx.vals["ranked"]
         keep = scores_np > 0
-        stats.frames_scanned_equivalent = (st.num_segments
-                                           * st.frames_per_segment)
+        ctx.stats.frames_scanned_equivalent = (st.num_segments
+                                               * st.frames_per_segment)
+        if _analyze is not None:
+            _analyze["actual_rows"] = ctx.actual_rows
+            _analyze["pipeline"] = pipe
         return QueryResult(
             segments=[int(v) for v in segs_np[keep]],
             scores=[int(s) for s in scores_np[keep]],
             end_frames=_to_host(reach),
-            sql_renderer=sql_renderer,
-            stats=stats,
+            sql_renderer=ctx.vals["sql_renderer"],
+            stats=ctx.stats,
         )
 
     # -- batched multi-query path -------------------------------------------------
@@ -418,8 +299,9 @@ class LazyVLMEngine:
 
     def _match_predicates_batch(self, plans: List[Plan]):
         """Predicate matching for a whole batch as one einsum + one top-k
-        launch. Returns per plan ``(pred_ids, ok)`` host arrays (rows per
-        unique relationship text)."""
+        launch. Returns per plan ``(pred_ids, ok, vals)`` host arrays (rows
+        per unique relationship text; ``vals`` feed the cascade's
+        semantic-score ordering)."""
         texts = [t for p in plans for t in p.predicate_match.texts]
         offs = np.cumsum([0] + [len(p.predicate_match.texts) for p in plans])
         q_emb = jnp.asarray(self._embed.embed_texts(texts))
@@ -435,7 +317,7 @@ class LazyVLMEngine:
             v_q, id_q = topk_prefix(vals_np[sl], ids_np[sl], pm.m)
             ok = v_q >= pm.threshold
             ok[:, 0] = True    # always keep the argmax label
-            out.append((id_q, ok))
+            out.append((id_q, ok, v_q))
         return out
 
     def query_batch(self, queries: List[VMRQuery]) -> List[QueryResult]:
@@ -454,20 +336,26 @@ class LazyVLMEngine:
         amortizes: one embedding call (cached) for every query's texts, one
         entity/predicate top-k launch each, one ``(ΣT, cap)`` selection +
         bitmap launch (ΣT padded to a power-of-two bucket so compiled
-        programs are reused across batch shapes), one signature-grouped
-        temporal DP, and — the expensive part — ONE deduped VLM verification
-        pass shared across queries: a candidate row referenced by several
-        queries costs one call total. Two stats fields carry batch-level
-        (not per-query) values on every result: ``stats.vlm_calls`` is the
-        verifier's cumulative call count shared by the whole batch, and
-        ``stats.stage_seconds`` holds the batch's stage wall-times (summing
-        them across a batch's results overcounts by the batch size).
+        programs are reused across batch shapes; each query's rows sit in
+        its pipeline's cost order), one signature-grouped temporal DP, and —
+        the expensive part — ONE deduped VLM verification pass shared across
+        queries: a candidate row referenced by several queries costs one
+        call total. Plans carrying a ``verify_budget`` instead run the
+        budgeted cascade on their own row slice, seeded with the fused
+        pass's verdict memo (duplicate rows still cost one call; results
+        stay exact by the cascade's certificate). Two stats fields carry
+        batch-level (not per-query) values on every result:
+        ``stats.vlm_calls`` is the verifier's cumulative call count shared
+        by the whole batch, and ``stats.stage_seconds`` holds the batch's
+        stage wall-times (summing them across a batch's results overcounts
+        by the batch size).
         """
         if not plans:
             return []
         st = self.stores
         rel = st.relationships.table
         stats = [QueryStats() for _ in plans]
+        pipes = [self.physical_for(p) for p in plans]
         t0 = time.perf_counter()
 
         # -- stage 1: batched entity + predicate matching ---------------------
@@ -483,7 +371,7 @@ class LazyVLMEngine:
         t_pad = pow2_bucket(total)
         width = pow2_bucket(max(v.shape[1] for v, _, _ in ent_cands),
                             minimum=8)
-        m_width = pow2_bucket(max(ids.shape[1] for ids, _ in pred_cands),
+        m_width = pow2_bucket(max(ids.shape[1] for ids, _, _ in pred_cands),
                               minimum=2)
         sv = np.zeros((t_pad, width), np.int32)
         se = np.zeros((t_pad, width), np.int32)
@@ -495,13 +383,13 @@ class LazyVLMEngine:
         po = np.zeros((t_pad, m_width), bool)
         for qi, p in enumerate(plans):
             vids, eids, eok = ent_cands[qi]
-            pids, pok = pred_cands[qi]
+            pids, pok, _ = pred_cands[qi]
             ts = p.triple_select
             w, m = vids.shape[1], pids.shape[1]
-            for j in range(len(ts.triples)):
-                row = row_offs[qi] + j
-                s_i, o_i = ts.subj_row[j], ts.obj_row[j]
-                p_i = ts.pred_row[j]
+            for pos, orig in enumerate(pipes[qi].order):
+                row = row_offs[qi] + pos
+                s_i, o_i = ts.subj_row[orig], ts.obj_row[orig]
+                p_i = ts.pred_row[orig]
                 sv[row, :w], se[row, :w] = vids[s_i], eids[s_i]
                 so[row, :w] = eok[s_i]
                 ov[row, :w], oe[row, :w] = vids[o_i], eids[o_i]
@@ -523,47 +411,78 @@ class LazyVLMEngine:
         renderers: List[Callable[[], List[str]]] = []
         for qi, p in enumerate(plans):
             lo = row_offs[qi]
+            pos_of = pipes[qi].pos_of
             stats[qi].sql_rows_per_triple = [
-                int(x) for x in row_counts[lo: lo + counts[qi]]]
-            renderers.append(_make_sql_renderer(
-                counts[qi], lo, sv, se, so, ov, oe, oo, pi, po,
-                st.predicates.labels))
+                int(row_counts[lo + pos_of[j]]) for j in range(counts[qi])]
+            renderers.append(make_sql_renderer(
+                [lo + pos_of[j] for j in range(counts[qi])],
+                sv, se, so, ov, oe, oo, pi, po, st.predicates.labels))
         t_symbolic = time.perf_counter() - t0
 
         # -- stage 3b: ONE deduped VLM pass across the whole batch ------------
         # rows of plans compiled with verify disabled are excluded from the
-        # candidate set and keep their symbolic masks, so execution matches
-        # each plan's advertised VlmVerify node even in a mixed batch
+        # candidate set and keep their symbolic masks; budgeted plans run
+        # the cascade on their own slice (seeded with the fused pass's
+        # verdict memo), so execution matches each plan's advertised
+        # VlmVerify node even in a mixed batch
         t0 = time.perf_counter()
         verif = np.zeros((t_pad,), bool)
+        budgeted: List[int] = []
         for qi, p in enumerate(plans):
-            if p.verify.enabled:
+            if not p.verify.enabled:
+                continue
+            if p.verify.budget > 0:
+                budgeted.append(qi)
+            else:
                 verif[row_offs[qi]: row_offs[qi] + counts[qi]] = True
-        if self.verifier is not None and verif.any():
+        if self.verifier is not None and (verif.any() or budgeted):
             # row identities are needed now: this is the ONE place the
             # no-verifier fast path never reaches
             masks_np = _to_host(masks)
-            out = self._verify_rows(rel, masks_np & verif[:, None])
-            if out is not None:
-                keep_rows, _, _, cols = out
-                calls = getattr(self.verifier, "calls", 0)
-                for qi, p in enumerate(plans):
-                    if not p.verify.enabled:
-                        continue
-                    lo = row_offs[qi]
-                    q_any = masks_np[lo: lo + counts[qi]].any(axis=0)
-                    ridx = np.nonzero(q_any)[0]
-                    stats[qi].vlm_calls = calls
-                    if len(ridx) == 0:
-                        continue
-                    qrows = np.stack([cols[k][ridx] for k in REL_SCHEMA],
-                                     axis=1)
-                    stats[qi].refine_candidates = len(
-                        np.unique(qrows, axis=0))
-                    stats[qi].refine_passed = len(
-                        np.unique(qrows[keep_rows[ridx]], axis=0))
-                masks = masks & (jnp.asarray(keep_rows)[None, :]
-                                 | ~jnp.asarray(verif)[:, None])
+            memo: Dict[tuple, bool] = {}
+            cols = None
+            if verif.any():
+                out = self._verify_rows(rel, masks_np & verif[:, None])
+                if out is not None:
+                    keep_rows, uniq, verdict_u, cols = out
+                    for u, vd in zip(uniq, verdict_u):
+                        memo[tuple(int(x) for x in u)] = bool(vd)
+                    calls = getattr(self.verifier, "calls", 0)
+                    for qi, p in enumerate(plans):
+                        if not p.verify.enabled or p.verify.budget > 0:
+                            continue
+                        lo = row_offs[qi]
+                        q_any = masks_np[lo: lo + counts[qi]].any(axis=0)
+                        ridx = np.nonzero(q_any)[0]
+                        stats[qi].vlm_calls = calls
+                        if len(ridx) == 0:
+                            continue
+                        qrows = np.stack([cols[k][ridx] for k in REL_SCHEMA],
+                                         axis=1)
+                        stats[qi].refine_candidates = len(
+                            np.unique(qrows, axis=0))
+                        stats[qi].refine_passed = len(
+                            np.unique(qrows[keep_rows[ridx]], axis=0))
+                        stats[qi].refine_verified = (
+                            stats[qi].refine_candidates)
+                    masks = masks & (jnp.asarray(keep_rows)[None, :]
+                                     | ~jnp.asarray(verif)[:, None])
+            if cols is None and budgeted:
+                cols = {k: _to_host(rel[k]) for k in REL_SCHEMA}
+            for qi in budgeted:
+                p, pipe = plans[qi], pipes[qi]
+                lo, hi = row_offs[qi], row_offs[qi] + counts[qi]
+                ids_q, ok_q, vals_q = pred_cands[qi]
+                keep_q = cascade_for_plan(
+                    engine=self, plan=p, pipeline=pipe,
+                    masks=masks[lo:hi], masks_np=masks_np[lo:hi],
+                    pred_scores=(vals_q, ids_q, ok_q), stats=stats[qi],
+                    memo=memo, cols=cols)
+                if keep_q is not None:
+                    sel = np.zeros((t_pad,), bool)
+                    sel[lo:hi] = True
+                    masks = masks & (jnp.asarray(keep_q)[None, :]
+                                     | ~jnp.asarray(sel)[:, None])
         t_refine = time.perf_counter() - t0
 
         # -- stage 4: conjunction + signature-grouped temporal DP -------------
@@ -583,10 +502,11 @@ class LazyVLMEngine:
         idx_mat = np.zeros((qf_pad, max_tr), np.int32)
         pad_mat = np.ones((qf_pad, max_tr), bool)
         for qi, p in enumerate(plans):
+            pos_of = pipes[qi].pos_of
             for fj, fr in enumerate(p.conjoin.frames):
                 r = frame_offs[qi] + fj
                 for c, ti in enumerate(fr):
-                    idx_mat[r, c] = row_offs[qi] + ti
+                    idx_mat[r, c] = row_offs[qi] + pos_of[ti]
                     pad_mat[r, c] = False
         fmaps = _conjoin_bitmaps(bitmaps, jnp.asarray(idx_mat),
                                  jnp.asarray(pad_mat))      # (qf_pad, V, F)
@@ -621,15 +541,17 @@ class LazyVLMEngine:
         return results
 
     # -- refinement helpers ------------------------------------------------------
-    def _verify_rows(self, rel: Table, masks_np: np.ndarray):
+    def _verify_rows(self, rel: Table, masks_np: np.ndarray
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray, dict]]:
         """Verify every relational row under any triple mask, deduped by row
         *content* — identical (vid,fid,sid,rl,oid) rows cost one VLM call no
         matter how many triples (or, in the batched path, queries) touch
-        them. Returns ``(keep_rows, uniq_count, passed_count, cols)`` where
-        ``keep_rows`` is a (capacity,) bool verdict per row index, the
-        counts are over unique row contents, and ``cols`` is the host copy
-        of the relational columns (so callers don't re-transfer them) — or
-        ``None`` if nothing matched."""
+        them. Returns ``(keep_rows, uniq, verdict_u, cols)`` where
+        ``keep_rows`` is a (capacity,) bool verdict per row index, ``uniq``
+        the unique row contents with their per-content ``verdict_u``, and
+        ``cols`` is the host copy of the relational columns (so callers
+        don't re-transfer them) — or ``None`` if nothing matched."""
         any_mask = masks_np.any(axis=0)
         rows_idx = np.nonzero(any_mask)[0]
         if len(rows_idx) == 0:
@@ -641,16 +563,4 @@ class LazyVLMEngine:
         verdicts = verdict_u[inv]
         keep_rows = np.zeros((rel.capacity,), bool)
         keep_rows[rows_idx] = verdicts
-        return keep_rows, len(uniq), int(verdict_u.sum()), cols
-
-    def _refine(self, rel: Table, masks: jax.Array, stats: QueryStats
-                ) -> jax.Array:
-        masks_np = _to_host(masks)
-        out = self._verify_rows(rel, masks_np)
-        if out is None:
-            return masks
-        keep_rows, uniq_count, passed, _ = out
-        stats.refine_candidates = uniq_count
-        stats.vlm_calls = getattr(self.verifier, "calls", 0)
-        stats.refine_passed = passed
-        return masks & jnp.asarray(keep_rows)[None, :]
+        return keep_rows, uniq, verdict_u, cols

@@ -1,0 +1,30 @@
+"""Physical execution layer: typed operators with cost estimates.
+
+``repro.core.plan`` lowers a query to a *logical* plan; this package lowers
+the logical plan to a *physical pipeline* — an ordered list of typed
+operators (:class:`EmbedOp`, :class:`TopKSearchOp`, :class:`TripleFilterOp`,
+:class:`VlmVerifyOp`, :class:`BitmapConjoinOp`, :class:`TemporalChainOp`),
+each exposing ``estimate(stats) -> CostEstimate`` and ``run(ctx)``. The
+executor shrinks to orchestration: it walks the pipeline and assembles the
+result.
+
+Two optimizer passes live here:
+
+  * **cost-based triple ordering** — independent triple filters are ordered
+    by estimated selectivity fed from the device-resident store statistics
+    (:class:`StoreStats`); the fused selection launch evaluates rows in that
+    order and every downstream consumer is index-remapped at compile time,
+    so reordering is invariant-preserving by construction (pinned by a
+    hypothesis property).
+  * **budgeted VLM cascade** — ``VlmVerifyOp`` with a ``verify_budget``
+    verifies candidate rows in descending semantic-score order and exits as
+    soon as a monotonicity certificate proves the remaining unverified rows
+    cannot change the query's matched windows (see ``ops.run_cascade``).
+"""
+from repro.core.physical.cost import CostEstimate, StoreStats  # noqa: F401
+from repro.core.physical.compile import (PhysicalPipeline,  # noqa: F401
+                                         compile_physical)
+from repro.core.physical.ops import (BitmapConjoinOp, EmbedOp,  # noqa: F401
+                                     ExecContext, TemporalChainOp,
+                                     TopKSearchOp, TripleFilterOp,
+                                     VlmVerifyOp)

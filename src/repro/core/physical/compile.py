@@ -1,0 +1,152 @@
+"""Logical plan → physical pipeline lowering + the cost-based ordering pass.
+
+``compile_physical`` turns a :class:`repro.core.plan.Plan` into a
+:class:`PhysicalPipeline`: the typed operator sequence, per-operator
+:class:`CostEstimate`\\ s (fed from :class:`StoreStats`, the device-resident
+symbolic statistics), and the **triple execution order** chosen by the
+cost-based pass — independent triple filters sorted by estimated
+selectivity, most selective first (ties keep declaration order, so the
+pass is deterministic and the identity when estimates tie).
+
+Reordering is invariant-preserving *by construction*: the fused selection
+evaluates rows independently, and every consumer that cares about triple
+identity (row counts, SQL rendering, frame-spec conjunction, EXPLAIN) is
+remapped through ``pos_of`` at compile time. A hypothesis property pins
+``reorder=True`` ≡ ``reorder=False`` end to end.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.physical.cost import CostEstimate, StoreStats
+from repro.core.physical.ops import (BitmapConjoinOp, EmbedOp, PhysicalOp,
+                                     TemporalChainOp, TopKSearchOp,
+                                     TripleFilterOp, VlmVerifyOp)
+
+
+@dataclass(frozen=True)
+class PhysicalPipeline:
+    """A compiled physical pipeline for one logical plan.
+
+    ``order[pos]`` is the original (declaration-order) triple index
+    executing at row ``pos`` of the fused selection; ``pos_of`` is its
+    inverse. ``conjoin_idx`` is the frame-spec gather matrix remapped to
+    execution positions (``plan.conjoin.pad`` still applies unchanged).
+    """
+
+    ops: Tuple[PhysicalOp, ...]
+    estimates: Tuple[CostEstimate, ...]
+    order: Tuple[int, ...]
+    pos_of: Tuple[int, ...]
+    conjoin_idx: Tuple[Tuple[int, ...], ...]
+    reordered: bool
+    cascade: bool               # VlmVerifyOp runs the budgeted cascade
+
+    def total_estimate(self) -> CostEstimate:
+        total = CostEstimate(0, 0, 0)
+        for e in self.estimates:
+            total = total + e
+        return total
+
+    def filter_ops(self) -> Tuple[TripleFilterOp, ...]:
+        return tuple(op for op in self.ops
+                     if isinstance(op, TripleFilterOp))
+
+    def render(self, actual: Optional[Dict[str, int]] = None) -> str:
+        """The EXPLAIN physical artifact: one row per operator with its
+        cost columns; with ``actual`` (EXPLAIN ANALYZE) an extra column
+        compares estimated vs. observed rows."""
+        total = self.total_estimate()
+        order_note = (" [cost-ordered: "
+                      + " ".join(f"t{i}" for i in self.order) + "]"
+                      if self.reordered else "")
+        lines = [f"PhysicalPipeline  ({len(self.ops)} ops, "
+                 f"~{total.launches} launches, "
+                 f"~{total.device_bytes:,} bytes){order_note}"]
+        for op, est in zip(self.ops, self.estimates):
+            row = (f"  {op.label:<28} est_rows={est.rows:<8,} "
+                   f"bytes~{est.device_bytes:<12,} launches={est.launches}")
+            if actual is not None:
+                got = actual.get(op.label)
+                row += ("  actual_rows=" + (f"{got:,}" if got is not None
+                                            else "-"))
+            lines.append(row)
+        return "\n".join(lines)
+
+
+def order_triple_filters(filters, stats: StoreStats,
+                         ) -> Tuple[int, ...]:
+    """The cost-based pass: execution order of independent triple filters,
+    ascending estimated rows (most selective first), declaration order on
+    ties."""
+    est = [f.estimate(stats).rows for f in filters]
+    return tuple(sorted(range(len(filters)), key=lambda i: (est[i], i)))
+
+
+def compile_physical(plan, stats: StoreStats, *,
+                     reorder: bool = True) -> PhysicalPipeline:
+    """Lower ``plan`` to a :class:`PhysicalPipeline` against ``stats``."""
+    em, pm, ts = plan.entity_match, plan.predicate_match, plan.triple_select
+    n_triples = len(ts.triples)
+
+    filters = []
+    for i, t in enumerate(ts.triples):
+        filters.append(TripleFilterOp(
+            index=i, subject=t.subject, predicate=t.predicate,
+            object=t.object,
+            predicate_text=pm.texts[ts.pred_row[i]],
+            width=em.width, rel_capacity=stats.rel_capacity,
+            carries_launch=False))
+    order = (order_triple_filters(filters, stats) if reorder and n_triples > 1
+             else tuple(range(n_triples)))
+    pos_of = tuple(order.index(i) for i in range(n_triples))
+    conjoin_idx = tuple(tuple(pos_of[i] for i in row)
+                        for row in plan.conjoin.idx)
+
+    ordered_filters = []
+    for pos, orig in enumerate(order):
+        f = filters[orig]
+        ordered_filters.append(TripleFilterOp(
+            index=f.index, subject=f.subject, predicate=f.predicate,
+            object=f.object, predicate_text=f.predicate_text,
+            width=f.width, rel_capacity=f.rel_capacity,
+            carries_launch=pos == 0))
+
+    budget = getattr(plan.verify, "budget", 0)
+    est_candidates = min(
+        sum(f.estimate(stats).rows for f in ordered_filters),
+        stats.rel_rows) if plan.verify.enabled else 0
+
+    ops = [EmbedOp(role="entity_text", texts=em.texts, dim=stats.text_dim)]
+    if em.image_search:
+        ops.append(EmbedOp(role="entity_image", texts=em.texts,
+                           dim=stats.image_dim))
+    ops.append(EmbedOp(role="relationship_text", texts=pm.texts,
+                       dim=stats.text_dim))
+    ops.append(TopKSearchOp(target="entity", n_texts=len(em.texts), k=em.k,
+                            width=em.width,
+                            predicted_bytes=em.predicted_bytes))
+    ops.append(TopKSearchOp(
+        target="predicate", n_texts=len(pm.texts), k=pm.m, width=pm.m,
+        predicted_bytes=(len(stats.labels) * stats.text_dim * 4
+                         + len(pm.texts) * pm.m * 8)))
+    ops.extend(ordered_filters)
+    ops.append(VlmVerifyOp(enabled=plan.verify.enabled, budget=budget,
+                           est_candidates=est_candidates))
+    ops.append(BitmapConjoinOp(
+        n_frames=len(plan.conjoin.frames), n_triples=n_triples,
+        bucket=ts.bucket, rel_capacity=stats.rel_capacity,
+        num_segments=plan.num_segments,
+        frames_per_segment=plan.frames_per_segment))
+    ops.append(TemporalChainOp(
+        steps=len(plan.temporal.gaps), top_k=plan.temporal.top_k,
+        num_segments=plan.num_segments,
+        frames_per_segment=plan.frames_per_segment))
+
+    return PhysicalPipeline(
+        ops=tuple(ops),
+        estimates=tuple(op.estimate(stats) for op in ops),
+        order=order, pos_of=pos_of, conjoin_idx=conjoin_idx,
+        reordered=order != tuple(range(n_triples)),
+        cascade=plan.verify.enabled and budget > 0)

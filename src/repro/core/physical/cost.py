@@ -1,0 +1,116 @@
+"""Cost model primitives for the physical execution layer.
+
+:class:`CostEstimate` is the unit every operator's ``estimate`` returns:
+estimated result rows, HBM bytes moved by its device launches, and the
+launch count. Estimates are *models*, not measurements — EXPLAIN ANALYZE
+(``Session.explain(..., analyze=True)``) prints them next to the actual
+per-operator row counts so the model's drift is visible.
+
+:class:`StoreStats` is the device-resident statistics snapshot the
+cost-based passes read: a per-predicate row histogram over the Relationship
+Store plus valid-row counts, computed in ONE fused device reduction and
+transferred through the executor's ``_to_host`` funnel (the histogram is a
+``(P,)`` vector — the full stores never round-trip to host).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CostEstimate:
+    """Estimated cost of one physical operator (or a whole pipeline)."""
+
+    rows: int           # estimated result rows / candidates produced
+    device_bytes: int   # modeled HBM traffic of the operator's launches
+    launches: int       # device program launches
+
+    def __add__(self, other: "CostEstimate") -> "CostEstimate":
+        return CostEstimate(self.rows + other.rows,
+                            self.device_bytes + other.device_bytes,
+                            self.launches + other.launches)
+
+    def describe(self) -> str:
+        return (f"rows~{self.rows:,} bytes~{self.device_bytes:,} "
+                f"launches={self.launches}")
+
+
+ZERO_COST = CostEstimate(0, 0, 0)
+
+
+@partial(jax.jit, static_argnames=("num_predicates",))
+def _store_stats_device(rl, rel_valid, ent_valid, num_predicates: int):
+    """One fused reduction: per-predicate row histogram + valid-row counts."""
+    hist = jnp.zeros((num_predicates,), jnp.int32)
+    hist = hist.at[jnp.clip(rl, 0, num_predicates - 1)].add(
+        rel_valid.astype(jnp.int32))
+    return hist, rel_valid.sum(), ent_valid.sum()
+
+
+@dataclass(frozen=True)
+class StoreStats:
+    """Symbolic-store statistics feeding the cost-based passes.
+
+    ``pred_rows[p]`` is the number of valid relationship rows whose label is
+    predicate ``p``; ``rel_rows``/``entity_rows`` are the valid-row counts.
+    Built once per engine from the device-resident stores (the reduction
+    runs on device; only the small results transfer).
+    """
+
+    labels: Tuple[str, ...]
+    pred_rows: Tuple[int, ...]
+    rel_rows: int
+    entity_rows: int
+    rel_capacity: int
+    entity_capacity: int
+    text_dim: int
+    image_dim: int
+
+    @classmethod
+    def from_stores(cls, stores) -> "StoreStats":
+        from repro.core.physical.stages import to_host
+        rel = stores.relationships.table
+        labels = tuple(stores.predicates.labels)
+        hist, rel_rows, ent_rows = _store_stats_device(
+            rel["rl"], rel.valid, stores.entities.table.valid, len(labels))
+        return cls(
+            labels=labels,
+            pred_rows=tuple(int(x) for x in to_host(hist)),
+            rel_rows=int(to_host(rel_rows)),
+            entity_rows=int(to_host(ent_rows)),
+            rel_capacity=stores.relationships.capacity,
+            entity_capacity=stores.entities.capacity,
+            text_dim=int(stores.entities.text_emb.shape[1]),
+            image_dim=int(stores.entities.image_emb.shape[1]))
+
+    def rows_for_predicate(self, text: str) -> float:
+        """Estimated relationship rows matching a relationship description.
+
+        Exact-label matches read the histogram; free-text descriptions fall
+        back to the mean rows-per-label (the description could resolve to
+        any label at run time).
+        """
+        if text in self.labels:
+            return float(self.pred_rows[self.labels.index(text)])
+        return self.rel_rows / max(1, len(self.labels))
+
+    def entity_pair_selectivity(self, width: int) -> float:
+        """P[a relationship row's (vid, sid) survives one entity semi-join]
+        under an independence model: ``width`` candidate pairs out of the
+        store's valid entities."""
+        return min(1.0, width / max(1, self.entity_rows))
+
+
+def estimate_triple_rows(stats: StoreStats, predicate_text: str,
+                         width: int) -> int:
+    """Selectivity model of one conjunctive triple selection: predicate
+    histogram × subject semi-join × object semi-join (independence
+    assumption — good enough to *order* filters, see compile.py)."""
+    sel = stats.entity_pair_selectivity(width)
+    return max(1, int(round(stats.rows_for_predicate(predicate_text)
+                            * sel * sel)))

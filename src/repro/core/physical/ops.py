@@ -1,0 +1,516 @@
+"""Typed physical operators: ``estimate(stats) -> CostEstimate`` + ``run(ctx)``.
+
+Each operator owns one pipeline stage's execution; the executor is reduced
+to walking ``PhysicalPipeline.ops`` with an :class:`ExecContext` and
+assembling the ``QueryResult``. With the cascade off, the operator sequence
+reproduces the pre-physical executor bit-identically (pinned by the
+equivalence tests); device→host transfers all route through
+``stages.to_host`` → the executor's ``_to_host`` funnel.
+
+``VlmVerifyOp`` is where the paper's laziness becomes a real operator: with
+``verify_budget > 0`` it runs :func:`run_cascade` — candidates are verified
+in descending semantic-score order, ``budget`` rows per round, and the
+cascade exits as soon as a **monotonicity certificate** proves the
+remaining unverified rows cannot change the query's matched windows:
+
+    every stage downstream of the verdict (bitmap scatter, frame-spec AND,
+    chain DP) is monotone in the row masks, so the true reach bitmap is
+    sandwiched between the *confirmed* reach (unverified rows excluded) and
+    the *optimistic* reach (unverified rows included). When the two are
+    equal, that bitmap IS the full-verification result — segments, scores,
+    and ``end_frames`` all exact — regardless of how the remaining rows
+    would have verified.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import temporal as temporal_lib
+from repro.core.physical import stages
+from repro.core.physical.cost import CostEstimate, StoreStats, ZERO_COST
+from repro.core.stores import REL_SCHEMA
+
+
+@dataclass
+class ExecContext:
+    """Mutable per-execution state threaded through the operators.
+
+    ``vals`` carries the inter-operator dataflow (embeddings, candidate
+    arrays, masks, bitmaps, ranking); ``actual_rows`` is only populated
+    when ``analyze`` is set (EXPLAIN ANALYZE) — analyze mode may issue
+    extra small reductions/transfers that the hot path skips.
+    """
+
+    engine: object
+    plan: object
+    pipeline: object
+    stats: object
+    analyze: bool = False
+    vals: Dict[str, object] = field(default_factory=dict)
+    actual_rows: Dict[str, int] = field(default_factory=dict)
+
+
+class PhysicalOp:
+    """Base class: a typed, cost-estimated pipeline stage."""
+
+    stage: str = ""     # QueryStats.stage_seconds bucket
+    label: str = ""     # unique within a pipeline (EXPLAIN key)
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        raise NotImplementedError
+
+    def run(self, ctx: ExecContext) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# stage 1: embedding + top-k search
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class EmbedOp(PhysicalOp):
+    """Embed deduped query texts (host cache in front of the embedder)."""
+
+    role: str                   # entity_text | entity_image | relationship_text
+    texts: Tuple[str, ...]
+    dim: int
+
+    stage = "entity_match"
+
+    @property
+    def label(self) -> str:
+        return f"EmbedOp[{self.role}]"
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        return CostEstimate(len(self.texts), len(self.texts) * self.dim * 4, 1)
+
+    def run(self, ctx: ExecContext) -> None:
+        embed = ctx.engine._embed
+        if self.role == "entity_image":
+            q = jnp.asarray(embed.embed_for_image(list(self.texts)))
+        else:
+            q = jnp.asarray(embed.embed_texts(list(self.texts)))
+        ctx.vals["q_" + self.role] = q
+        if ctx.analyze:
+            ctx.actual_rows[self.label] = len(self.texts)
+
+
+@dataclass(frozen=True)
+class TopKSearchOp(PhysicalOp):
+    """Fused top-k similarity search (entity store or predicate vocab)."""
+
+    target: str                 # "entity" | "predicate"
+    n_texts: int
+    k: int                      # top-k (entity) / top-m (predicate)
+    width: int                  # candidate columns after text/image union
+    predicted_bytes: int
+
+    stage = "entity_match"
+
+    @property
+    def label(self) -> str:
+        return f"TopKSearchOp[{self.target}]"
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        if self.target == "entity":
+            launches = 2 if self.width > self.k else 1   # +1 image search
+        else:
+            launches = 2                                 # einsum + top-k
+        return CostEstimate(self.n_texts * self.width, self.predicted_bytes,
+                            launches)
+
+    def run(self, ctx: ExecContext) -> None:
+        if self.target == "entity":
+            self._run_entity(ctx)
+        else:
+            self._run_predicate(ctx)
+
+    def _run_entity(self, ctx: ExecContext) -> None:
+        engine, stats = ctx.engine, ctx.stats
+        em = ctx.plan.entity_match
+        ent = engine.stores.entities
+        scores, idx = engine._search(ctx.vals["q_entity_text"], ent.text_emb,
+                                     ent.text_i8, ent.table.valid, em.k)
+        ok = scores >= em.text_threshold
+        if em.image_search:
+            # dual-store matching (ete AND eie, Section 2.2): candidates are
+            # the union; duplicate (vid,eid) pairs are harmless under the
+            # semi-join's set semantics.
+            iscores, iidx = engine._search(ctx.vals["q_entity_image"],
+                                           ent.image_emb, ent.image_i8,
+                                           ent.table.valid, em.k)
+            iok = iscores >= em.image_threshold
+            idx = jnp.concatenate([idx, iidx], axis=1)
+            ok = jnp.concatenate([ok, iok], axis=1)
+        vids = ent.table["vid"][jnp.clip(idx, 0, ent.capacity - 1)]
+        eids = ent.table["eid"][jnp.clip(idx, 0, ent.capacity - 1)]
+        ok_np = stages.to_host(ok)
+        for name, row in zip(em.names, em.rows):
+            stats.entity_candidates[name] = int(ok_np[row].sum())
+        ctx.vals["ent_cands"] = (vids, eids, ok)
+        if ctx.analyze:
+            ctx.actual_rows[self.label] = int(ok_np.sum())
+
+    def _run_predicate(self, ctx: ExecContext) -> None:
+        engine = ctx.engine
+        pm = ctx.plan.predicate_match
+        sims = stages._predicate_match(
+            ctx.vals["q_relationship_text"],
+            jnp.asarray(engine.stores.predicates.embeddings))     # (U, P)
+        vals, ids = jax.lax.top_k(sims, pm.m)
+        ok = vals >= pm.threshold
+        # always keep the argmax label even if below threshold
+        ok = ok.at[:, 0].set(True)
+        ctx.vals["pred_cands"] = (ids, ok)
+        if ctx.pipeline.cascade and engine.verifier is not None:
+            # the cascade scores candidate rows by predicate similarity —
+            # small (U, m) host copies, made only when a cascade will run
+            ctx.vals["pred_scores_host"] = (stages.to_host(vals),
+                                            stages.to_host(ids),
+                                            stages.to_host(ok))
+        if ctx.analyze:
+            ctx.actual_rows[self.label] = int(stages.to_host(ok).sum())
+
+
+# ---------------------------------------------------------------------------
+# stage 2+3a: fused conjunctive triple selection
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TripleFilterOp(PhysicalOp):
+    """One triple's conjunctive selection over the Relationship Store.
+
+    All of a pipeline's filters execute as ONE fused vmapped launch (rows
+    are independent, so the cost-based row order is value-preserving); the
+    launch is attributed to the filter that ``carries_launch``. ``index``
+    is the triple's position in the query's declaration order — EXPLAIN
+    shows filters in execution (cost) order with their ``t<index>`` names.
+    """
+
+    index: int
+    subject: str
+    predicate: str
+    object: str
+    predicate_text: str
+    width: int                  # entity candidate columns
+    rel_capacity: int
+    carries_launch: bool
+
+    stage = "symbolic"
+
+    @property
+    def label(self) -> str:
+        return f"TripleFilterOp[t{self.index}]"
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        from repro.core.physical.cost import estimate_triple_rows
+        rows = estimate_triple_rows(stats, self.predicate_text, self.width)
+        # per-lane traffic of the fused launch: relational columns + valid
+        # mask read, one (cap,) bool mask written
+        bytes_ = self.rel_capacity * (5 * 4 + 1) + self.rel_capacity
+        return CostEstimate(rows, bytes_, 1 if self.carries_launch else 0)
+
+    def run(self, ctx: ExecContext) -> None:
+        if "masks" not in ctx.vals:
+            _run_fused_selection(ctx)
+        if ctx.analyze:
+            pos = ctx.pipeline.pos_of[self.index]
+            ctx.actual_rows[self.label] = int(ctx.vals["row_counts"][pos])
+
+
+def _run_fused_selection(ctx: ExecContext) -> None:
+    """Execute ALL of the pipeline's triple filters in one fused launch,
+    rows in cost order; host bookkeeping (row counts, SQL renderer) is
+    remapped back to declaration order via ``pipeline.pos_of``."""
+    engine, plan, pipe = ctx.engine, ctx.plan, ctx.pipeline
+    rel = engine.stores.relationships.table
+    ts = plan.triple_select
+    n_triples = len(ts.triples)
+    order = pipe.order
+    srow = np.asarray([ts.subj_row[o] for o in order], np.int32)
+    orow = np.asarray([ts.obj_row[o] for o in order], np.int32)
+    prow = np.asarray([ts.pred_row[o] for o in order], np.int32)
+    pad = ts.bucket - n_triples      # static bucket: programs re-used
+                                     # across queries of different sizes
+
+    def gather_pad(arr, rows):
+        g = arr[jnp.asarray(rows)]
+        return jnp.pad(g, ((0, pad), (0, 0))) if pad else g
+
+    vids, eids, ent_ok = ctx.vals["ent_cands"]
+    pred_ids, pred_ok = ctx.vals["pred_cands"]
+    sv, se, so = (gather_pad(a, srow) for a in (vids, eids, ent_ok))
+    ov, oe, oo = (gather_pad(a, orow) for a in (vids, eids, ent_ok))
+    pi, po = gather_pad(pred_ids, prow), gather_pad(pred_ok, prow)
+    masks = stages._triple_selections(
+        rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
+        rel.valid, sv, se, so, ov, oe, oo, pi, po)    # (bucket, cap)
+    # per-triple row counts: fused device reduction, ONE (bucket,)
+    # transfer — the (bucket, cap) mask itself never leaves the device
+    # unless the verifier below needs row identities
+    row_counts = stages.to_host(masks.sum(axis=1))
+    ctx.stats.sql_rows_per_triple = [
+        int(row_counts[pipe.pos_of[i]]) for i in range(n_triples)]
+    ctx.vals["sql_renderer"] = stages.make_sql_renderer(
+        [pipe.pos_of[i] for i in range(n_triples)],
+        stages.to_host(sv), stages.to_host(se), stages.to_host(so),
+        stages.to_host(ov), stages.to_host(oe), stages.to_host(oo),
+        stages.to_host(pi), stages.to_host(po),
+        engine.stores.predicates.labels)
+    ctx.vals["masks"] = masks
+    ctx.vals["row_counts"] = row_counts
+
+
+# ---------------------------------------------------------------------------
+# stage 3b: lazy VLM verification (full pass or budgeted cascade)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class VlmVerifyOp(PhysicalOp):
+    """Verify candidate rows with the VLM — all at once (``budget == 0``,
+    bit-identical to the pre-physical executor) or as a budgeted cascade
+    (``budget`` rows per round in descending semantic-score order, early
+    exit on the monotonicity certificate; see module docstring)."""
+
+    enabled: bool
+    budget: int
+    est_candidates: int
+
+    stage = "refine"
+
+    @property
+    def label(self) -> str:
+        mode = ("off" if not self.enabled
+                else f"cascade@{self.budget}" if self.budget > 0 else "full")
+        return f"VlmVerifyOp[{mode}]"
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        if not self.enabled:
+            return ZERO_COST
+        return CostEstimate(self.est_candidates, self.est_candidates * 5 * 4,
+                            0)
+
+    def run(self, ctx: ExecContext) -> None:
+        engine, stats = ctx.engine, ctx.stats
+        if not (self.enabled and engine.verifier is not None):
+            return
+        rel = engine.stores.relationships.table
+        masks = ctx.vals["masks"]
+        # row identities are needed now: this is the ONE place the
+        # no-verifier fast path never reaches
+        masks_np = stages.to_host(masks)
+        if self.budget <= 0:
+            out = engine._verify_rows(rel, masks_np)
+            if out is None:
+                return
+            keep_rows, uniq, verdict_u, _ = out
+            stats.refine_candidates = len(uniq)
+            stats.vlm_calls = getattr(engine.verifier, "calls", 0)
+            stats.refine_passed = int(verdict_u.sum())
+            stats.refine_verified = len(uniq)
+            ctx.vals["masks"] = stages._apply_keep(masks,
+                                                   jnp.asarray(keep_rows))
+        else:
+            keep = cascade_for_plan(
+                engine=engine, plan=ctx.plan, pipeline=ctx.pipeline,
+                masks=masks, masks_np=masks_np,
+                pred_scores=ctx.vals.get("pred_scores_host"), stats=stats)
+            if keep is not None:
+                ctx.vals["masks"] = stages._apply_keep(masks,
+                                                       jnp.asarray(keep))
+        if ctx.analyze:
+            ctx.actual_rows[self.label] = stats.refine_candidates
+
+
+def cascade_for_plan(*, engine, plan, pipeline, masks, masks_np,
+                     pred_scores, stats, memo=None, cols=None):
+    """Run one plan's budgeted cascade and record its stats — the single
+    shared entry for the single-query operator and the batched path (where
+    ``masks``/``masks_np`` are the plan's row slice), so the two can't
+    drift. Returns the (capacity,) keep vector, or ``None`` when the plan
+    had no candidates."""
+    keep, info = run_cascade(
+        verifier=engine.verifier,
+        rel=engine.stores.relationships.table, masks=masks,
+        masks_np=masks_np,
+        pred_row_of_pos=[plan.triple_select.pred_row[o]
+                         for o in pipeline.order],
+        pred_scores=pred_scores,
+        num_labels=len(engine.stores.predicates.labels),
+        conjoin_idx=pipeline.conjoin_idx, conjoin_pad=plan.conjoin.pad,
+        gaps=plan.temporal.gaps, num_segments=plan.num_segments,
+        frames_per_segment=plan.frames_per_segment,
+        budget=plan.verify.budget, memo=memo, cols=cols)
+    stats.vlm_calls = getattr(engine.verifier, "calls", 0)
+    if keep is not None:
+        stats.refine_candidates = info["candidates"]
+        stats.refine_verified = info["verified"]
+        stats.refine_passed = info["passed"]
+        stats.verify_rounds = info["rounds"]
+    return keep
+
+
+def run_cascade(*, verifier, rel, masks, masks_np, pred_row_of_pos,
+                pred_scores, num_labels: int, conjoin_idx, conjoin_pad,
+                gaps, num_segments: int, frames_per_segment: int,
+                budget: int, memo: Optional[Dict[tuple, bool]] = None,
+                cols: Optional[dict] = None):
+    """The budgeted verification cascade (shared by the single-query
+    operator and the batched path, where ``masks`` is one query's row
+    slice).
+
+    Returns ``(keep_rows, info)`` — a (capacity,) bool verdict vector with
+    unverified rows excluded, exact by the monotonicity certificate — or
+    ``(None, info)`` when there are no candidates. ``memo`` maps row
+    content to verdicts already known (e.g. from a batch's fused pass);
+    memo hits cost zero VLM calls and deterministic verifiers make them
+    bit-identical to re-verification.
+    """
+    info = {"candidates": 0, "verified": 0, "passed": 0, "rounds": 0}
+    any_mask = masks_np.any(axis=0)
+    rows_idx = np.nonzero(any_mask)[0]
+    if len(rows_idx) == 0:
+        return None, info
+    if cols is None:
+        cols = {k: stages.to_host(rel[k]) for k in REL_SCHEMA}
+    rows = np.stack([cols[k][rows_idx] for k in REL_SCHEMA], axis=1)
+    uniq, inv = np.unique(rows, axis=0, return_inverse=True)
+    n_uniq = len(uniq)
+    info["candidates"] = n_uniq
+
+    # -- semantic score per unique row: best predicate similarity over the
+    # -- triples that selected it (descending-score verification order)
+    n_pos = len(pred_row_of_pos)
+    if pred_scores is not None:
+        vals, ids, ok = pred_scores
+        label_score = np.full((n_pos, num_labels), -np.inf, np.float32)
+        for p, prow in enumerate(pred_row_of_pos):
+            sel = ok[prow]
+            label_score[p, ids[prow][sel]] = vals[prow][sel]
+        scored = np.where(masks_np[:n_pos, rows_idx],
+                          label_score[:, cols["rl"][rows_idx]],
+                          -np.inf).max(axis=0)
+    else:
+        scored = np.zeros((len(rows_idx),), np.float32)
+    uniq_score = np.full((n_uniq,), -np.inf, np.float32)
+    np.maximum.at(uniq_score, inv, scored)
+    order = np.lexsort((np.arange(n_uniq), -uniq_score))
+
+    verdict = np.zeros((n_uniq,), bool)
+    known = np.zeros((n_uniq,), bool)
+    keys = [tuple(int(x) for x in u) for u in uniq]
+    if memo:
+        for u, key in enumerate(keys):
+            if key in memo:
+                verdict[u] = memo[key]
+                known[u] = True
+
+    idx_dev = jnp.asarray(np.asarray(conjoin_idx, np.int32))
+    pad_dev = jnp.asarray(np.asarray(conjoin_pad))
+    capacity = rel.capacity
+
+    while True:
+        keep_conf = np.zeros((capacity,), bool)
+        keep_conf[rows_idx] = (verdict & known)[inv]
+        keep_opt = np.zeros((capacity,), bool)
+        keep_opt[rows_idx] = (verdict | ~known)[inv]
+        # certificate: if the confirmed and optimistic reach bitmaps agree,
+        # the remaining unverified rows cannot change any output (the whole
+        # tail is monotone in the masks) — exit, result exact
+        if bool(stages.to_host(stages._cascade_certificate(
+                rel["vid"], rel["fid"], masks,
+                jnp.asarray(keep_conf), jnp.asarray(keep_opt),
+                idx_dev, pad_dev, tuple(gaps), num_segments,
+                frames_per_segment))):
+            break
+        pending = [int(u) for u in order if not known[u]]
+        if not pending:        # unreachable: all-known makes conf == opt
+            break
+        chunk = pending[:budget]
+        chunk_verdict = verifier.verify(uniq[chunk])
+        if len(chunk_verdict) != len(chunk):
+            # fail as loudly as the full-verification path would: a short
+            # verdict vector must not leave rows unknown (the loop would
+            # re-verify the same chunk forever)
+            raise ValueError(
+                f"verifier returned {len(chunk_verdict)} verdicts for "
+                f"{len(chunk)} rows")
+        for u, vd in zip(chunk, chunk_verdict):
+            verdict[u] = bool(vd)
+            known[u] = True
+            if memo is not None:
+                memo[keys[u]] = bool(vd)
+        info["verified"] += len(chunk)
+        info["rounds"] += 1
+    info["passed"] = int((verdict & known).sum())
+    return keep_conf, info
+
+
+# ---------------------------------------------------------------------------
+# stage 4: conjunction + temporal chain
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BitmapConjoinOp(PhysicalOp):
+    """Row masks → presence bitmaps → per-frame conjunction (2 launches)."""
+
+    n_frames: int
+    n_triples: int
+    bucket: int
+    rel_capacity: int
+    num_segments: int
+    frames_per_segment: int
+
+    stage = "temporal"
+    label = "BitmapConjoinOp"
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        grid = self.num_segments * self.frames_per_segment
+        bytes_ = (self.bucket * self.rel_capacity          # masks read
+                  + self.n_triples * grid                  # bitmaps
+                  + self.n_frames * grid)                  # frame maps
+        return CostEstimate(self.n_frames * grid, bytes_, 2)
+
+    def run(self, ctx: ExecContext) -> None:
+        rel = ctx.engine.stores.relationships.table
+        pipe = ctx.pipeline
+        bitmaps = stages._masks_to_bitmaps(
+            rel["vid"], rel["fid"], ctx.vals["masks"],
+            self.num_segments, self.frames_per_segment)
+        fmaps = stages._conjoin_bitmaps(
+            bitmaps, jnp.asarray(np.asarray(pipe.conjoin_idx, np.int32)),
+            jnp.asarray(np.asarray(ctx.plan.conjoin.pad)))
+        ctx.vals["fmaps"] = fmaps            # (n_frames, V, F)
+        if ctx.analyze:
+            ctx.actual_rows[self.label] = int(stages.to_host(fmaps.sum()))
+
+
+@dataclass(frozen=True)
+class TemporalChainOp(PhysicalOp):
+    """Chain DP over query frames + segment ranking."""
+
+    steps: int
+    top_k: int
+    num_segments: int
+    frames_per_segment: int
+
+    stage = "temporal"
+    label = "TemporalChainOp"
+
+    def estimate(self, stats: StoreStats) -> CostEstimate:
+        grid = self.num_segments * self.frames_per_segment
+        return CostEstimate(self.top_k, (self.steps + 1) * grid,
+                            self.steps + 1)
+
+    def run(self, ctx: ExecContext) -> None:
+        plan = ctx.plan
+        reach = temporal_lib.chain_reach(ctx.vals["fmaps"],
+                                         plan.temporal.gaps)
+        scores, seg_ids = temporal_lib.rank_segments(reach,
+                                                     plan.temporal.top_k)
+        scores_np = stages.to_host(scores)
+        segs_np = stages.to_host(seg_ids)
+        ctx.vals["ranked"] = (scores_np, segs_np, reach)
+        if ctx.analyze:
+            ctx.actual_rows[self.label] = int((scores_np > 0).sum())

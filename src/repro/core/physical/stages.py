@@ -1,0 +1,165 @@
+"""Fused stage kernels shared by the physical operators and the batched
+multi-query path.
+
+These are the jitted device programs the pipeline stages launch (they lived
+inside ``core/executor.py`` before the physical layer existed; the executor
+re-exports them for compatibility). Host Python only orchestrates — each
+stage's math is one fused program regardless of the number of triples or
+queries.
+
+``to_host`` is the package's device→host funnel: it delegates to
+``repro.core.executor._to_host`` *at call time* (module-attribute lookup),
+so the transfer-spy tests that monkeypatch the executor's funnel observe
+every transfer the physical operators make too.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.semantic.search import topk_similarity
+from repro.symbolic import ops as sops
+from repro.symbolic.table import Table
+
+
+def to_host(x) -> np.ndarray:
+    """Device→host transfer, routed through the executor's single funnel."""
+    from repro.core import executor as _executor
+    return _executor._to_host(x)
+
+
+# ---------------------------------------------------------------------------
+# jitted stage kernels
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("k", "mode", "use_kernels"))
+def _entity_match(queries, db, db_i8, db_valid, k: int, mode: str,
+                  use_kernels: bool):
+    """One fused search launch: mode/kernel dispatch happens at trace time
+    (the Pallas kernels run in interpret mode off-TPU), so the engine's
+    ``use_kernels``/``search_mode`` flags reach the single-device path too,
+    not just the sharded one."""
+    return topk_similarity(queries, db, db_valid, k, use_kernels=use_kernels,
+                           mode=mode, i8=db_i8)
+
+
+@jax.jit
+def _predicate_match(queries, pred_emb):
+    """Similarity of each relationship text to each predicate label."""
+    return jnp.einsum("rd,pd->rp", queries, pred_emb)
+
+
+@partial(jax.jit, static_argnames=())
+def _triple_selections(rel_cols_vid, rel_cols_fid, rel_cols_sid, rel_cols_rl,
+                       rel_cols_oid, rel_valid,
+                       subj_vid, subj_eid, subj_ok,
+                       obj_vid, obj_eid, obj_ok,
+                       pred_ids, pred_ok):
+    """Evaluate all triples' conjunctive selections in one fused program.
+
+    subj_*/obj_*: (T, k) candidate (vid,eid) pairs per triple;
+    pred_*: (T, m) candidate predicate labels per triple.
+    Returns (T, cap) row masks. Rows are independent, so any row order
+    (e.g. the cost-based one) produces per-row bit-identical masks.
+    """
+    def one(svid, seid, sok, ovid, oeid, ook, pid, pok):
+        m = rel_valid
+        m &= sops.isin_pairs(rel_cols_vid, rel_cols_sid, svid, seid, sok)
+        m &= sops.isin_pairs(rel_cols_vid, rel_cols_oid, ovid, oeid, ook)
+        m &= sops.isin(rel_cols_rl, pid, pok)
+        return m
+
+    return jax.vmap(one)(subj_vid, subj_eid, subj_ok,
+                         obj_vid, obj_eid, obj_ok, pred_ids, pred_ok)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "frames_per_segment"))
+def _masks_to_bitmaps(rel_vid, rel_fid, masks, num_segments: int,
+                      frames_per_segment: int):
+    """(T, cap) row masks -> (T, V, F) presence bitmaps."""
+    def one(mask):
+        t = Table({"vid": rel_vid, "fid": rel_fid}, mask)
+        return sops.scatter_bitmap(t, "vid", "fid", num_segments,
+                                   frames_per_segment)
+    return jax.vmap(one)(masks)
+
+
+@jax.jit
+def _conjoin_bitmaps(bitmaps, idx, pad):
+    """Frame-spec conjunction for a whole batch in one fused program.
+
+    bitmaps: (T, V, F); idx/pad: (n_frames, max_triples) — row r ANDs the
+    bitmaps of its non-pad triple indices (pad slots act as identity/True).
+    Returns (n_frames, V, F).
+    """
+    sel = bitmaps[idx] | pad[:, :, None, None]
+    return sel.all(axis=1)
+
+
+@jax.jit
+def _apply_keep(masks, keep):
+    """masks &= keep[None, :] — the verify verdict applied on device."""
+    return masks & keep[None, :]
+
+
+@partial(jax.jit,
+         static_argnames=("gaps", "num_segments", "frames_per_segment"))
+def _cascade_certificate(rel_vid, rel_fid, masks, keep_conf, keep_opt,
+                         idx, pad, gaps, num_segments: int,
+                         frames_per_segment: int):
+    """The cascade's early-exit certificate as ONE fused program.
+
+    Evaluates the whole post-verify tail (bitmap scatter → frame-spec AND →
+    chain DP) twice — once with unverified rows excluded (*confirmed*),
+    once included (*optimistic*) — and compares the reach bitmaps. The tail
+    is monotone in the masks, so equality proves the remaining unverified
+    rows cannot change any output. One launch + one scalar transfer per
+    cascade round, instead of an eager op-chain.
+    """
+    from repro.core import temporal as temporal_lib
+
+    def reach(keep):
+        m = masks & keep[None, :]
+        bm = _masks_to_bitmaps(rel_vid, rel_fid, m, num_segments,
+                               frames_per_segment)
+        fm = _conjoin_bitmaps(bm, idx, pad)
+        return temporal_lib.chain_reach(fm, gaps)
+
+    return jnp.array_equal(reach(keep_conf), reach(keep_opt))
+
+
+# ---------------------------------------------------------------------------
+# SQL rendering (the paper's "SQL Query Generation" artifact)
+# ---------------------------------------------------------------------------
+def render_sql(triple_idx: int, subj_pairs, obj_pairs, pred_ids,
+               predicates) -> str:
+    def pairs_sql(pairs):
+        return ", ".join(f"({int(v)},{int(e)})" for v, e in pairs[:8]) + (
+            ", ..." if len(pairs) > 8 else "")
+    preds = ", ".join(f"'{predicates[int(p)]}'" for p in pred_ids)
+    return (
+        f"SELECT vid, fid FROM relationships\n"
+        f"  WHERE (vid, sid) IN ({pairs_sql(subj_pairs)})\n"
+        f"    AND (vid, oid) IN ({pairs_sql(obj_pairs)})\n"
+        f"    AND rl IN ({preds})  -- triple {triple_idx}"
+    )
+
+
+def make_sql_renderer(rows: Sequence[int],
+                      sv, se, so, ov, oe, oo, pi, po, predicates
+                      ) -> Callable[[], List[str]]:
+    """Closure rendering a query's SQL from host candidate arrays on demand
+    (``QueryResult.sql``). ``rows[i]`` is the absolute row of triple ``i``
+    (declaration order) inside the candidate arrays — the cost-based pass
+    may have permuted execution order, but SQL always renders in the
+    query's own triple order."""
+    def render() -> List[str]:
+        return [render_sql(i,
+                           list(zip(sv[r][so[r]], se[r][so[r]])),
+                           list(zip(ov[r][oo[r]], oe[r][oo[r]])),
+                           pi[r][po[r]], predicates)
+                for i, r in enumerate(rows)]
+    return render

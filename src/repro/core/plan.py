@@ -157,13 +157,22 @@ class TripleSelect:
 @dataclass(frozen=True)
 class VlmVerify:
     """Lazy VLM refinement of rows surviving the symbolic selection,
-    deduped by row content."""
+    deduped by row content.
+
+    ``budget == 0`` verifies every candidate in one pass; ``budget > 0``
+    lowers to the physical layer's budgeted cascade — ``budget`` rows per
+    round in descending semantic-score order with certificate-backed early
+    exit (results stay exact, see ``repro.core.physical.ops``)."""
 
     enabled: bool
+    budget: int = 0
 
     def describe(self) -> List[str]:
-        return ["VlmVerify " + ("(content-deduped rows)" if self.enabled
-                                else "(disabled: symbolic stage trusted)")]
+        if not self.enabled:
+            return ["VlmVerify (disabled: symbolic stage trusted)"]
+        mode = (f"(cascade, budget={self.budget}/round)" if self.budget > 0
+                else "(content-deduped rows)")
+        return [f"VlmVerify {mode}"]
 
 
 @dataclass(frozen=True)
@@ -349,7 +358,7 @@ def compile_plan(query: VMRQuery, stores, *, verify: bool,
         gaps=tuple(temporal_lib.normalize_constraints(query)),
         top_k=min(query.top_k, stores.num_segments))
     return Plan(entity_match=em, predicate_match=pm, triple_select=ts,
-                verify=VlmVerify(verify),
+                verify=VlmVerify(verify, budget=query.verify_budget),
                 conjoin=ConjoinFrames(frames, conjoin_idx, conjoin_pad),
                 temporal=tc, num_segments=stores.num_segments,
                 frames_per_segment=stores.frames_per_segment)

@@ -9,7 +9,7 @@ A query is four parts:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 
@@ -68,6 +68,11 @@ class VMRQuery:
     # candidates are the union of text and image matches (Section 2.2/2.3)
     image_search: bool = False
     predicate_top_m: int = 2        # predicate-label candidates per relationship
+    # VLM verification cascade: 0 verifies every candidate in one pass;
+    # n > 0 verifies n rows per round in descending semantic-score order and
+    # exits early once the remaining rows provably can't change the result
+    # (see repro.core.physical.ops.run_cascade — results stay exact)
+    verify_budget: int = 0
 
     @property
     def entity_texts(self) -> List[str]:
@@ -142,6 +147,9 @@ class VMRQuery:
             if c.max_gap is not None and c.max_gap < c.min_gap:
                 fail(f"constraint window empty: max_gap {c.max_gap} < "
                      f"min_gap {c.min_gap}")
+        if self.verify_budget < 0:
+            fail(f"verify_budget must be >= 0 (0 disables the cascade), "
+                 f"got {self.verify_budget}")
 
 
 def example_2_1(min_gap_frames: int = 5) -> VMRQuery:

@@ -16,8 +16,6 @@ compare it against the frames an end-to-end VLM would ingest.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

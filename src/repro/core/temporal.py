@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.query import TemporalConstraint, VMRQuery
+from repro.core.query import VMRQuery
 
 
 def _shift_right(x: jax.Array, n: int) -> jax.Array:

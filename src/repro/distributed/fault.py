@@ -12,7 +12,6 @@ rescale path (e.g. 2-pod job resuming on 1 pod after a pod loss).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Optional, Tuple
 
 import jax

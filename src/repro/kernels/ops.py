@@ -8,10 +8,8 @@ is what the test suite sweeps against the ``ref.py`` oracles. Set
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import decode_attention as _dec

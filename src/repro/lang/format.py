@@ -14,7 +14,8 @@ from repro.core.query import TemporalConstraint, VMRQuery
 
 _DEFAULTS = {f.name: f.default for f in dataclasses.fields(VMRQuery)
              if f.name in ("top_k", "text_threshold", "image_threshold",
-                           "image_search", "predicate_top_m")}
+                           "image_search", "predicate_top_m",
+                           "verify_budget")}
 
 
 def _format_constraint(c: TemporalConstraint) -> str:

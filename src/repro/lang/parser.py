@@ -72,6 +72,7 @@ _OPTIONS = {
     "image_threshold": float,
     "image_search": None,          # bool, parsed specially
     "predicate_top_m": int,
+    "verify_budget": int,          # >0 enables the lazy VLM cascade
 }
 
 

@@ -8,7 +8,7 @@ cache for decode). Modality frontends are stubs: VLM archs receive
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,10 +14,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ParallelConfig, ShapeConfig
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_local_mesh, make_production_mesh

@@ -14,7 +14,6 @@ attention is collective-free under a sharded ``model`` axis (vLLM-style); see
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -5,7 +5,7 @@ Convention: parameters live in ``param_dtype`` (bf16), matmuls run in the model
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -229,7 +229,6 @@ def mamba_decode_layer(p: Params, x: jax.Array, ssm_state: jax.Array,
     z, xi, Bm, Cm, dtv = _split_in(h, cfg)
     conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)           # (B, conv_dim)
     # causal conv over [conv_state ; conv_in]
-    W = s.conv_width
     window = jnp.concatenate(
         [conv_state.astype(conv_in.dtype), conv_in[:, None, :]], axis=1)
     conv_out = (window.astype(jnp.float32)

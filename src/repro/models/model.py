@@ -175,7 +175,6 @@ def _cross_kv(params: Params, enc_out: jax.Array, cfg: ModelConfig, dtype):
     from repro.models.attention import _project_qkv
     ks, vs = [], []
     spec = tf.unit_spec(cfg)
-    nu = tf.num_units(cfg)
     for j in range(len(spec)):
         lp = params["units"][j]
         def one(lp_i):

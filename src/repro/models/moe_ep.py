@@ -23,7 +23,6 @@ same semantics), so outputs match ``moe_layer`` up to capacity-drop ordering.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import os

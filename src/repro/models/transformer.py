@@ -18,13 +18,12 @@ from __future__ import annotations
 
 import math
 import os
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN, MAMBA, ModelConfig
+from repro.configs.base import ATTN, ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import mamba as mamba_lib
 from repro.models import mlp as mlp_lib

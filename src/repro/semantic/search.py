@@ -17,8 +17,7 @@ graph-traversal ANN structures on TPU for per-shard DB sizes in the millions.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

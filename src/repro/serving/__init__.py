@@ -1,4 +1,6 @@
 from repro.serving.engine import (AdmitResult, Request,  # noqa: F401
                                   ServingEngine)
 from repro.serving.frontend import QueryFrontend, QueryTicket  # noqa: F401
-from repro.serving.scheduler import Scheduler, StragglerMitigator  # noqa: F401
+from repro.serving.scheduler import (BatchBudget,  # noqa: F401
+                                     CostBasedAdmission, Scheduler,
+                                     StragglerMitigator)

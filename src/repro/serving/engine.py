@@ -12,10 +12,9 @@ device arrays so the host loop only moves token ids.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

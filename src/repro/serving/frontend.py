@@ -42,13 +42,17 @@ class QueryTicket:
 
 class QueryFrontend:
     def __init__(self, session: Union[Session, LazyVLMEngine], *,
-                 max_admit: int = 8, max_finished: int = 4096):
+                 max_admit: int = 8, max_finished: int = 4096,
+                 admission=None):
         # accept a bare engine for backward compatibility — the facade is
         # the query surface either way
         self.session = (session if isinstance(session, Session)
                         else Session(session))
         self.engine = self.session.engine
         self.max_admit = max_admit
+        # optional cost-based admission policy (``CostBasedAdmission``):
+        # batches fill to a pipeline-cost budget instead of a fixed count
+        self.admission = admission
         self.waiting: Deque[QueryTicket] = deque()
         # bounded history: callers hold their own tickets; this is only a
         # recent-completions window, so a long-running frontend can't grow
@@ -67,13 +71,20 @@ class QueryFrontend:
         self.waiting.append(ticket)
         return ticket
 
+    def _next_batch(self) -> List[QueryTicket]:
+        """Pop the next admission batch: by pipeline-cost budget when an
+        admission policy is configured, by count (``max_admit``) otherwise.
+        Arrival order is preserved either way."""
+        if self.admission is not None:
+            return self.admission.take(self.waiting)
+        return [self.waiting.popleft()
+                for _ in range(min(self.max_admit, len(self.waiting)))]
+
     def step(self) -> int:
-        """Admit one batch (up to ``max_admit`` waiting queries, arrival
-        order preserved) and execute it. Returns the batch size."""
+        """Admit one batch and execute it. Returns the batch size."""
         if not self.waiting:
             return 0
-        batch = [self.waiting.popleft()
-                 for _ in range(min(self.max_admit, len(self.waiting)))]
+        batch = self._next_batch()
         self._execute(batch)
         return len(batch)
 
@@ -104,8 +115,7 @@ class QueryFrontend:
         finished during THIS call (not the whole history)."""
         out: List[QueryTicket] = []
         while self.waiting:
-            batch = [self.waiting.popleft()
-                     for _ in range(min(self.max_admit, len(self.waiting)))]
+            batch = self._next_batch()
             self._execute(batch)
             out += batch
         return out

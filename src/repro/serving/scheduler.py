@@ -1,8 +1,17 @@
-"""Continuous-batching scheduler + straggler mitigation.
+"""Continuous-batching scheduler + straggler mitigation + cost-based
+query admission.
 
 ``Scheduler`` feeds a ``ServingEngine``: admission control (batch up to
 ``max_admit`` waiting requests whenever slots free up, bounded queueing delay),
 completion tracking, and fairness (FIFO with arrival order preserved).
+
+``CostBasedAdmission`` is the VMR-query analogue: instead of admitting a
+fixed *count* of waiting queries per batch, it compiles each query through
+the engine's plan cache, prices its physical pipeline
+(``LazyVLMEngine.estimate_cost`` → :class:`CostEstimate`), and fills the
+batch until a device-bytes / rows / count budget is reached — a batch of
+cheap single-triple queries packs deep, one giant multi-frame query takes a
+slot of its own. ``QueryFrontend`` accepts it as its admission policy.
 
 ``StragglerMitigator`` implements the policy layer used at pod scale: per-shard
 step latencies are tracked as an EMA; a shard slower than ``threshold`` × the
@@ -13,10 +22,9 @@ drives — the decision logic is host-side either way.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
@@ -61,6 +69,64 @@ class Scheduler:
                 inflight.remove(r)
                 self.finished.append(r)
         return self.finished
+
+
+@dataclass(frozen=True)
+class BatchBudget:
+    """Per-batch admission budget, in physical-pipeline cost units.
+
+    Any ``None`` dimension is unconstrained; ``max_queries`` keeps a hard
+    count ceiling on top of the cost dimensions (a batch never exceeds it
+    even when cost headroom remains)."""
+
+    max_device_bytes: Optional[int] = None
+    max_rows: Optional[int] = None
+    max_queries: Optional[int] = None
+
+
+class CostBasedAdmission:
+    """Admit waiting queries by estimated pipeline cost, not query count.
+
+    ``take(waiting)`` pops tickets FIFO while the running cost total stays
+    inside the budget; the head ticket is always admitted (no livelock on a
+    query bigger than the whole budget). Cost estimates come from the
+    engine's compiled physical pipeline, so repeat queries price through
+    the plan cache without recompiling.
+    """
+
+    def __init__(self, engine, budget: BatchBudget):
+        self.engine = engine
+        self.budget = budget
+        self.batches_admitted = 0
+
+    def cost_of(self, query):
+        """Total :class:`CostEstimate` of one query's physical pipeline."""
+        return self.engine.estimate_cost(query)
+
+    def _exceeds(self, bytes_total: int, rows_total: int, count: int) -> bool:
+        b = self.budget
+        return ((b.max_device_bytes is not None
+                 and bytes_total > b.max_device_bytes)
+                or (b.max_rows is not None and rows_total > b.max_rows)
+                or (b.max_queries is not None and count > b.max_queries))
+
+    def take(self, waiting: Deque) -> List:
+        """Pop the next batch of tickets (each carrying ``.query``) from
+        ``waiting``, FIFO, until the cost budget is filled."""
+        batch: List = []
+        bytes_total = rows_total = 0
+        while waiting:
+            est = self.cost_of(waiting[0].query)
+            if batch and self._exceeds(bytes_total + est.device_bytes,
+                                       rows_total + est.rows,
+                                       len(batch) + 1):
+                break
+            batch.append(waiting.popleft())
+            bytes_total += est.device_bytes
+            rows_total += est.rows
+        if batch:
+            self.batches_admitted += 1
+        return batch
 
 
 @dataclass

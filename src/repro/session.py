@@ -26,7 +26,7 @@ reports whether it hit).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Union
+from typing import Dict, List, Optional, Union
 
 from repro.core.executor import LazyVLMEngine, QueryResult
 from repro.core.plan import Plan, PlanCache
@@ -43,14 +43,19 @@ class Explanation:
     ``sql`` holds the plan-time SQL template per triple (candidate sets are
     symbolic until execution binds them); ``launches`` is the static
     per-stage device-launch prediction; ``cached`` says whether this
-    explain's compile was served from the plan cache.
-    """
+    explain's compile was served from the plan cache. ``physical`` renders
+    the physical pipeline (operators in cost order with their estimates);
+    with ``analyze=True`` the query actually executed, ``result`` holds its
+    ``QueryResult``, and the physical rows show estimated vs. actual."""
 
     plan: Plan
     tree: str
     sql: List[str]
     launches: Dict[str, int]
     cached: bool
+    physical: str = ""
+    analyzed: bool = False
+    result: Optional[QueryResult] = None
 
     @property
     def total_launches(self) -> int:
@@ -59,6 +64,8 @@ class Explanation:
     def __str__(self) -> str:
         parts = [self.tree, "",
                  f"plan cache: {'HIT' if self.cached else 'MISS (compiled)'}"]
+        if self.physical:
+            parts += ["", self.physical]
         if self.sql:
             parts += ["", "-- generated SQL (plan-time templates)"]
             parts += self.sql
@@ -89,19 +96,34 @@ class Session:
         ``LazyVLMEngine.execute_batch``)."""
         return self.engine.query_batch([self.resolve(q) for q in queries])
 
-    def explain(self, query: QueryLike) -> Explanation:
-        """Compile only: return the plan tree (which shows the engine's
-        entity-search mode and its predicted HBM bytes moved), per-triple
-        SQL templates, the predicted launch counts, and whether the plan
-        cache hit."""
+    def explain(self, query: QueryLike, *, analyze: bool = False
+                ) -> Explanation:
+        """Compile (logical plan + physical pipeline) and explain.
+
+        Returns the plan tree (which shows the engine's entity-search mode
+        and its predicted HBM bytes moved), the physical pipeline with
+        per-operator cost estimates (triple filters in cost order),
+        per-triple SQL templates, the predicted launch counts, and whether
+        the plan cache hit. With ``analyze=True`` the query is *executed*
+        and the physical rows additionally report actual vs. estimated rows
+        per operator (EXPLAIN ANALYZE)."""
         q = self.resolve(query)
         plan, cached = self.engine.plan_cache.lookup(
             q, self.engine.stores, verify=self.engine.verifier is not None,
             search_mode=self.engine.search_mode)
+        pipe = self.engine.physical_for(plan)
+        result = None
+        if analyze:
+            info: Dict[str, object] = {}
+            result = self.engine.execute(plan, _analyze=info)
+            physical = pipe.render(actual=info["actual_rows"])
+        else:
+            physical = pipe.render()
         return Explanation(plan=plan, tree=plan.render_tree(),
                            sql=plan.sql_templates(),
                            launches=plan.predicted_launches(),
-                           cached=cached)
+                           cached=cached, physical=physical,
+                           analyzed=analyze, result=result)
 
     # -- introspection -----------------------------------------------------
     @property

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """AdamW + cosine schedule with linear warmup (pure JAX, no optax dep)."""
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Tuple
 

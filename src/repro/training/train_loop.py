@@ -13,8 +13,6 @@ activation memory to O(one unit × one microbatch) + saved block inputs.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

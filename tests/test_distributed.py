@@ -1,6 +1,5 @@
 """Distribution layer: sharding rules invariants + multi-device subprocess
 tests (EP MoE parity, elastic checkpoint reshard, dry-run smoke on 8 hosts)."""
-import json
 import os
 import subprocess
 import sys
@@ -8,7 +7,6 @@ import textwrap
 
 import jax
 import pytest
-from _hyp import given, settings, st
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.configs.base import ParallelConfig

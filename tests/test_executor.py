@@ -257,6 +257,55 @@ def test_no_full_capacity_transfer_without_verifier(world, stores,
     assert any(len(s) == 2 and s[1] == cap for s in shapes)
 
 
+def test_transfer_funnel_covers_batch_and_cascade(world, stores,
+                                                  monkeypatch):
+    """The physical operators (and the cascade) must route every
+    device→host transfer through the executor's ``_to_host`` funnel: the
+    spy sees the batch path's ``(ΣT_pad, cap)`` row-mask transfer when a
+    verifier needs row identities, and the cascade's scalar certificate
+    transfers — while a no-verifier batched run (including the store-stats
+    reduction) still never moves a capacity-width 2-D array."""
+    import dataclasses
+
+    from repro.core import executor as ex
+    emb = OracleEmbedder(dim=64)
+    cap = stores.relationships.capacity
+    queries = _workload(world)
+
+    shapes = []
+    orig = ex._to_host
+
+    def spy(x):
+        arr = orig(x)
+        shapes.append(arr.shape)
+        return arr
+
+    monkeypatch.setattr(ex, "_to_host", spy)
+    # batch path, no verifier: only fused reductions + small candidate
+    # arrays cross (store-stats histogram is (P,), certificate never runs)
+    engine = LazyVLMEngine(stores, emb)
+    engine.query_batch(queries)
+    assert not [s for s in shapes if len(s) == 2 and s[1] == cap]
+
+    # cascade engine: the row-mask transfer happens (verifier needs row
+    # identities) and the certificate's scalar comparisons go through the
+    # funnel too
+    shapes.clear()
+    casc = LazyVLMEngine(stores, emb, verifier=MockVerifier(world))
+    budgeted = [dataclasses.replace(q, verify_budget=8) for q in queries]
+    casc.query_batch(budgeted)
+    assert any(len(s) == 2 and s[1] == cap for s in shapes)
+    assert any(s == () for s in shapes)        # certificate scalars
+    shapes.clear()
+    # single-query cascade path, on a query with a non-empty candidate set
+    descs = _descs(world)
+    with_rows = dataclasses.replace(_single(descs[0], descs[1], 0),
+                                    verify_budget=8)
+    assert casc.query(with_rows).stats.refine_candidates > 0
+    assert any(len(s) == 2 and s[1] == cap for s in shapes)
+    assert any(s == () for s in shapes)
+
+
 def test_sql_renders_lazily_and_stably(world, stores):
     emb = OracleEmbedder(dim=64)
     engine = LazyVLMEngine(stores, emb)
@@ -275,3 +324,125 @@ def test_use_kernels_single_device_matches_ref(world, stores):
     kern_engine = LazyVLMEngine(stores, emb, use_kernels=True)
     for q in _workload(world)[:3]:
         _assert_same(ref_engine.query(q), kern_engine.query(q))
+
+
+# ---------------------------------------------------------------------------
+# budgeted VLM verification cascade (PR 4)
+# ---------------------------------------------------------------------------
+def _budgeted(queries, budget=8):
+    import dataclasses
+    return [dataclasses.replace(q, verify_budget=budget) for q in queries]
+
+
+@pytest.fixture(scope="module")
+def cascade_world():
+    """The paper's Example 2.1 staged into segment 6 plus detector noise:
+    chain queries here have redundant/non-chaining candidate rows, which is
+    exactly where the cascade's certificate pays off."""
+    w = SyntheticWorld(WorldConfig(num_segments=10, frames_per_segment=32,
+                                   objects_per_segment=8, seed=0,
+                                   spurious_prob=0.2))
+    w.stage_event_2_1(vid=6)
+    return w
+
+
+@pytest.fixture(scope="module")
+def cascade_stores(cascade_world):
+    return ingest(cascade_world, OracleEmbedder(dim=64))
+
+
+def _cascade_workload(world):
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    return [_single(descs[0], descs[1], 0), example_2_1(),
+            _single(descs[1], descs[2], 1)]
+
+
+def test_cascade_fewer_vlm_calls_same_results(cascade_world, cascade_stores):
+    """The acceptance check: with ``verify_budget`` set the engine must
+    issue strictly fewer VLM verifier calls on the synthetic workload while
+    returning the exact same results (segments, scores, end frames) — the
+    cascade's early exit is certificate-backed, not approximate."""
+    emb = OracleEmbedder(dim=64)
+    queries = _cascade_workload(cascade_world)
+    full = LazyVLMEngine(cascade_stores, emb,
+                         verifier=MockVerifier(cascade_world))
+    casc = LazyVLMEngine(cascade_stores, emb,
+                         verifier=MockVerifier(cascade_world))
+    for q, qb in zip(queries, _budgeted(queries)):
+        _assert_same(full.query(q), casc.query(qb))
+    assert full.verifier.calls > 0
+    assert casc.verifier.calls < full.verifier.calls
+
+
+def test_cascade_rounds_and_stats(cascade_world, cascade_stores):
+    emb = OracleEmbedder(dim=64)
+    engine = LazyVLMEngine(cascade_stores, emb,
+                           verifier=MockVerifier(cascade_world))
+    (qb,) = _budgeted([example_2_1()], budget=4)
+    r = engine.query(qb)
+    assert r.stats.refine_candidates > 0
+    # budget=4 per round: the candidate set needs multiple rounds
+    assert r.stats.verify_rounds >= 2
+    assert r.stats.refine_verified <= r.stats.refine_candidates
+    assert r.stats.refine_passed <= r.stats.refine_verified
+    assert r.stats.vlm_calls == engine.verifier.calls
+    # an empty-result query exits at round 0 with ZERO VLM calls: the
+    # certificate holds before any verification when nothing can chain
+    empty = _budgeted([_single("xqzzt flibber", "vorpal snark", 0)])[0]
+    calls_before = engine.verifier.calls
+    engine.query(empty)
+    assert engine.verifier.calls == calls_before
+
+
+def test_cascade_batch_matches_full_batch(cascade_world, cascade_stores):
+    """Budgeted plans inside a batch run the cascade on their own row slice
+    (seeded by the fused pass's verdict memo) and must return the same
+    results as full verification, with fewer calls."""
+    emb = OracleEmbedder(dim=64)
+    queries = _cascade_workload(cascade_world)
+    full = LazyVLMEngine(cascade_stores, emb,
+                         verifier=MockVerifier(cascade_world))
+    casc = LazyVLMEngine(cascade_stores, emb,
+                         verifier=MockVerifier(cascade_world))
+    res_full = full.query_batch(queries)
+    res_casc = casc.query_batch(_budgeted(queries))
+    for r1, r2 in zip(res_full, res_casc):
+        _assert_same(r1, r2)
+    assert casc.verifier.calls < full.verifier.calls
+    # a mixed batch (budgeted + full + verify-heavy duplicates) stays exact
+    mixed = queries[:1] + _budgeted(queries[1:])
+    mixed_engine = LazyVLMEngine(cascade_stores, emb,
+                                 verifier=MockVerifier(cascade_world))
+    for r1, r2 in zip(res_full, mixed_engine.query_batch(mixed)):
+        _assert_same(r1, r2)
+
+
+class _ContentNoisyVerifier:
+    """A noisy verifier whose verdict is a pure function of row *content*
+    (unlike ``MockVerifier(flip_prob=...)``, whose RNG stream depends on
+    call order) — the cascade/full comparison needs order-independence."""
+
+    def __init__(self, world):
+        self.world = world
+        self.calls = 0
+
+    def verify(self, rows):
+        self.calls += len(rows)
+        out = self.world.verify_batch(rows)
+        h = (np.asarray(rows, np.int64)
+             * np.array([3, 5, 7, 11, 13])).sum(axis=1) % 97
+        return out ^ (h < 30)          # deterministic content-keyed flips
+
+
+def test_cascade_with_noisy_verifier_still_matches_full(world, stores):
+    """The certificate must hold for ANY verdict function, not just the
+    clean oracle: with a content-deterministic noisy verifier the cascade's
+    early exit still reproduces full verification exactly."""
+    emb = OracleEmbedder(dim=64)
+    queries = _workload(world)[:4] + [example_2_1()]
+    full = LazyVLMEngine(stores, emb, verifier=_ContentNoisyVerifier(world))
+    casc = LazyVLMEngine(stores, emb, verifier=_ContentNoisyVerifier(world))
+    for q, qb in zip(queries, _budgeted(queries, budget=6)):
+        r1, r2 = full.query(q), casc.query(qb)
+        assert r1.segments == r2.segments and r1.scores == r2.scores
+        assert (r1.end_frames == r2.end_frames).all()

@@ -32,8 +32,19 @@ def test_roundtrip_with_options_and_windows():
         constraints=(TemporalConstraint(0, 2, min_gap=3, max_gap=9),
                      TemporalConstraint(1, 2, min_gap=1)),
         top_k=8, text_threshold=0.5, image_search=True,
-        image_threshold=0.7, predicate_top_m=3)
+        image_threshold=0.7, predicate_top_m=3, verify_budget=16)
     assert parse_query(format_query(q)) == q
+
+
+def test_verify_budget_option_parses_and_roundtrips():
+    text = ("ENTITIES:\n  a: man\n  b: dog\nRELATIONSHIPS:\n  r: near\n"
+            "FRAMES:\n  f0: (a r b)\nOPTIONS:\n  verify_budget = 8\n")
+    q = parse_query(text)
+    assert q.verify_budget == 8
+    assert "verify_budget = 8" in format_query(q)
+    assert parse_query(format_query(q)) == q
+    # default (0 = full verification) is not emitted
+    assert "verify_budget" not in format_query(example_2_1())
 
 
 def test_parse_accepts_comma_and_space_triple_forms():

@@ -1,16 +1,14 @@
 """MoE dispatch invariants: sort-based dispatch vs a direct per-token oracle,
 EP path parity, capacity semantics."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig, MoEConfig
+from repro.configs.base import MoEConfig
 from repro.models import moe as moe_lib
 from repro.models.common import activation
 

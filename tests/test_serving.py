@@ -39,7 +39,8 @@ def test_continuous_batching_matches_standalone(setup):
     sched = Scheduler(eng, max_admit=4)
     prompts = [np.array([5 + i, 6, 7, 8][: 2 + i % 3], np.int32)
                for i in range(7)]
-    reqs = [sched.submit(p, max_new_tokens=6) for p in prompts]
+    for p in prompts:
+        sched.submit(p, max_new_tokens=6)
     done = sched.run()
     assert len(done) == 7
     for r in done:
@@ -135,3 +136,88 @@ def test_straggler_no_reissue_when_uniform():
     res = sm.run_batch(list(range(8)), lambda s, it: (it, 1.0))
     assert sm.reissues == 0
     assert res == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# cost-based query admission (PR 4)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def vmr_setup():
+    from repro.core import LazyVLMEngine
+    from repro.semantic import OracleEmbedder
+    from repro.video import SyntheticWorld, WorldConfig, ingest
+    world = SyntheticWorld(WorldConfig(num_segments=6, frames_per_segment=32,
+                                       objects_per_segment=7, seed=5))
+    stores = ingest(world, OracleEmbedder(dim=64))
+    return world, LazyVLMEngine(stores, OracleEmbedder(dim=64))
+
+
+def _vmr_queries(world, n=6):
+    from repro.core.query import (Entity, FrameSpec, Relationship, Triple,
+                                  VMRQuery)
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    return [VMRQuery(entities=(Entity("a", descs[i % len(descs)]),
+                               Entity("b", descs[(i + 1) % len(descs)])),
+                     relationships=(Relationship("r", "near"),),
+                     frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                     top_k=16, text_threshold=0.9)
+            for i in range(n)]
+
+
+def test_cost_based_admission_packs_to_budget(vmr_setup):
+    from repro.serving import BatchBudget, CostBasedAdmission, QueryFrontend
+    world, engine = vmr_setup
+    queries = _vmr_queries(world)
+    per_query = engine.estimate_cost(queries[0])
+    # budget sized for exactly two queries per batch (same-shape queries)
+    budget = BatchBudget(max_device_bytes=2 * per_query.device_bytes)
+    frontend = QueryFrontend(engine,
+                             admission=CostBasedAdmission(engine, budget))
+    tickets = [frontend.submit(q) for q in queries]
+    finished = frontend.drain()
+    assert len(finished) == len(queries)
+    assert [t.qid for t in finished] == [t.qid for t in tickets]   # FIFO
+    assert frontend.batches_run == 3          # 6 queries / 2 per batch
+    assert all(t.done and t.result is not None for t in tickets)
+
+
+def test_cost_based_admission_never_livelocks(vmr_setup):
+    """A query more expensive than the whole budget must still be admitted
+    (alone), not spin forever at the queue head."""
+    from repro.serving import BatchBudget, CostBasedAdmission, QueryFrontend
+    world, engine = vmr_setup
+    budget = BatchBudget(max_device_bytes=1)     # smaller than any query
+    frontend = QueryFrontend(engine,
+                             admission=CostBasedAdmission(engine, budget))
+    for q in _vmr_queries(world, n=3):
+        frontend.submit(q)
+    finished = frontend.drain()
+    assert len(finished) == 3
+    assert frontend.batches_run == 3             # one query per batch
+
+
+def test_cost_based_admission_count_ceiling(vmr_setup):
+    from repro.serving import BatchBudget, CostBasedAdmission
+    from collections import deque
+    world, engine = vmr_setup
+    admission = CostBasedAdmission(engine,
+                                   BatchBudget(max_queries=4))
+    from repro.serving.frontend import QueryTicket
+    import time as _time
+    waiting = deque(QueryTicket(i, q, _time.perf_counter())
+                    for i, q in enumerate(_vmr_queries(world)))
+    batch = admission.take(waiting)
+    assert [t.qid for t in batch] == [0, 1, 2, 3]
+    assert [t.qid for t in waiting] == [4, 5]
+
+
+def test_cost_estimates_price_through_plan_cache(vmr_setup):
+    """Admission costing compiles through the engine's plan cache: pricing
+    the same query twice must not recompile."""
+    world, engine = vmr_setup
+    q = _vmr_queries(world, n=1)[0]
+    engine.estimate_cost(q)
+    misses = engine.plan_cache.misses
+    engine.estimate_cost(q)
+    assert engine.plan_cache.misses == misses
+    assert engine.plan_cache.hits >= 1

@@ -117,3 +117,103 @@ def test_session_stores_property(stores):
     session = open_video_store(stores, OracleEmbedder(dim=64))
     assert session.stores is stores
     assert int(np.asarray(stores.entities.table.count())) > 0
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN golden + EXPLAIN ANALYZE (PR 4)
+# ---------------------------------------------------------------------------
+# The full explain() rendering for the paper's Example 2.1 on this module's
+# fixed world: logical plan tree, cache status, physical pipeline with cost
+# columns, and the per-triple SQL templates. Pinned verbatim so EXPLAIN
+# regressions show up as a readable diff, not a silent drift.
+EXPLAIN_2_1_GOLDEN = """\
+Plan  (10 segments x 32 frames, 8 predicted launches)
+├─ EntityMatch k=16 threshold=0.35
+│    search_mode=fp32 predicted_bytes=65,920
+│    e1 ~ 'man with backpack'
+│    e2 ~ 'bicycle'
+│    e3 ~ 'man in red'
+├─ PredicateMatch m=2 threshold=0.35
+│    r1 ~ 'near'
+│    r2 ~ 'left of'
+│    r3 ~ 'right of'
+├─ TripleSelect triples=3 bucket=4
+│    t0: (e1 r1 e2)
+│    t1: (e3 r2 e2)
+│    t2: (e3 r3 e2)
+├─ VlmVerify (content-deduped rows)
+├─ ConjoinFrames
+│    f0 <- t0 & t1
+│    f1 <- t0 & t2
+└─ TemporalChain steps=1 top_k=10
+     f1 - f0 >= 5
+
+plan cache: MISS (compiled)
+
+PhysicalPipeline  (10 ops, ~10 launches, ~1,222,376 bytes)
+  EmbedOp[entity_text]         est_rows=3        bytes~768          launches=1
+  EmbedOp[relationship_text]   est_rows=3        bytes~768          launches=1
+  TopKSearchOp[entity]         est_rows=48       bytes~65,920       launches=1
+  TopKSearchOp[predicate]      est_rows=6        bytes~1,840        launches=2
+  TripleFilterOp[t0]           est_rows=66       bytes~360,448      launches=1
+  TripleFilterOp[t1]           est_rows=66       bytes~360,448      launches=0
+  TripleFilterOp[t2]           est_rows=66       bytes~360,448      launches=0
+  VlmVerifyOp[full]            est_rows=198      bytes~3,960        launches=0
+  BitmapConjoinOp              est_rows=640      bytes~67,136       launches=2
+  TemporalChainOp              est_rows=10       bytes~640          launches=2
+
+-- generated SQL (plan-time templates)
+SELECT vid, fid FROM relationships
+  WHERE (vid, sid) IN (top16['man with backpack'])
+    AND (vid, oid) IN (top16['bicycle'])
+    AND rl IN (top2['near'])  -- triple 0 (e1 r1 e2)
+SELECT vid, fid FROM relationships
+  WHERE (vid, sid) IN (top16['man in red'])
+    AND (vid, oid) IN (top16['bicycle'])
+    AND rl IN (top2['left of'])  -- triple 1 (e3 r2 e2)
+SELECT vid, fid FROM relationships
+  WHERE (vid, sid) IN (top16['man in red'])
+    AND (vid, oid) IN (top16['bicycle'])
+    AND rl IN (top2['right of'])  -- triple 2 (e3 r3 e2)"""
+
+
+def test_explain_golden_example_2_1(world, stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64),
+                               verifier=MockVerifier(world))
+    assert str(session.explain(EXAMPLE_2_1_TEXT)) == EXPLAIN_2_1_GOLDEN
+
+
+def test_explain_analyze_reports_estimated_vs_actual(world, stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64),
+                               verifier=MockVerifier(world))
+    exp = session.explain(EXAMPLE_2_1_TEXT, analyze=True)
+    assert exp.analyzed and exp.result is not None
+    # the analyzed query really executed: same answer as a plain query
+    _assert_same(exp.result, session.query(EXAMPLE_2_1_TEXT))
+    lines = exp.physical.splitlines()
+    op_lines = [ln for ln in lines[1:]]
+    assert all("est_rows=" in ln and "actual_rows=" in ln
+               for ln in op_lines)
+    # every operator resolved an actual row count (no '-' placeholders)
+    assert not any("actual_rows=-" in ln for ln in op_lines)
+    # estimated vs actual for the filters: actuals equal the symbolic row
+    # counts the stats report (in declaration order)
+    got = {}
+    for ln in op_lines:
+        if "TripleFilterOp[" in ln:
+            name = ln.split("TripleFilterOp[")[1].split("]")[0]
+            got[name] = int(ln.rsplit("actual_rows=", 1)[1].replace(",", ""))
+    rows = exp.result.stats.sql_rows_per_triple
+    assert got == {f"t{i}": rows[i] for i in range(len(rows))}
+
+
+def test_explain_analyze_without_verifier_and_cache_interaction(world,
+                                                                stores):
+    session = open_video_store(stores, OracleEmbedder(dim=64))
+    exp1 = session.explain(EXAMPLE_2_1_TEXT)
+    assert not exp1.analyzed and exp1.result is None
+    assert "VlmVerifyOp[off]" in exp1.physical
+    assert "actual_rows" not in exp1.physical
+    exp2 = session.explain(EXAMPLE_2_1_TEXT, analyze=True)
+    assert exp2.cached                      # explain compiled it already
+    assert "actual_rows=" in exp2.physical

@@ -1,7 +1,6 @@
 """Property-based tests: the TPU relational engine vs a Python oracle."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.symbolic import ops as sops

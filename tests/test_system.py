@@ -182,7 +182,6 @@ def test_vlm_verifier_plumbing(world):
 def test_dual_store_image_search_recovers_recall(world):
     """Corrupt the text embeddings; the image store (eie) must still match
     when image_search=True (the paper's dual-embedding Entity Store)."""
-    import dataclasses
 
     import jax.numpy as jnp
 
