@@ -37,9 +37,18 @@ def check(path: str, expect_modules=()) -> int:
     if casc:
         assert casc[0]["value"] == 1, \
             "verification cascade diverged from full verification"
+    stream = [r for r in rows if r["name"] == "streaming/exact_vs_full"]
+    if stream:
+        assert stream[0]["value"] == 1, \
+            "incremental subscription diverged from cold re-execution"
+    sratio = [r for r in rows
+              if r["name"].startswith("streaming/incr_vs_full_bytes")]
+    bad = [r for r in sratio if r["value"] >= 1.0]
+    assert not bad, (f"incremental re-evaluation moved at least as many "
+                     f"bytes as full re-execution: {bad}")
     print(f"bench schema OK: {len(rows)} rows from {sorted(present)} "
           f"({len(ratios)} ratio checks, "
-          f"exactness={'yes' if exact or casc else 'n/a'})")
+          f"exactness={'yes' if exact or casc or stream else 'n/a'})")
     return len(rows)
 
 

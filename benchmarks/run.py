@@ -9,6 +9,8 @@
   kernels      — fused top-k data-movement model + CPU sanity timing
   topk_search  — fp32 fused vs int8 two-phase vs oracle (bytes + wall-clock)
   cascade      — budgeted VLM cascade: calls avoided + wall-clock vs full
+  streaming    — segmented ingest + incremental continuous queries vs full
+                 re-execution (bytes/launches model, exactness asserted)
   roofline     — printed separately: python -m benchmarks.roofline
 
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
@@ -43,10 +45,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy, cascade, kernels, multi_query,
-                            parallelism, pruning, scaling, topk_search,
-                            updates)
+                            parallelism, pruning, scaling, streaming,
+                            topk_search, updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
-               kernels, topk_search, cascade]
+               kernels, topk_search, cascade, streaming]
     if args.modules:
         want = {m.strip() for m in args.modules.split(",")}
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}

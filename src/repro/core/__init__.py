@@ -4,3 +4,5 @@ from repro.core.query import (Entity, FrameSpec, QueryValidationError,  # noqa: 
 from repro.core.plan import (Plan, PlanCache, compile_plan)  # noqa: F401
 from repro.core.executor import (LazyVLMEngine, QueryResult,  # noqa: F401
                                  QueryStats)
+from repro.core.streaming import (Subscription,  # noqa: F401
+                                  SubscriptionStats)

@@ -46,7 +46,7 @@ from repro.core.physical.stages import (_conjoin_bitmaps,  # noqa: F401
                                         make_sql_renderer, render_sql)
 from repro.core.plan import Plan, PlanCache, pow2_bucket
 from repro.core.query import VMRQuery
-from repro.core.stores import REL_SCHEMA, VideoStores
+from repro.core.stores import REL_SCHEMA, VideoStores, entity_search_bounds
 from repro.core import temporal as temporal_lib
 from repro.semantic.embed import CachingEmbedder
 from repro.semantic.search import (SEARCH_MODES, sharded_topk_similarity,
@@ -122,7 +122,7 @@ class LazyVLMEngine:
                  reorder_filters: bool = True,
                  embed_cache_entries: int = 4096,
                  plan_cache_entries: int = 256):
-        self.stores = stores
+        self._stores = stores
         self.embedder = embedder
         # host-side text->embedding memo; both the single-query and the
         # batched path go through it (inner embedders are deterministic, so
@@ -147,10 +147,38 @@ class LazyVLMEngine:
         self.reorder_filters = reorder_filters
         # query-signature -> compiled Plan (repeat queries skip compilation)
         self.plan_cache = PlanCache(max_entries=plan_cache_entries)
-        # logical Plan -> PhysicalPipeline (FIFO-bounded like the plan cache)
-        self._physical_cache: Dict[Plan, object] = {}
+        # (Plan, store_version) -> PhysicalPipeline (FIFO-bounded like the
+        # plan cache). Keying on the version means an append can never
+        # leave a stale cost order behind: the next lookup after a bump
+        # re-costs against the fresh statistics.
+        self._physical_cache: Dict[Tuple[Plan, int], object] = {}
         self._physical_cache_entries = plan_cache_entries
         self._store_stats: Optional[StoreStats] = None
+        self._store_stats_version: Optional[int] = None
+        # (texts, m, threshold) -> runtime predicate candidate label ids
+        # (store-independent: query text x the static vocab)
+        self._pred_cand_cache: Dict[Tuple, Tuple] = {}
+
+    # -- store snapshot ----------------------------------------------------
+    @property
+    def stores(self) -> VideoStores:
+        return self._stores
+
+    @stores.setter
+    def stores(self, stores: VideoStores) -> None:
+        """Re-point the engine at (an updated version of) its stores.
+
+        Statistics snapshots, compiled physical pipelines, and predicate
+        candidate memos are invalidated — results never depend on stats
+        freshness, but cost ordering, segment pruning, and admission
+        pricing do."""
+        self._stores = stores
+        self.refresh_store_stats()
+        self._pred_cand_cache.clear()
+
+    @property
+    def store_version(self) -> int:
+        return getattr(self._stores, "store_version", 0)
 
     # -- compilation -------------------------------------------------------
     def plan_for(self, query: VMRQuery) -> Plan:
@@ -162,31 +190,67 @@ class LazyVLMEngine:
 
     @property
     def store_stats(self) -> StoreStats:
-        """Device-resident symbolic statistics (computed once per engine:
-        one fused reduction, small transfers through the funnel). Stores
-        are immutable (incremental ingest builds NEW store objects), so
-        the snapshot can't silently go stale — but an engine re-pointed at
-        updated stores must call :meth:`refresh_store_stats`."""
-        if self._store_stats is None:
+        """Symbolic statistics snapshot, keyed by ``store_version``.
+
+        Segmented stores assemble it by summing the per-segment host stats
+        (zero device work); hand-built stores pay one fused device
+        reduction with small transfers through the funnel. A version bump
+        (``append_stores``/``seal_stores``) invalidates it automatically;
+        re-pointing the engine at a different store object goes through the
+        ``stores`` setter, which drops it too."""
+        v = self.store_version
+        if self._store_stats is None or self._store_stats_version != v:
             self._store_stats = StoreStats.from_stores(self.stores)
+            self._store_stats_version = v
         return self._store_stats
 
     def refresh_store_stats(self) -> None:
-        """Recompute the statistics snapshot and drop compiled physical
-        pipelines (their cost ordering priced against the old stats). Call
-        after swapping ``self.stores`` for an incrementally-updated store —
-        results never depend on stats freshness, only cost ordering and
-        admission pricing do."""
+        """Drop the statistics snapshot and compiled physical pipelines
+        (their cost ordering priced against the old stats). Called by the
+        ``stores`` setter; version-keyed caches make explicit calls
+        unnecessary for ``append_stores``-produced updates."""
         self._store_stats = None
+        self._store_stats_version = None
         self._physical_cache.clear()
 
+    def _pred_candidates(self, plan: Plan) -> Tuple[Tuple[int, ...], ...]:
+        """Runtime predicate candidate label ids per predicate-text row —
+        the exact same einsum + top-m + threshold the execution stage runs
+        (one shared implementation, ``stages.predicate_candidates``),
+        computed once at compile time (it depends only on the query text
+        and the static vocab, never on the store), so the segment-pruning
+        pass is provable rather than heuristic."""
+        from repro.core.physical.stages import predicate_candidates
+        pm = plan.predicate_match
+        key = (pm.texts, pm.m, pm.threshold)
+        hit = self._pred_cand_cache.get(key)
+        if hit is not None:
+            return hit
+        ids_np, ok_np, _ = predicate_candidates(
+            self._embed, self.stores.predicates.embeddings, pm.texts,
+            pm.m, pm.threshold)
+        out = tuple(tuple(int(p) for p in row[sel])
+                    for row, sel in zip(ids_np, ok_np))
+        self._pred_cand_cache[key] = out
+        return out
+
     def physical_for(self, plan: Plan):
-        """Lower ``plan`` to a :class:`PhysicalPipeline` (cached)."""
-        pipe = self._physical_cache.get(plan)
+        """Lower ``plan`` to a :class:`PhysicalPipeline` (cached per
+        ``(plan, store_version)`` — see the cache comment above)."""
+        version = self.store_version
+        key = (plan, version)
+        pipe = self._physical_cache.get(key)
         if pipe is None:
+            # predicate candidates sharpen the segment-pruning pass; on a
+            # monolithic (segmentless) store the pass has nothing to prune,
+            # so skip the embed + device round-trip entirely
+            cands = (self._pred_candidates(plan)
+                     if self.store_stats.segments else None)
             pipe = compile_physical(plan, self.store_stats,
-                                    reorder=self.reorder_filters)
-            self._physical_cache[plan] = pipe
+                                    reorder=self.reorder_filters,
+                                    pred_candidates=cands,
+                                    store_version=version)
+            self._physical_cache[key] = pipe
             while len(self._physical_cache) > self._physical_cache_entries:
                 self._physical_cache.pop(next(iter(self._physical_cache)))
         return pipe
@@ -199,9 +263,17 @@ class LazyVLMEngine:
     # -- stage 1 search dispatch (used by TopKSearchOp) ----------------------
     def _search(self, q_emb, emb, emb_i8, valid, k):
         if self.mesh is not None:
+            # mesh engines shard rows over devices; segmentation applies
+            # per shard upstream of this build — keep the global sweep
             return sharded_topk_similarity(q_emb, emb, valid, k, self.mesh,
                                            use_kernels=self.use_kernels,
                                            mode=self.search_mode, i8=emb_i8)
+        bounds = entity_search_bounds(self.stores)
+        if len(bounds) > 1:
+            from repro.core.physical.stages import _entity_match_segmented
+            return _entity_match_segmented(q_emb, emb, emb_i8, valid, k,
+                                           self.search_mode,
+                                           self.use_kernels, bounds)
         return _entity_match(q_emb, emb, emb_i8, valid, k,
                              self.search_mode, self.use_kernels)
 

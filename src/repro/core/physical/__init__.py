@@ -20,6 +20,11 @@ Two optimizer passes live here:
     verifies candidate rows in descending semantic-score order and exits as
     soon as a monotonicity certificate proves the remaining unverified rows
     cannot change the query's matched windows (see ``ops.run_cascade``).
+  * **segment pruning** — on a segmented streaming store, segments whose
+    frame range or predicate histogram provably cannot match are skipped
+    (see ``prune.py``); ``Session.explain`` surfaces scanned-vs-pruned
+    counts per operator for subscribed queries and the incremental
+    subscription path skips pruned new segments on every refresh.
 """
 from repro.core.physical.cost import CostEstimate, StoreStats  # noqa: F401
 from repro.core.physical.compile import (PhysicalPipeline,  # noqa: F401
@@ -28,3 +33,5 @@ from repro.core.physical.ops import (BitmapConjoinOp, EmbedOp,  # noqa: F401
                                      ExecContext, TemporalChainOp,
                                      TopKSearchOp, TripleFilterOp,
                                      VlmVerifyOp)
+from repro.core.physical.prune import (SegmentDecision,  # noqa: F401
+                                       chain_min_span, prune_segments)

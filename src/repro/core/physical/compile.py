@@ -23,6 +23,16 @@ from repro.core.physical.cost import CostEstimate, StoreStats
 from repro.core.physical.ops import (BitmapConjoinOp, EmbedOp, PhysicalOp,
                                      TemporalChainOp, TopKSearchOp,
                                      TripleFilterOp, VlmVerifyOp)
+from repro.core.physical.prune import (SegmentDecision, prune_segments,
+                                       scanned_count)
+
+# which operators scan the segmented store, and how: the entity search
+# always scans every segment (pruning it could change the global top-k and
+# therefore the result), the symbolic/verify/bitmap tail honors the
+# pruning decisions, and the embed/predicate/chain ops never touch
+# segment rows at all
+_SCANS_ALL = ("TopKSearchOp[entity]",)
+_SCANS_PRUNED = ("TripleFilterOp", "VlmVerifyOp", "BitmapConjoinOp")
 
 
 @dataclass(frozen=True)
@@ -33,6 +43,10 @@ class PhysicalPipeline:
     executing at row ``pos`` of the fused selection; ``pos_of`` is its
     inverse. ``conjoin_idx`` is the frame-spec gather matrix remapped to
     execution positions (``plan.conjoin.pad`` still applies unchanged).
+    ``segment_plan`` is the plan-time segment-pruning verdict per store
+    segment (empty on monolithic stores) and ``store_version`` the store
+    snapshot the pipeline was costed against — the engine's pipeline cache
+    keys on it, so an append can never leave a stale cost order behind.
     """
 
     ops: Tuple[PhysicalOp, ...]
@@ -42,6 +56,8 @@ class PhysicalPipeline:
     conjoin_idx: Tuple[Tuple[int, ...], ...]
     reordered: bool
     cascade: bool               # VlmVerifyOp runs the budgeted cascade
+    segment_plan: Tuple[SegmentDecision, ...] = ()
+    store_version: int = 0
 
     def total_estimate(self) -> CostEstimate:
         total = CostEstimate(0, 0, 0)
@@ -53,10 +69,28 @@ class PhysicalPipeline:
         return tuple(op for op in self.ops
                      if isinstance(op, TripleFilterOp))
 
-    def render(self, actual: Optional[Dict[str, int]] = None) -> str:
+    def segment_decision(self, sid: int) -> SegmentDecision:
+        """Decision for store segment ``sid`` (scan, when none recorded)."""
+        for d in self.segment_plan:
+            if d.sid == sid:
+                return d
+        return SegmentDecision(sid, True)
+
+    def _segments_column(self, label: str) -> str:
+        scanned, total = scanned_count(self.segment_plan)
+        if label.startswith(_SCANS_ALL):
+            return f"  segments={total}/{total}"
+        if label.startswith(_SCANS_PRUNED):
+            return f"  segments={scanned}/{total}"
+        return "  segments=-"
+
+    def render(self, actual: Optional[Dict[str, int]] = None,
+               segments: bool = False) -> str:
         """The EXPLAIN physical artifact: one row per operator with its
         cost columns; with ``actual`` (EXPLAIN ANALYZE) an extra column
-        compares estimated vs. observed rows."""
+        compares estimated vs. observed rows. ``segments=True`` (EXPLAIN
+        for a subscribed/``follow=true`` query) adds a scanned-vs-pruned
+        segments column per operator plus the per-segment verdicts."""
         total = self.total_estimate()
         order_note = (" [cost-ordered: "
                       + " ".join(f"t{i}" for i in self.order) + "]"
@@ -71,7 +105,15 @@ class PhysicalPipeline:
                 got = actual.get(op.label)
                 row += ("  actual_rows=" + (f"{got:,}" if got is not None
                                             else "-"))
+            if segments:
+                row += self._segments_column(op.label)
             lines.append(row)
+        if segments and self.segment_plan:
+            scanned, n = scanned_count(self.segment_plan)
+            lines.append(f"  segments: {scanned} scanned, {n - scanned} "
+                         f"pruned of {n}")
+            for d in self.segment_plan:
+                lines.append(f"    {d.describe()}")
         return "\n".join(lines)
 
 
@@ -84,9 +126,15 @@ def order_triple_filters(filters, stats: StoreStats,
     return tuple(sorted(range(len(filters)), key=lambda i: (est[i], i)))
 
 
-def compile_physical(plan, stats: StoreStats, *,
-                     reorder: bool = True) -> PhysicalPipeline:
-    """Lower ``plan`` to a :class:`PhysicalPipeline` against ``stats``."""
+def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
+                     pred_candidates=None,
+                     store_version: int = 0) -> PhysicalPipeline:
+    """Lower ``plan`` to a :class:`PhysicalPipeline` against ``stats``.
+
+    ``pred_candidates`` (per predicate-text row, the runtime candidate
+    label ids — store-independent, so the engine computes them once at
+    compile time) sharpens the segment-pruning pass; ``store_version``
+    stamps the pipeline with the store snapshot it was costed against."""
     em, pm, ts = plan.entity_match, plan.predicate_match, plan.triple_select
     n_triples = len(ts.triples)
 
@@ -149,4 +197,6 @@ def compile_physical(plan, stats: StoreStats, *,
         estimates=tuple(op.estimate(stats) for op in ops),
         order=order, pos_of=pos_of, conjoin_idx=conjoin_idx,
         reordered=order != tuple(range(n_triples)),
-        cascade=plan.verify.enabled and budget > 0)
+        cascade=plan.verify.enabled and budget > 0,
+        segment_plan=prune_segments(plan, stats, pred_candidates),
+        store_version=store_version)

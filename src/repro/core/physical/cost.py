@@ -6,11 +6,15 @@ launch count. Estimates are *models*, not measurements — EXPLAIN ANALYZE
 (``Session.explain(..., analyze=True)``) prints them next to the actual
 per-operator row counts so the model's drift is visible.
 
-:class:`StoreStats` is the device-resident statistics snapshot the
-cost-based passes read: a per-predicate row histogram over the Relationship
-Store plus valid-row counts, computed in ONE fused device reduction and
-transferred through the executor's ``_to_host`` funnel (the histogram is a
-``(P,)`` vector — the full stores never round-trip to host).
+:class:`StoreStats` is the statistics snapshot the cost-based passes read:
+a per-predicate row histogram over the Relationship Store plus valid-row
+counts. On a **segmented** store the snapshot is assembled by summing the
+segments' host-accumulated :class:`~repro.core.stores.SegmentStats` — no
+device work at all, and the per-segment vector feeds the plan-time
+segment-pruning pass (``repro.core.physical.prune``). Hand-built stores
+without segments fall back to ONE fused device reduction transferred
+through the executor's ``_to_host`` funnel (the histogram is a ``(P,)``
+vector — the full stores never round-trip to host).
 """
 from __future__ import annotations
 
@@ -70,12 +74,34 @@ class StoreStats:
     entity_capacity: int
     text_dim: int
     image_dim: int
+    # the store's StoreSegment table (empty on hand-built monolithic
+    # stores); totals above are the elementwise sum of these when present
+    segments: Tuple = ()
 
     @classmethod
     def from_stores(cls, stores) -> "StoreStats":
         from repro.core.physical.stages import to_host
         rel = stores.relationships.table
         labels = tuple(stores.predicates.labels)
+        shape = dict(
+            rel_capacity=stores.relationships.capacity,
+            entity_capacity=stores.entities.capacity,
+            text_dim=int(stores.entities.text_emb.shape[1]),
+            image_dim=int(stores.entities.image_emb.shape[1]))
+        segments = tuple(getattr(stores, "segments", ()))
+        if segments:
+            # segmented store: totals combine by addition from the
+            # host-accumulated per-segment stats — zero device work, and
+            # exactly equal to a monolithic recompute (integer accounting)
+            hist = [0] * len(labels)
+            for s in segments:
+                for p, n in enumerate(s.stats.pred_rows):
+                    hist[p] += n
+            return cls(
+                labels=labels, pred_rows=tuple(hist),
+                rel_rows=sum(s.stats.rel_rows for s in segments),
+                entity_rows=sum(s.stats.ent_rows for s in segments),
+                segments=segments, **shape)
         hist, rel_rows, ent_rows = _store_stats_device(
             rel["rl"], rel.valid, stores.entities.table.valid, len(labels))
         return cls(
@@ -83,10 +109,7 @@ class StoreStats:
             pred_rows=tuple(int(x) for x in to_host(hist)),
             rel_rows=int(to_host(rel_rows)),
             entity_rows=int(to_host(ent_rows)),
-            rel_capacity=stores.relationships.capacity,
-            entity_capacity=stores.entities.capacity,
-            text_dim=int(stores.entities.text_emb.shape[1]),
-            image_dim=int(stores.entities.image_emb.shape[1]))
+            **shape)
 
     def rows_for_predicate(self, text: str) -> float:
         """Estimated relationship rows matching a relationship description.

@@ -1,0 +1,135 @@
+"""Plan-time segment pruning — skip store segments that provably cannot
+contribute to a query's result.
+
+The pass runs at ``compile_physical`` time against the per-segment
+:class:`~repro.core.stores.SegmentStats` carried by :class:`StoreStats`.
+A segment is pruned only when one of three **sound** rules fires — each
+rule proves the segment's contribution to the final reach bitmap is
+all-False, so skipping its rows is bit-identical to scanning them:
+
+  * ``empty``      — the segment has zero valid relationship rows: every
+    triple mask restricted to it is empty.
+  * ``predicate``  — for some query triple, *no runtime candidate label*
+    has any rows in the segment's predicate histogram. The candidate label
+    set depends only on the query text and the (static) predicate vocab —
+    never on the store — so the engine computes it once at compile time
+    (the exact same einsum + top-m + threshold the execution stage runs)
+    and the rule is provable, not heuristic. An empty triple makes its
+    frame specs all-False in the segment, and the chain DP requires every
+    frame.
+  * ``chain-span`` — the temporal chain needs at least
+    ``1 + Σ min_gap`` distinct frame positions inside one video segment,
+    but the store segment's rows span fewer ``fid`` values; no chain can
+    complete, so the reach rows for its vids are all-False either way.
+
+The ``predicate`` and ``chain-span`` rules reason per *video* segment, so
+they additionally require **exclusive vid ownership**: a store segment
+whose vid range overlaps another segment's is never pruned by them (a
+vid's rows could straddle segments, and segment-local stats say nothing
+about the vid's full row set). Decisions are recomputed per
+``store_version`` and can only flip pruned→scanned (stats grow
+monotonically under appends); the incremental subscription keeps pruned
+row ranges on file and scans them the moment a decision flips.
+
+Pruning never touches entity search (top-k slots freed by a pruned
+segment's entities would go to other candidates and could *add* matches a
+monolithic run would not produce — so the scan stays global for bitwise
+exactness) and it never drops rows a cold run would surface in
+``end_frames``: the rules prove reach-emptiness, not merely
+score-emptiness. ``Session.explain`` renders scanned-vs-pruned per
+operator for ``follow=true`` (subscribed) queries; the incremental
+subscription path (``repro.core.streaming``) skips pruned *new* segments
+on every refresh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core.physical.cost import StoreStats
+
+
+@dataclass(frozen=True)
+class SegmentDecision:
+    """One store segment's scan/prune verdict for one plan."""
+
+    sid: int
+    scanned: bool
+    reason: str = ""            # "" | "empty" | "predicate(t<i>)" | "chain-span"
+
+    def describe(self) -> str:
+        return (f"seg{self.sid}: scan" if self.scanned
+                else f"seg{self.sid}: pruned [{self.reason}]")
+
+
+def chain_min_span(plan) -> int:
+    """Minimum distinct relationship-row ``fid`` span a completed chain
+    needs inside one video segment.
+
+    A frame spec with no triples conjoins to all-True (it needs no rows),
+    so only the frames that *do* select rows pin positions: the span
+    between the first and last such frame is at least the sum of the
+    minimum gaps between them, plus one. Returns 0 when no frame needs
+    rows (the rule — and every row-based rule — then proves nothing).
+    """
+    nonempty = [j for j, fr in enumerate(plan.conjoin.frames) if fr]
+    if not nonempty:
+        return 0
+    lo, hi = nonempty[0], nonempty[-1]
+    return 1 + sum(g[0] for g in plan.temporal.gaps[lo:hi])
+
+
+def prune_segments(plan, stats: StoreStats,
+                   pred_candidates: Optional[Tuple[Tuple[int, ...], ...]]
+                   = None) -> Tuple[SegmentDecision, ...]:
+    """The pruning pass. ``pred_candidates[r]`` is the runtime candidate
+    label-id set for predicate-text row ``r`` (``PredicateMatch.texts``
+    order); ``None`` disables the predicate rule (direct
+    ``compile_physical`` callers without an engine), leaving only the two
+    store-shape rules — still sound, just less sharp."""
+    span_needed = chain_min_span(plan)
+    ts = plan.triple_select
+    if span_needed == 0:
+        # no frame selects rows: reach is all-True regardless of the store,
+        # so nothing is provably prunable
+        return tuple(SegmentDecision(seg.sid, True)
+                     for seg in stats.segments)
+    out = []
+    for seg in stats.segments:
+        st = seg.stats
+        if st.rel_rows == 0:
+            out.append(SegmentDecision(seg.sid, False, "empty"))
+            continue
+        # The row-based rules below reason per *video* segment: they prove
+        # "no chain can complete inside any vid whose rows live here". That
+        # proof needs exclusive ownership — if any other store segment also
+        # holds rows in this vid range, a vid's rows straddle segments and
+        # the segment-local fid span / histogram says nothing about the
+        # vid's full row set. Range overlap is the (conservative, sound)
+        # witness; disjoint appends — the streaming common case — keep
+        # ownership exclusive.
+        if any(o is not seg and o.stats.rel_rows > 0
+               and not (st.vid_hi < o.stats.vid_lo
+                        or o.stats.vid_hi < st.vid_lo)
+               for o in stats.segments):
+            out.append(SegmentDecision(seg.sid, True))
+            continue
+        if st.fid_span < span_needed:
+            out.append(SegmentDecision(seg.sid, False, "chain-span"))
+            continue
+        decision = SegmentDecision(seg.sid, True)
+        if pred_candidates is not None:
+            for i in range(len(ts.triples)):
+                cands = pred_candidates[ts.pred_row[i]]
+                if not any(p < len(st.pred_rows) and st.pred_rows[p]
+                           for p in cands):
+                    decision = SegmentDecision(seg.sid, False,
+                                               f"predicate(t{i})")
+                    break
+        out.append(decision)
+    return tuple(out)
+
+
+def scanned_count(decisions: Tuple[SegmentDecision, ...]) -> Tuple[int, int]:
+    """(scanned, total) over a decision tuple."""
+    return sum(d.scanned for d in decisions), len(decisions)

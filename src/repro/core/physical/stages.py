@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.semantic.search import topk_similarity
+from repro.semantic.search import topk_similarity, topk_similarity_segmented
 from repro.symbolic import ops as sops
 from repro.symbolic.table import Table
 
@@ -46,10 +46,66 @@ def _entity_match(queries, db, db_i8, db_valid, k: int, mode: str,
                            mode=mode, i8=db_i8)
 
 
+@partial(jax.jit, static_argnames=("k", "mode", "use_kernels", "bounds"))
+def _entity_match_segmented(queries, db, db_i8, db_valid, k: int, mode: str,
+                            use_kernels: bool, bounds):
+    """Segment-aware search launch: per-segment top-k + fused cross-segment
+    merge in ONE jitted program (``bounds`` is static, so the program
+    recompiles only when the store's segmentation layout changes). Results
+    are bit-identical to :func:`_entity_match` over the whole bank."""
+    return topk_similarity_segmented(queries, db, db_valid, k, bounds,
+                                     use_kernels=use_kernels, mode=mode,
+                                     i8=db_i8)
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "use_kernels", "bucket"))
+def _entity_match_delta(queries, db, db_i8, db_valid, start, k: int,
+                        mode: str, use_kernels: bool, bucket: int):
+    """Search only the appended entity rows ``[start, start + bucket)``.
+
+    ``start`` is a traced scalar (no recompile per refresh); ``bucket`` is
+    the pow2-padded row count, and the caller must keep
+    ``start + bucket <= capacity`` (``dynamic_slice`` would silently clamp
+    the start and misalign the index remap otherwise). Rows beyond the
+    store's current count are invalid-masked, so the padding never
+    surfaces. Returns (scores, global_idx): the delta's exact top-k,
+    mergeable with a prior top-k into the global one (see
+    ``repro.core.streaming``)."""
+    s = jnp.asarray(start, jnp.int32)
+    dbs = jax.lax.dynamic_slice_in_dim(db, s, bucket)
+    dvs = jax.lax.dynamic_slice_in_dim(db_valid, s, bucket)
+    i8s = None
+    if db_i8 is not None:
+        i8s = type(db_i8)(jax.lax.dynamic_slice_in_dim(db_i8.codes, s, bucket),
+                          jax.lax.dynamic_slice_in_dim(db_i8.scale, s, bucket),
+                          jax.lax.dynamic_slice_in_dim(db_i8.err, s, bucket))
+    scores, idx = topk_similarity(queries, dbs, dvs, min(k, bucket),
+                                  use_kernels=use_kernels, mode=mode, i8=i8s)
+    return scores, idx + s
+
+
 @jax.jit
 def _predicate_match(queries, pred_emb):
     """Similarity of each relationship text to each predicate label."""
     return jnp.einsum("rd,pd->rp", queries, pred_emb)
+
+
+def predicate_candidates(embed, pred_emb, texts, m: int, threshold: float):
+    """Host (ids, ok, vals) of the runtime predicate match for ``texts``.
+
+    THE single host-side implementation of the embed → ``_predicate_match``
+    einsum → top-m → threshold → argmax-always-kept sequence. The
+    segment-pruning pass and the streaming path both call it, and its
+    bitwise agreement with the device operator (``TopKSearchOp``'s
+    predicate branch, which runs the same ops on device) is load-bearing:
+    pruning is provable only because the candidate set here IS the one
+    execution uses."""
+    q_emb = jnp.asarray(embed.embed_texts(list(texts)))
+    sims = _predicate_match(q_emb, jnp.asarray(pred_emb))
+    vals, ids = jax.lax.top_k(sims, m)
+    ok = vals >= threshold
+    ok = ok.at[:, 0].set(True)
+    return to_host(ids), to_host(ok), to_host(vals)
 
 
 @partial(jax.jit, static_argnames=())
@@ -74,6 +130,69 @@ def _triple_selections(rel_cols_vid, rel_cols_fid, rel_cols_sid, rel_cols_rl,
 
     return jax.vmap(one)(subj_vid, subj_eid, subj_ok,
                          obj_vid, obj_eid, obj_ok, pred_ids, pred_ok)
+
+
+@partial(jax.jit, static_argnames=("bucket",))
+def _delta_triple_selections(rel_vid, rel_fid, rel_sid, rel_rl, rel_oid,
+                             rel_valid, lo, span, bucket: int,
+                             subj_vid, subj_eid, subj_ok,
+                             obj_vid, obj_eid, obj_ok, pred_ids, pred_ok):
+    """:func:`_triple_selections` over the appended row window
+    ``[lo, lo + span)`` only — the incremental path's symbolic stage.
+
+    ``bucket`` is the static pow2-padded window size (``lo + bucket`` must
+    stay inside capacity, see ``_entity_match_delta``); ``lo``/``span`` are
+    traced scalars so consecutive refreshes with the same bucket reuse one
+    compiled program. Rows at ``[span, bucket)`` — spare capacity or a
+    pruned neighbor segment's rows — are masked invalid. Returns
+    ``(T, bucket)`` masks whose columns are bit-identical to the matching
+    columns of a full-table selection (rows are evaluated independently).
+    """
+    l = jnp.asarray(lo, jnp.int32)
+    sl = lambda col: jax.lax.dynamic_slice_in_dim(col, l, bucket)
+    valid = sl(rel_valid) & (jnp.arange(bucket) < span)
+    def one(svid, seid, sok, ovid, oeid, ook, pid, pok):
+        m = valid
+        m &= sops.isin_pairs(sl(rel_vid), sl(rel_sid), svid, seid, sok)
+        m &= sops.isin_pairs(sl(rel_vid), sl(rel_oid), ovid, oeid, ook)
+        m &= sops.isin(sl(rel_rl), pid, pok)
+        return m
+
+    masks = jax.vmap(one)(subj_vid, subj_eid, subj_ok,
+                          obj_vid, obj_eid, obj_ok, pred_ids, pred_ok)
+    return masks, masks.sum(axis=1)
+
+
+@partial(jax.jit,
+         static_argnames=("bucket", "num_segments", "frames_per_segment"))
+def _delta_bitmaps(rel_vid, rel_fid, masks, lo, bucket: int,
+                   num_segments: int, frames_per_segment: int):
+    """Scatter the delta-window masks into full-grid presence bitmaps.
+
+    Presence is an OR-scatter, so ``old_bitmaps | delta_bitmaps`` over
+    append-only rows equals the bitmaps of a full-table scatter — the
+    algebra the incremental path's exactness rests on."""
+    l = jnp.asarray(lo, jnp.int32)
+    vid = jax.lax.dynamic_slice_in_dim(rel_vid, l, bucket)
+    fid = jax.lax.dynamic_slice_in_dim(rel_fid, l, bucket)
+    return _masks_to_bitmaps(vid, fid, masks, num_segments,
+                             frames_per_segment)
+
+
+@jax.jit
+def _or_bitmaps(acc, delta):
+    """acc |= delta (the incremental bitmap fold, on device)."""
+    return acc | delta
+
+
+@partial(jax.jit, static_argnames=("gaps",))
+def _reach_from_bitmaps(bitmaps, idx, pad, gaps):
+    """Frame-spec conjunction + chain DP over a (T, V', F) bitmap block in
+    one fused program — the incremental path recomputes reach only for the
+    temporal-chain frontier (the vid suffix whose bitmaps changed)."""
+    from repro.core import temporal as temporal_lib
+    fmaps = _conjoin_bitmaps(bitmaps, idx, pad)
+    return temporal_lib.chain_reach(fmaps, gaps)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "frames_per_segment"))

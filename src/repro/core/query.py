@@ -73,6 +73,11 @@ class VMRQuery:
     # exits early once the remaining rows provably can't change the result
     # (see repro.core.physical.ops.run_cascade — results stay exact)
     verify_budget: int = 0
+    # continuous query: register as a standing subscription re-evaluated
+    # incrementally on every ingest batch (see repro.core.streaming;
+    # results stay bit-identical to cold re-execution). Text form:
+    # 'OPTIONS: follow = true'.
+    follow: bool = False
 
     @property
     def entity_texts(self) -> List[str]:

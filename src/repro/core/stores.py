@@ -15,6 +15,20 @@ parts shard over the ``data`` mesh axis, the relational parts over rows.
 Incremental update (the paper's update-friendliness claim) = append segments
 into spare capacity — no reprocessing of existing rows.
 
+**Segmented streaming layout.** A ``VideoStores`` is additionally organized
+as a list of **sealed immutable segments** plus one **active append
+segment** (:class:`StoreSegment`): contiguous row ranges over the global
+entity/relationship banks, in append order. Rows are append-only, so a
+sealed segment's rows — including its per-row int8 banks, which are row
+slices of the global banks (per-row quantization makes the slice *be* the
+segment's own bank) — never change after sealing. Each segment carries its
+own mergeable :class:`SegmentStats` (per-predicate histogram + row counts +
+vid/fid ranges) accumulated **by addition** from the appended batches —
+sealing computes nothing, and totals over segments equal a full recompute
+exactly (integer accounting). ``store_version`` increases monotonically on
+every append/seal so engines can invalidate stats snapshots and compiled
+physical pipelines instead of silently pricing against a stale store.
+
 Ingested ids are validated against the ``isin_pairs`` radix-pack bounds
 (:func:`validate_pack_bounds`): the symbolic stage packs (vid, eid/sid/oid)
 pairs into int32 keys, so out-of-range ids would make joins silently wrong —
@@ -24,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -150,6 +164,97 @@ class PredicateVocab:
         return self.labels.index(label)
 
 
+_RANGE_EMPTY_LO = 2**31 - 1     # vid/fid range sentinels for empty segments
+
+
+@dataclass(frozen=True)
+class SegmentStats:
+    """Per-segment symbolic statistics, mergeable **by addition**.
+
+    ``pred_rows[p]`` counts the segment's valid relationship rows with label
+    ``p``; ``vid_lo``/``vid_hi`` and ``fid_lo``/``fid_hi`` bracket the
+    segment's row coordinates (empty ranges use the sentinels above). Batches
+    fold in with ``+`` — counts add, histograms add elementwise, ranges take
+    min/max — so sealing a segment never recomputes anything and totals over
+    all segments equal one monolithic recompute exactly.
+    """
+
+    ent_rows: int = 0
+    rel_rows: int = 0
+    pred_rows: Tuple[int, ...] = ()
+    vid_lo: int = _RANGE_EMPTY_LO
+    vid_hi: int = -1
+    fid_lo: int = _RANGE_EMPTY_LO
+    fid_hi: int = -1
+
+    def __add__(self, other: "SegmentStats") -> "SegmentStats":
+        pa, pb = self.pred_rows, other.pred_rows
+        if len(pa) < len(pb):
+            pa = pa + (0,) * (len(pb) - len(pa))
+        elif len(pb) < len(pa):
+            pb = pb + (0,) * (len(pa) - len(pb))
+        return SegmentStats(
+            ent_rows=self.ent_rows + other.ent_rows,
+            rel_rows=self.rel_rows + other.rel_rows,
+            pred_rows=tuple(a + b for a, b in zip(pa, pb)),
+            vid_lo=min(self.vid_lo, other.vid_lo),
+            vid_hi=max(self.vid_hi, other.vid_hi),
+            fid_lo=min(self.fid_lo, other.fid_lo),
+            fid_hi=max(self.fid_hi, other.fid_hi))
+
+    @property
+    def fid_span(self) -> int:
+        """Frames spanned by the segment's relationship rows (0 if empty)."""
+        return max(0, self.fid_hi - self.fid_lo + 1)
+
+    @classmethod
+    def of_batch(cls, ent_vids, rel_rows, num_predicates: int
+                 ) -> "SegmentStats":
+        """Statistics of one appended batch, computed on host from the
+        ingest inputs (the rows are host arrays at append time — no device
+        work, no full-table scan)."""
+        ent_vids = np.asarray(ent_vids).reshape(-1)
+        rel_rows = np.asarray(rel_rows).reshape(-1, 5) if np.size(rel_rows) \
+            else np.zeros((0, 5), np.int64)
+        hist = np.bincount(np.clip(rel_rows[:, 3], 0, num_predicates - 1),
+                           minlength=num_predicates) if len(rel_rows) else \
+            np.zeros((num_predicates,), np.int64)
+        vids = np.concatenate([ent_vids, rel_rows[:, 0]])
+        return cls(
+            ent_rows=int(ent_vids.size),
+            rel_rows=int(len(rel_rows)),
+            pred_rows=tuple(int(x) for x in hist),
+            vid_lo=int(vids.min()) if vids.size else _RANGE_EMPTY_LO,
+            vid_hi=int(vids.max()) if vids.size else -1,
+            fid_lo=int(rel_rows[:, 1].min()) if len(rel_rows)
+            else _RANGE_EMPTY_LO,
+            fid_hi=int(rel_rows[:, 1].max()) if len(rel_rows) else -1)
+
+
+@dataclass(frozen=True)
+class StoreSegment:
+    """One immutable unit of the segmented store: a contiguous row range
+    over the global entity and relationship banks (rows are append-only, so
+    a sealed range — and the int8 bank rows backing it — never changes),
+    plus its accumulated :class:`SegmentStats`."""
+
+    sid: int
+    ent_start: int
+    ent_stop: int
+    rel_start: int
+    rel_stop: int
+    sealed: bool
+    stats: SegmentStats
+
+    @property
+    def ent_rows(self) -> int:
+        return self.ent_stop - self.ent_start
+
+    @property
+    def rel_rows(self) -> int:
+        return self.rel_stop - self.rel_start
+
+
 @dataclass
 class VideoStores:
     entities: EntityStore
@@ -159,6 +264,13 @@ class VideoStores:
     frames_per_segment: int
     # (vid, eid) -> description (host metadata, for display + VLM prompts)
     entity_desc: Dict[tuple, str] = dataclasses.field(default_factory=dict)
+    # segmented streaming layout: sealed segments + at most one active
+    # (unsealed) tail segment; empty on hand-built stores (treated as one
+    # monolithic segment everywhere)
+    segments: Tuple[StoreSegment, ...] = ()
+    # bumped by every append_stores/seal_stores — cache-invalidation key for
+    # engines' stats snapshots and compiled physical pipelines
+    store_version: int = 0
 
 
 def _pad_rows(arr: np.ndarray, capacity: int) -> np.ndarray:
@@ -229,7 +341,12 @@ def _insert_i8(bank: Optional[Int8Rows], new_emb: jax.Array, s) -> \
 
 def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
                     ) -> EntityStore:
-    """Incremental ingest: write new rows into spare capacity."""
+    """Incremental ingest: write new rows into spare capacity.
+
+    Radix-pack bounds are validated over the **appended rows only** —
+    existing rows were validated when they were appended (rows are
+    append-only and immutable), so per-append validation cost is O(batch),
+    not O(table). Errors still name the offending column."""
     n_new = vids.shape[0]
     start = int(np.asarray(store.table.count()))
     if start + n_new > store.capacity:
@@ -251,8 +368,120 @@ def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
                        image_i8=_insert_i8(store.image_i8, image_emb, s))
 
 
+# ---------------------------------------------------------------------------
+# segmented streaming API
+# ---------------------------------------------------------------------------
+def _bootstrap_segments(stores: "VideoStores") -> Tuple[StoreSegment, ...]:
+    """Segment table for a store built before (or without) segmentation:
+    one sealed segment covering every existing row, stats recomputed once on
+    host (the only place a full-table stat scan is ever paid)."""
+    if stores.segments:
+        return stores.segments
+    ent_n = int(np.asarray(stores.entities.table.count()))
+    rel = stores.relationships.table
+    rel_valid = np.asarray(rel.valid)
+    rel_n = int(rel_valid.sum())
+    if ent_n == 0 and rel_n == 0:
+        return ()
+    rows = np.stack([np.asarray(rel[k])[:rel_n] for k in REL_SCHEMA], axis=1)
+    stats = SegmentStats.of_batch(
+        np.asarray(stores.entities.table["vid"])[:ent_n], rows,
+        len(stores.predicates.labels))
+    return (StoreSegment(0, 0, ent_n, 0, rel_n, sealed=True, stats=stats),)
+
+
+def append_stores(stores: "VideoStores", vids, eids, text_emb, image_emb,
+                  rel_rows, *, entity_desc: Optional[Dict[tuple, str]] = None,
+                  num_segments: Optional[int] = None,
+                  seal: bool = False) -> "VideoStores":
+    """Append one ingest batch into the store's **active segment**.
+
+    Entity/relationship rows land in spare capacity (only the appended rows
+    are validated against the radix-pack bounds — cost is O(batch), not
+    O(table)); the batch's :class:`SegmentStats` are folded into the active
+    segment by addition. If the last segment is sealed (or the store has
+    none yet... the first append after a plain ``ingest``), a fresh active
+    segment opens at the current row watermarks. ``seal=True`` seals the
+    active segment after the append (a later append opens a new one).
+    Returns a new ``VideoStores`` with ``store_version + 1``.
+    """
+    vids = np.asarray(vids)
+    rel_rows = (np.asarray(rel_rows) if np.size(rel_rows)
+                else np.zeros((0, 5), np.int32))
+    segments = list(_bootstrap_segments(stores))
+    ent_start = segments[-1].ent_stop if segments else 0
+    rel_start = segments[-1].rel_stop if segments else 0
+
+    entities = append_entities(stores.entities, vids, np.asarray(eids),
+                               text_emb, image_emb) if len(vids) \
+        else stores.entities
+    relationships = append_relationships(stores.relationships, rel_rows) \
+        if len(rel_rows) else stores.relationships
+
+    batch = SegmentStats.of_batch(vids, rel_rows,
+                                  len(stores.predicates.labels))
+    if segments and not segments[-1].sealed:
+        active = segments[-1]
+        segments[-1] = dataclasses.replace(
+            active, ent_stop=active.ent_stop + len(vids),
+            rel_stop=active.rel_stop + len(rel_rows),
+            stats=active.stats + batch, sealed=seal)
+    else:
+        segments.append(StoreSegment(
+            sid=len(segments), ent_start=ent_start,
+            ent_stop=ent_start + len(vids), rel_start=rel_start,
+            rel_stop=rel_start + len(rel_rows), sealed=seal, stats=batch))
+
+    desc = dict(stores.entity_desc)
+    if entity_desc:
+        desc.update(entity_desc)
+    n_seg = max(stores.num_segments,
+                int(vids.max()) + 1 if vids.size else 0,
+                int(rel_rows[:, 0].max()) + 1 if len(rel_rows) else 0,
+                num_segments or 0)
+    return VideoStores(entities=entities, relationships=relationships,
+                       predicates=stores.predicates, num_segments=n_seg,
+                       frames_per_segment=stores.frames_per_segment,
+                       entity_desc=desc, segments=tuple(segments),
+                       store_version=stores.store_version + 1)
+
+
+def seal_stores(stores: "VideoStores") -> "VideoStores":
+    """Seal the active segment (no-op if every segment is already sealed).
+    Sealing recomputes nothing — the segment's stats were accumulated by
+    addition as its batches arrived."""
+    segments = _bootstrap_segments(stores)
+    if not segments or segments[-1].sealed:
+        if segments is not stores.segments:
+            return dataclasses.replace(stores, segments=segments,
+                                       store_version=stores.store_version + 1)
+        return stores
+    sealed = segments[:-1] + (dataclasses.replace(segments[-1], sealed=True),)
+    return dataclasses.replace(stores, segments=sealed,
+                               store_version=stores.store_version + 1)
+
+
+def entity_search_bounds(stores: "VideoStores") -> Tuple[Tuple[int, int], ...]:
+    """Per-segment entity row ranges for the segmented top-k search.
+
+    Consecutive ``(start, stop)`` ranges covering the whole bank: segment
+    boundaries at each segment's first row, with the last range extended to
+    full capacity so the (invalid-masked) spare tail keeps the same
+    tie-break behavior as a monolithic scan. A single range means the store
+    is effectively monolithic and callers should use the plain path.
+    """
+    segs = stores.segments
+    cap = stores.entities.capacity
+    if len(segs) <= 1:
+        return ((0, cap),)
+    starts = [s.ent_start for s in segs] + [cap]
+    return tuple((a, b) for a, b in zip(starts, starts[1:]) if b > a)
+
+
 def append_relationships(store: RelationshipStore, rows: np.ndarray
                          ) -> RelationshipStore:
+    """Incremental ingest; like :func:`append_entities`, pack-bounds
+    validation covers the appended rows only."""
     m_new = rows.shape[0]
     start = int(np.asarray(store.table.count()))
     if start + m_new > store.capacity:

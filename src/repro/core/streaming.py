@@ -1,0 +1,486 @@
+"""Incremental continuous queries over segmented streaming stores.
+
+A :class:`Subscription` is a standing VMR query: register it once
+(``Session.subscribe`` / ``OPTIONS follow=true``), then every time new
+video lands (``append_stores`` / ``ingest_incremental`` bumps
+``store_version``) call :meth:`Subscription.refresh` — it re-evaluates the
+query **only against the delta** and merges into the prior result, while
+the returned ``QueryResult`` stays **bit-identical** to one cold
+``Session.query`` over the final store (pinned by a hypothesis property
+over randomized append schedules).
+
+The exactness argument, stage by stage:
+
+  * **Entity search.** The delta's top-k (appended rows only) merged with
+    the prior top-k is the global top-k: any global winner is a winner of
+    its half, and a score-stable merge that keeps the lower-index half
+    first reproduces ``lax.top_k``'s lowest-index tie order bitwise.
+  * **Candidate stability.** Appended relationship rows carry *new* vids,
+    so a candidate pair ``(vid, eid)`` with ``vid`` at or below the scanned
+    watermark is the only kind that can affect already-scanned rows. If the
+    merged candidate set restricted to the watermark is unchanged, every
+    old row's mask bit is unchanged; if a new entity *displaces* such a
+    pair from the top-k, the subscription falls back to a full rebuild
+    (counted in ``SubscriptionStats.full_rebuilds``) — rarer as the store
+    grows, and still exact.
+  * **Symbolic masks / bitmaps.** Rows are append-only and evaluated
+    independently; presence bitmaps are OR-scatters, so
+    ``old | delta == full``. Segments the plan-time pruning pass
+    (``repro.core.physical.prune``) rejects are skipped — each rule proves
+    their reach rows are all-False, which is exactly what the untouched
+    state already holds for them.
+  * **Verification.** Verdicts are memoized by row *content*; with a
+    deterministic verifier a memo hit is bit-identical to re-verification,
+    and each unique content costs one VLM call across the subscription's
+    lifetime — the same total a cold content-deduped pass would pay.
+  * **Temporal chain.** The chain DP is independent per video segment, so
+    reach is recomputed only for the frontier — the vid suffix whose
+    bitmaps changed this refresh — and stitched onto the stored prefix.
+
+Stats note: ``QueryResult.stats.sql_rows_per_triple`` counts rows over the
+*scanned* segments (pruned segments' provably-irrelevant rows are not
+counted, unlike a cold run which scans them); the result surface —
+segments, scores, ``end_frames``, SQL — is bitwise cold-run-identical.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import temporal as temporal_lib
+from repro.core.physical import stages
+from repro.core.plan import Plan, pow2_bucket
+from repro.core.query import VMRQuery
+from repro.core.stores import REL_SCHEMA, _bootstrap_segments
+
+
+@dataclass
+class SubscriptionStats:
+    """Lifetime counters for one standing query."""
+
+    refreshes: int = 0
+    full_rebuilds: int = 0          # candidate-displacement fallbacks
+    segments_scanned: int = 0
+    segments_pruned: int = 0
+    rows_scanned: int = 0           # relationship rows actually evaluated
+    rows_pruned: int = 0            # rows skipped via segment pruning
+    vlm_calls: int = 0              # verifier calls (memo hits cost none)
+
+
+@dataclass
+class _Bank:
+    """Merged global top-k state for one embedding bank (text / image)."""
+
+    scores: np.ndarray              # (U, k) fp32, global top-k so far
+    idx: np.ndarray                 # (U, k) int32 global row ids
+
+
+@dataclass
+class _State:
+    e_hi: int                       # entity rows folded into the top-k
+    r_hi: int                       # relationship rows decided (scanned+pruned)
+    wm: int                         # max vid among *scanned* rel rows
+    banks: Dict[str, _Bank]
+    ent_vid: np.ndarray             # host mirrors of the entity id columns
+    ent_eid: np.ndarray
+    bitmaps: object                 # (bucket, V, F) device bool, cumulative
+    reach: object                   # (V, F) device bool
+    counts: np.ndarray              # (bucket,) cumulative per-triple rows
+    refine_candidates: int = 0
+    refine_passed: int = 0
+    # unique row contents counted into refine_candidates since the last
+    # state reset (the memo survives resets; this set keeps the counters
+    # cold-run-comparable after a rebuild)
+    seen_keys: Set[tuple] = field(default_factory=set)
+    pairs_at_wm: Dict[str, List[frozenset]] = field(default_factory=dict)
+    # row ranges skipped under a pruning decision, per segment sid. Stats
+    # grow monotonically, so decisions only ever flip pruned -> scanned
+    # (e.g. the active segment gains rows, or a new neighbor breaks the
+    # vid-ownership condition); these ranges are scanned the moment their
+    # segment's decision flips, keeping the skip exactly result-invisible.
+    pruned_ranges: Dict[int, List[Tuple[int, int]]] = field(
+        default_factory=dict)
+
+
+def _merge_topk(old: _Bank, s_new: np.ndarray, i_new: np.ndarray,
+                k: int) -> _Bank:
+    """Exact global top-k from two exact partial top-ks.
+
+    Stable sort on descending score keeps the concatenation order on ties;
+    the old half's (lower) indices come first, reproducing ``lax.top_k``'s
+    lowest-index-first tie-breaking over the union."""
+    s = np.concatenate([old.scores, s_new], axis=1)
+    i = np.concatenate([old.idx, i_new], axis=1)
+    order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    return _Bank(np.take_along_axis(s, order, axis=1),
+                 np.take_along_axis(i, order, axis=1))
+
+
+class Subscription:
+    """A standing query, incrementally re-evaluated on store appends.
+
+    ``refresh()`` returns the current :class:`QueryResult` (recomputing
+    only if ``store_version`` moved); ``result`` holds the last one.
+    Budgeted-cascade plans (``verify_budget > 0``) are supported but the
+    incremental path verifies its (few) new candidate rows in one memoized
+    pass per refresh instead of cascading — results are exact either way.
+    """
+
+    def __init__(self, engine, query: VMRQuery):
+        self.engine = engine
+        self.query = query
+        self.result = None
+        self.stats = SubscriptionStats()
+        self._version: Optional[int] = None
+        self._memo: Dict[tuple, bool] = {}
+        self._state: Optional[_State] = None
+        # memoized runtime predicate candidate arrays (store-independent)
+        self._pred_arrays = None
+
+    # -- public API --------------------------------------------------------
+    @property
+    def version(self) -> Optional[int]:
+        """Store version of the last refresh (None before the first)."""
+        return self._version
+
+    @property
+    def pending(self) -> bool:
+        """True when the engine's store moved past the last refresh."""
+        return self._version != self.engine.store_version
+
+    def refresh(self):
+        """Bring the result up to date with the engine's current stores."""
+        engine = self.engine
+        version = engine.store_version
+        if self.result is not None and version == self._version:
+            return self.result
+        t0 = time.perf_counter()
+        plan = engine.plan_for(self.query)
+        pipe = engine.physical_for(plan)
+        segs = engine.stores.segments or _bootstrap_segments(engine.stores)
+        result = self._evaluate(plan, pipe, segs)
+        self._version = version
+        self.result = result
+        self.stats.refreshes += 1
+        result.stats.stage_seconds["refresh"] = time.perf_counter() - t0
+        return result
+
+    # -- incremental evaluation -------------------------------------------
+    def _evaluate(self, plan: Plan, pipe, segs):
+        from repro.core.executor import QueryResult, QueryStats
+
+        engine = self.engine
+        st_prev = self._state
+        ent = engine.stores.entities
+        em, ts = plan.entity_match, plan.triple_select
+        ent_stop = segs[-1].ent_stop if segs else 0
+
+        banks, ok_union, idx_union = self._entity_candidates(
+            plan, st_prev, ent, ent_stop)
+
+        # candidate-stability check: a displaced pair at or below the
+        # scanned-vid watermark invalidates old masks -> full rebuild
+        ent_vid, ent_eid = self._grow_entity_mirrors(st_prev, ent, ent_stop)
+        cvids = ent_vid[np.clip(idx_union, 0, ent.capacity - 1)]
+        ceids = ent_eid[np.clip(idx_union, 0, ent.capacity - 1)]
+        pairs_now = self._pairs_at_watermark(
+            cvids, ceids, ok_union, st_prev.wm if st_prev else -1)
+        rebuild = st_prev is None
+        if not rebuild and pairs_now != st_prev.pairs_at_wm["union"]:
+            rebuild = True
+            self._state = st_prev = None
+            self.stats.full_rebuilds += 1
+
+        V, F = plan.num_segments, plan.frames_per_segment
+        bucket = ts.bucket
+        if rebuild:
+            bitmaps = jnp.zeros((bucket, V, F), bool)
+            reach = jnp.zeros((V, F), bool)
+            counts = np.zeros((bucket,), np.int64)
+            r_lo, wm = 0, -1
+            refine_candidates = refine_passed = 0
+            seen_keys: Set[tuple] = set()
+            pruned_ranges: Dict[int, List[Tuple[int, int]]] = {}
+        else:
+            bitmaps = self._pad_grid(st_prev.bitmaps, V, axis=1)
+            reach = self._pad_grid(st_prev.reach, V, axis=0)
+            counts = st_prev.counts.copy()
+            r_lo, wm = st_prev.r_hi, st_prev.wm
+            refine_candidates = st_prev.refine_candidates
+            refine_passed = st_prev.refine_passed
+            seen_keys = st_prev.seen_keys
+            pruned_ranges = {sid: list(rs)
+                            for sid, rs in st_prev.pruned_ranges.items()}
+
+        # candidate arrays for the fused delta selection, rows in
+        # declaration order padded to the plan's static bucket; the host
+        # copies also feed the SQL renderer (no device round-trip)
+        width = idx_union.shape[1]
+        host: Dict[str, np.ndarray] = {}
+        dev = {}
+        for name, rows in (("s", ts.subj_row), ("o", ts.obj_row)):
+            for arr, key in ((cvids, "v"), (ceids, "e"), (ok_union, "k")):
+                out = np.zeros((bucket, width), arr.dtype)
+                for t, r in enumerate(rows):
+                    out[t] = arr[r]
+                host[name + key] = out
+                dev[name + key] = jnp.asarray(out)
+        if self._pred_arrays is None:
+            # store-independent (query text x static vocab): once per
+            # subscription, not per refresh
+            self._pred_arrays = engine_pred_arrays(engine, plan)
+        pred_ids, pred_ok, _ = self._pred_arrays
+        m_w = pred_ids.shape[1]
+        pi_h = np.zeros((bucket, m_w), pred_ids.dtype)
+        po_h = np.zeros((bucket, m_w), bool)
+        for t, r in enumerate(ts.pred_row):
+            pi_h[t], po_h[t] = pred_ids[r], pred_ok[r]
+        pi, po = jnp.asarray(pi_h), jnp.asarray(po_h)
+
+        # scan runs over undecided rows, honoring the pruning decisions
+        rel = engine.stores.relationships.table
+        rel_stop = segs[-1].rel_stop if segs else 0
+        changed_lo = V if not rebuild else 0
+        if not rebuild and V > (st_prev.bitmaps.shape[1]
+                                if st_prev else V):
+            changed_lo = min(changed_lo, st_prev.bitmaps.shape[1])
+        by_sid = {seg.sid: seg for seg in segs}
+        runs: List[Tuple[int, int]] = []
+
+        def scan(seg, lo, hi):
+            nonlocal wm, changed_lo
+            self.stats.rows_scanned += hi - lo
+            wm = max(wm, seg.stats.vid_hi)
+            if seg.stats.vid_lo <= seg.stats.vid_hi:
+                changed_lo = min(changed_lo, max(0, seg.stats.vid_lo))
+            runs.append((lo, hi))
+
+        # ranges skipped at an earlier refresh whose pruning decision has
+        # since flipped (stats only grow, so flips are pruned -> scanned)
+        # are scanned NOW — the skip must stay exactly result-invisible
+        for sid in sorted(pruned_ranges):
+            if pipe.segment_decision(sid).scanned:
+                for lo, hi in pruned_ranges.pop(sid):
+                    self.stats.segments_scanned += 1
+                    scan(by_sid[sid], lo, hi)
+        for seg in segs:
+            lo, hi = max(seg.rel_start, r_lo), seg.rel_stop
+            if hi <= lo:
+                continue
+            if not pipe.segment_decision(seg.sid).scanned:
+                self.stats.segments_pruned += 1
+                self.stats.rows_pruned += hi - lo
+                pruned_ranges.setdefault(seg.sid, []).append((lo, hi))
+                continue
+            self.stats.segments_scanned += 1
+            scan(seg, lo, hi)
+        runs.sort()
+        merged: List[Tuple[int, int]] = []
+        for lo, hi in runs:
+            if merged and merged[-1][1] == lo:
+                merged[-1] = (merged[-1][0], hi)
+            else:
+                merged.append((lo, hi))
+        runs = merged
+
+        verify = plan.verify.enabled and engine.verifier is not None
+        for lo, hi in runs:
+            while lo < hi:
+                b = min(pow2_bucket(hi - lo, minimum=8),
+                        rel.capacity - lo)
+                span = min(hi - lo, b)
+                masks, row_counts = stages._delta_triple_selections(
+                    rel["vid"], rel["fid"], rel["sid"], rel["rl"],
+                    rel["oid"], rel.valid, lo, span, b,
+                    dev["sv"], dev["se"], dev["sk"],
+                    dev["ov"], dev["oe"], dev["ok"], pi, po)
+                # counts accumulate PRE-verification, matching the cold
+                # path (its sql_rows_per_triple come off the fused
+                # selection, before VlmVerifyOp)
+                counts[:] += stages.to_host(row_counts)
+                if verify:
+                    masks, n_cand, n_pass = self._verify_delta(
+                        rel, masks, lo, b, seen_keys)
+                    refine_candidates += n_cand
+                    refine_passed += n_pass
+                bitmaps = stages._or_bitmaps(
+                    bitmaps, stages._delta_bitmaps(rel["vid"], rel["fid"],
+                                                   masks, lo, b, V, F))
+                lo += span
+
+        # temporal-chain frontier: recompute reach only for the vid suffix
+        # whose bitmaps changed (chain DP is per-vid independent)
+        gaps = tuple(plan.temporal.gaps)
+        idx_dev = jnp.asarray(np.asarray(plan.conjoin.idx, np.int32))
+        pad_dev = jnp.asarray(np.asarray(plan.conjoin.pad))
+        if changed_lo < V:
+            lo2 = max(0, V - pow2_bucket(max(1, V - changed_lo), minimum=1))
+            sub = stages._reach_from_bitmaps(bitmaps[:, lo2:, :], idx_dev,
+                                             pad_dev, gaps)
+            reach = jnp.concatenate([reach[:lo2], sub], axis=0) if lo2 \
+                else sub
+
+        scores, seg_ids = temporal_lib.rank_segments(reach,
+                                                     plan.temporal.top_k)
+        scores_np = stages.to_host(scores)
+        segs_np = stages.to_host(seg_ids)
+        keep = scores_np > 0
+
+        self._state = _State(
+            e_hi=ent_stop, r_hi=rel_stop, wm=wm, banks=banks,
+            ent_vid=ent_vid, ent_eid=ent_eid, bitmaps=bitmaps, reach=reach,
+            counts=counts, refine_candidates=refine_candidates,
+            refine_passed=refine_passed, seen_keys=seen_keys,
+            pairs_at_wm={"union": self._pairs_at_watermark(
+                cvids, ceids, ok_union, wm)},
+            pruned_ranges=pruned_ranges)
+
+        n_triples = len(ts.triples)
+        stats = QueryStats(
+            entity_candidates={
+                name: int(ok_union[row].sum())
+                for name, row in zip(em.names, em.rows)},
+            sql_rows_per_triple=[int(c) for c in counts[:n_triples]],
+            refine_candidates=refine_candidates,
+            refine_passed=refine_passed,
+            refine_verified=refine_candidates,
+            vlm_calls=self.stats.vlm_calls,
+            frames_scanned_equivalent=V * F)
+        renderer = stages.make_sql_renderer(
+            list(range(n_triples)), host["sv"], host["se"], host["sk"],
+            host["ov"], host["oe"], host["ok"], pi_h, po_h,
+            engine.stores.predicates.labels)
+        return QueryResult(
+            segments=[int(v) for v in segs_np[keep]],
+            scores=[int(s) for s in scores_np[keep]],
+            end_frames=stages.to_host(reach),
+            sql_renderer=renderer, stats=stats)
+
+    # -- helpers -----------------------------------------------------------
+    def _entity_candidates(self, plan: Plan, st_prev: Optional[_State],
+                           ent, ent_stop: int):
+        """Merged global entity top-k per bank + the per-text-row candidate
+        union (text columns first, then image — the cold operator's
+        layout)."""
+        engine = self.engine
+        em = plan.entity_match
+        embed = engine._embed
+        specs = [("text", ent.text_emb, ent.text_i8,
+                  jnp.asarray(embed.embed_texts(list(em.texts))))]
+        if em.image_search:
+            specs.append(("image", ent.image_emb, ent.image_i8,
+                          jnp.asarray(embed.embed_for_image(list(em.texts)))))
+        banks: Dict[str, _Bank] = {}
+        for name, emb, i8, q_emb in specs:
+            prev = st_prev.banks.get(name) if st_prev else None
+            if prev is None:
+                s, i = engine._search(q_emb, emb, i8, ent.table.valid, em.k)
+                banks[name] = _Bank(stages.to_host(s), stages.to_host(i))
+            elif ent_stop > st_prev.e_hi:
+                start = st_prev.e_hi
+                b = min(pow2_bucket(ent_stop - start, minimum=8),
+                        ent.capacity - start)
+                s, i = stages._entity_match_delta(
+                    q_emb, emb, i8, ent.table.valid, start, em.k,
+                    engine.search_mode, engine.use_kernels, b)
+                banks[name] = _merge_topk(prev, stages.to_host(s),
+                                          stages.to_host(i), em.k)
+            else:
+                banks[name] = prev
+        tb = banks["text"]
+        idx_union, scores = tb.idx, tb.scores
+        ok_union = scores >= em.text_threshold
+        if em.image_search:
+            ib = banks["image"]
+            idx_union = np.concatenate([idx_union, ib.idx], axis=1)
+            ok_union = np.concatenate(
+                [ok_union, ib.scores >= em.image_threshold], axis=1)
+        return banks, ok_union, idx_union
+
+    def _grow_entity_mirrors(self, st_prev: Optional[_State], ent,
+                             ent_stop: int):
+        """Host mirrors of the entity id columns, grown by the delta."""
+        if st_prev is None:
+            vid = stages.to_host(ent.table["vid"])
+            eid = stages.to_host(ent.table["eid"])
+            return vid, eid
+        vid, eid = st_prev.ent_vid, st_prev.ent_eid
+        if ent_stop > st_prev.e_hi:
+            vid = vid.copy()
+            eid = eid.copy()
+            sl = slice(st_prev.e_hi, ent_stop)
+            vid[sl] = stages.to_host(ent.table["vid"][sl])
+            eid[sl] = stages.to_host(ent.table["eid"][sl])
+        return vid, eid
+
+    @staticmethod
+    def _pairs_at_watermark(cvids, ceids, ok, wm: int) -> List[frozenset]:
+        """Per text-row effective candidate pairs restricted to vids at or
+        below the scanned watermark — the old-mask invariance witness."""
+        out = []
+        for v, e, k in zip(cvids, ceids, ok):
+            sel = k & (v <= wm)
+            out.append(frozenset(zip(v[sel].tolist(), e[sel].tolist())))
+        return out
+
+    def _verify_delta(self, rel, masks, lo: int, b: int,
+                      seen: Set[tuple]):
+        """Content-memoized verification of the delta window's candidate
+        rows. Verdicts come from the lifetime memo (one VLM call per unique
+        content, ever); ``seen`` tracks contents counted into the
+        per-state refine counters. Returns (masks & keep, new_uniques,
+        new_passed)."""
+        engine = self.engine
+        masks_np = stages.to_host(masks)
+        any_mask = masks_np.any(axis=0)
+        rows_idx = np.nonzero(any_mask)[0]
+        if len(rows_idx) == 0:
+            return masks, 0, 0
+        cols = {k: stages.to_host(rel[k][lo:lo + b]) for k in REL_SCHEMA}
+        rows = np.stack([cols[k][rows_idx] for k in REL_SCHEMA], axis=1)
+        uniq, inv = np.unique(rows, axis=0, return_inverse=True)
+        keys = [tuple(int(x) for x in u) for u in uniq]
+        unknown = [j for j, key in enumerate(keys) if key not in self._memo]
+        if unknown:
+            verdicts = engine.verifier.verify(uniq[unknown])
+            if len(verdicts) != len(unknown):
+                raise ValueError(
+                    f"verifier returned {len(verdicts)} verdicts for "
+                    f"{len(unknown)} rows")
+            for j, vd in zip(unknown, verdicts):
+                self._memo[keys[j]] = bool(vd)
+            self.stats.vlm_calls = getattr(engine.verifier, "calls",
+                                           self.stats.vlm_calls)
+        fresh = [key for key in keys if key not in seen]
+        seen.update(fresh)
+        n_passed = sum(self._memo[key] for key in fresh)
+        verdict_u = np.array([self._memo[key] for key in keys], bool)
+        keep = np.zeros((b,), bool)
+        keep[rows_idx] = verdict_u[inv]
+        return (stages._apply_keep(masks, jnp.asarray(keep)), len(fresh),
+                int(n_passed))
+
+    @staticmethod
+    def _pad_grid(arr, size: int, axis: int):
+        """Pad a (V, ...) grid array with False rows up to the grown grid."""
+        cur = arr.shape[axis]
+        if cur >= size:
+            return arr
+        pad = [(0, 0)] * arr.ndim
+        pad[axis] = (0, size - cur)
+        return jnp.pad(arr, pad)
+
+
+def engine_pred_arrays(engine, plan: Plan):
+    """Runtime predicate candidate arrays (ids, ok, vals) for a plan —
+    delegates to the one shared implementation
+    (``stages.predicate_candidates``), served through the engine's embed
+    cache so repeated refreshes reuse the embedding rows."""
+    pm = plan.predicate_match
+    return stages.predicate_candidates(
+        engine._embed, engine.stores.predicates.embeddings, pm.texts,
+        pm.m, pm.threshold)

@@ -15,7 +15,7 @@ from repro.core.query import TemporalConstraint, VMRQuery
 _DEFAULTS = {f.name: f.default for f in dataclasses.fields(VMRQuery)
              if f.name in ("top_k", "text_threshold", "image_threshold",
                            "image_search", "predicate_top_m",
-                           "verify_budget")}
+                           "verify_budget", "follow")}
 
 
 def _format_constraint(c: TemporalConstraint) -> str:

@@ -73,6 +73,7 @@ _OPTIONS = {
     "image_search": None,          # bool, parsed specially
     "predicate_top_m": int,
     "verify_budget": int,          # >0 enables the lazy VLM cascade
+    "follow": None,                # bool: continuous (standing) query
 }
 
 

@@ -58,6 +58,48 @@ def topk_similarity(queries, db, db_valid, k: int, *, use_kernels: bool = False,
     return topk_similarity_ref(queries, db, db_valid, k)
 
 
+def topk_similarity_segmented(queries, db, db_valid, k: int, bounds,
+                              *, use_kernels: bool = False,
+                              mode: str = "fp32", i8=None):
+    """Per-segment top-k with a fused cross-segment merge — bit-identical
+    to one monolithic ``topk_similarity`` sweep.
+
+    ``bounds`` is the store's ``entity_search_bounds``: contiguous
+    ``(start, stop)`` row ranges covering the whole bank. Each range runs
+    its own top-``min(k, size)`` (either mode; the int8 banks slice
+    row-wise, exactly like the fp32 rows — per-row quantization makes the
+    slice *be* the segment's bank), local indices are remapped to global
+    rows by adding the range start, and one final ``lax.top_k`` merges the
+    partials. Exactness: any global top-k row is inside its own segment's
+    top-k; partials concatenate in ascending-global-index order and
+    ``lax.top_k`` breaks ties by position, so the merged (scores, idx)
+    reproduce the monolithic scan's lowest-index-first tie order bitwise.
+    Intended to be called under jit with static ``bounds`` (see
+    ``repro.core.physical.stages._entity_match_segmented``).
+    """
+    if len(bounds) <= 1:
+        return topk_similarity(queries, db, db_valid, k,
+                               use_kernels=use_kernels, mode=mode, i8=i8)
+    parts_s, parts_i = [], []
+    for start, stop in bounds:
+        size = stop - start
+        dbs = jax.lax.slice_in_dim(db, start, stop)
+        dvs = jax.lax.slice_in_dim(db_valid, start, stop)
+        i8s = None
+        if i8 is not None:
+            i8s = type(i8)(jax.lax.slice_in_dim(i8.codes, start, stop),
+                           jax.lax.slice_in_dim(i8.scale, start, stop),
+                           jax.lax.slice_in_dim(i8.err, start, stop))
+        s, i = topk_similarity(queries, dbs, dvs, min(k, size),
+                               use_kernels=use_kernels, mode=mode, i8=i8s)
+        parts_s.append(s)
+        parts_i.append(i + start)
+    cat_s = jnp.concatenate(parts_s, axis=1)
+    cat_i = jnp.concatenate(parts_i, axis=1)
+    vals, pos = jax.lax.top_k(cat_s, k)
+    return vals, jnp.take_along_axis(cat_i, pos, axis=1)
+
+
 def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
                             shard_axes=("data",), *, use_kernels: bool = False,
                             mode: str = "fp32", i8=None):

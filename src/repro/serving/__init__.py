@@ -3,4 +3,5 @@ from repro.serving.engine import (AdmitResult, Request,  # noqa: F401
 from repro.serving.frontend import QueryFrontend, QueryTicket  # noqa: F401
 from repro.serving.scheduler import (BatchBudget,  # noqa: F401
                                      CostBasedAdmission, Scheduler,
-                                     StragglerMitigator)
+                                     StragglerMitigator, SubscriptionDrain,
+                                     SubscriptionTicket)

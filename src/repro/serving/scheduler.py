@@ -13,6 +13,13 @@ batch until a device-bytes / rows / count budget is reached — a batch of
 cheap single-triple queries packs deep, one giant multi-frame query takes a
 slot of its own. ``QueryFrontend`` accepts it as its admission policy.
 
+``SubscriptionDrain`` plugs **continuous queries** into the same admission
+machinery: on every store update it enqueues the stale standing
+subscriptions (``Session.subscribe``), and ``drain``/``step`` pops refresh
+work FIFO through a ``CostBasedAdmission`` budget — a burst of ingest
+batches can't starve interactive queries, because subscription refreshes
+are priced with exactly the same pipeline-cost currency.
+
 ``StragglerMitigator`` implements the policy layer used at pod scale: per-shard
 step latencies are tracked as an EMA; a shard slower than ``threshold`` × the
 median gets its work speculatively re-issued to the fastest idle shard, first
@@ -127,6 +134,76 @@ class CostBasedAdmission:
         if batch:
             self.batches_admitted += 1
         return batch
+
+
+@dataclass
+class SubscriptionTicket:
+    """One pending standing-query refresh; carries ``.query`` so
+    :class:`CostBasedAdmission` can price it like any other ticket.
+    Staleness is re-derived from ``sub.pending`` at refresh time (a
+    ``refresh()`` on an up-to-date subscription is a no-op)."""
+
+    sub: object                     # repro.core.streaming.Subscription
+
+    @property
+    def query(self):
+        return self.sub.query
+
+
+class SubscriptionDrain:
+    """Drain standing-subscription refresh work through the cost budget.
+
+    ``notify()`` (call after ``Session.update_stores(..., refresh=False)``)
+    enqueues every subscription whose last refresh predates the current
+    ``store_version``; ``step()`` admits one batch — through the
+    :class:`CostBasedAdmission` policy when one is configured, by count
+    otherwise — and refreshes it. FIFO, arrival order preserved, and the
+    head ticket is always admitted (the admission policy's no-livelock
+    guarantee applies unchanged).
+    """
+
+    def __init__(self, session, *, admission: Optional[CostBasedAdmission]
+                 = None, max_admit: int = 4):
+        self.session = session
+        self.admission = admission
+        self.max_admit = max_admit
+        self.waiting: Deque[SubscriptionTicket] = deque()
+        self.batches_run = 0
+        self.refreshed = 0
+
+    def notify(self) -> int:
+        """Enqueue stale subscriptions; returns how many were enqueued."""
+        queued = {id(t.sub) for t in self.waiting}
+        n = 0
+        for sub in self.session.subscriptions:
+            if sub.pending and id(sub) not in queued:
+                self.waiting.append(SubscriptionTicket(sub))
+                n += 1
+        return n
+
+    def _next_batch(self) -> List[SubscriptionTicket]:
+        if self.admission is not None:
+            return self.admission.take(self.waiting)
+        return [self.waiting.popleft()
+                for _ in range(min(self.max_admit, len(self.waiting)))]
+
+    def step(self) -> int:
+        """Admit and refresh one batch. Returns the batch size."""
+        if not self.waiting:
+            return 0
+        batch = self._next_batch()
+        for ticket in batch:
+            ticket.sub.refresh()
+            self.refreshed += 1
+        self.batches_run += 1
+        return len(batch)
+
+    def drain(self) -> int:
+        """Run batches until the queue empties; returns refreshes done."""
+        done = 0
+        while self.waiting:
+            done += self.step()
+        return done
 
 
 @dataclass

@@ -25,12 +25,14 @@ reports whether it hit).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Union
 
 from repro.core.executor import LazyVLMEngine, QueryResult
 from repro.core.plan import Plan, PlanCache
 from repro.core.query import VMRQuery
+from repro.core.streaming import Subscription
 from repro.lang import parse_query
 
 QueryLike = Union[str, VMRQuery]
@@ -81,6 +83,8 @@ class Session:
 
     def __init__(self, engine: LazyVLMEngine):
         self.engine = engine
+        # standing queries registered via subscribe() / follow=true
+        self.subscriptions: List[Subscription] = []
 
     # -- query entry points ------------------------------------------------
     def resolve(self, query: QueryLike) -> VMRQuery:
@@ -95,6 +99,43 @@ class Session:
         """Batched execution with fused stage launches (see
         ``LazyVLMEngine.execute_batch``)."""
         return self.engine.query_batch([self.resolve(q) for q in queries])
+
+    # -- continuous queries ------------------------------------------------
+    def subscribe(self, query: QueryLike) -> Subscription:
+        """Register a standing (continuous) query.
+
+        The returned :class:`Subscription` is evaluated immediately and
+        re-evaluated **incrementally** — only against unpruned new store
+        segments plus the temporal-chain frontier — on every
+        :meth:`update_stores`, with results pinned bit-identical to a cold
+        ``query()`` over the store at that moment. Query text may opt in
+        via ``OPTIONS: follow = true``; ``subscribe`` sets the flag either
+        way."""
+        q = self.resolve(query)
+        if not q.follow:
+            q = dataclasses.replace(q, follow=True)
+        sub = Subscription(self.engine, q)
+        self.subscriptions.append(sub)
+        sub.refresh()
+        return sub
+
+    def update_stores(self, stores, *, refresh: bool = True
+                      ) -> List[Subscription]:
+        """Point the session at an incrementally-updated store
+        (``append_stores``/``ingest_incremental`` output).
+
+        The engine's stats snapshot and compiled pipelines re-cost against
+        the new ``store_version`` automatically. With ``refresh=True``
+        every registered subscription is refreshed inline and the
+        refreshed list is returned; pass ``refresh=False`` to defer the
+        work to a ``serving.SubscriptionDrain`` (cost-budgeted
+        admission)."""
+        self.engine.stores = stores
+        pending = [s for s in self.subscriptions if s.pending]
+        if refresh:
+            for sub in pending:
+                sub.refresh()
+        return pending
 
     def explain(self, query: QueryLike, *, analyze: bool = False
                 ) -> Explanation:
@@ -113,12 +154,16 @@ class Session:
             search_mode=self.engine.search_mode)
         pipe = self.engine.physical_for(plan)
         result = None
+        # subscribed (follow=true) queries additionally render segments
+        # scanned vs. pruned per operator (the streaming EXPLAIN artifact)
+        segments = q.follow
         if analyze:
             info: Dict[str, object] = {}
             result = self.engine.execute(plan, _analyze=info)
-            physical = pipe.render(actual=info["actual_rows"])
+            physical = pipe.render(actual=info["actual_rows"],
+                                   segments=segments)
         else:
-            physical = pipe.render()
+            physical = pipe.render(segments=segments)
         return Explanation(plan=plan, tree=plan.render_tree(),
                            sql=plan.sql_templates(),
                            launches=plan.predicted_launches(),

@@ -4,8 +4,12 @@ extraction → stores.
 ``ingest(world, embedder)`` plays the role of the offline pass: per segment,
 per frame, extract the (possibly noisy) scene graph, track entities, embed
 entity descriptions (text) and appearances (image), and build the Entity /
-Relationship stores. ``ingest_incremental`` demonstrates update-friendliness:
-new segments are appended without touching existing rows.
+Relationship stores — as ONE sealed store segment carrying its
+host-accumulated ``SegmentStats``. ``ingest_incremental`` is the streaming
+pass: each call appends a new **sealed segment** into spare capacity
+(``append_stores``) without touching existing rows, bumping
+``store_version`` so engines re-cost pipelines and standing subscriptions
+re-evaluate only the delta (see ``repro.core.streaming``).
 """
 from __future__ import annotations
 
@@ -13,9 +17,9 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.stores import (PredicateVocab, VideoStores,
-                               build_entity_store, build_relationship_store,
-                               append_entities, append_relationships)
+from repro.core.stores import (PredicateVocab, SegmentStats, StoreSegment,
+                               VideoStores, append_stores,
+                               build_entity_store, build_relationship_store)
 from repro.video.synth import PREDICATES, SyntheticWorld
 
 
@@ -67,6 +71,7 @@ def ingest(world: SyntheticWorld, embedder, *,
     pred_emb = embedder.embed_texts(PREDICATES)
     desc_map = {(int(v), int(e)): d
                 for (v, e), d in zip(all_ents, all_descs)}
+    seg_stats = SegmentStats.of_batch(vids, rel_rows, len(PREDICATES))
     return VideoStores(
         entities=entities,
         relationships=relationships,
@@ -74,12 +79,17 @@ def ingest(world: SyntheticWorld, embedder, *,
         num_segments=cfg.num_segments,
         frames_per_segment=cfg.frames_per_segment,
         entity_desc=desc_map,
+        segments=(StoreSegment(0, 0, len(all_ents), 0, len(rel_rows),
+                               sealed=True, stats=seg_stats),),
+        store_version=1,
     )
 
 
 def ingest_incremental(stores: VideoStores, world: SyntheticWorld,
-                       embedder, segment_range: Tuple[int, int]) -> VideoStores:
-    """Append new segments into spare store capacity (no reprocessing)."""
+                       embedder, segment_range: Tuple[int, int], *,
+                       seal: bool = True) -> VideoStores:
+    """Append new video segments into spare store capacity (no reprocessing
+    of existing rows) as one new store segment, sealed by default."""
     lo, hi = segment_range
     rng = np.random.default_rng(world.cfg.seed + 9876 + lo)
     all_ents, all_descs, all_rels = [], [], []
@@ -92,16 +102,13 @@ def ingest_incremental(stores: VideoStores, world: SyntheticWorld,
     img_emb = embedder.embed_texts([d + " appearance" for d in all_descs], rng)
     vids = np.array([v for v, _ in all_ents], np.int32)
     eids = np.array([e for _, e in all_ents], np.int32)
-    entities = append_entities(stores.entities, vids, eids, text_emb, img_emb)
-    rels = append_relationships(
-        stores.relationships,
-        np.array(all_rels, np.int32) if all_rels else np.zeros((0, 5), np.int32))
-    desc_map = dict(stores.entity_desc)
-    for (v, e), d in zip(all_ents, all_descs):
-        desc_map[(int(v), int(e))] = d
-    return VideoStores(entities, rels, stores.predicates,
-                       max(stores.num_segments, hi),
-                       stores.frames_per_segment, desc_map)
+    desc_map = {(int(v), int(e)): d
+                for (v, e), d in zip(all_ents, all_descs)}
+    return append_stores(
+        stores, vids, eids, text_emb, img_emb,
+        np.array(all_rels, np.int32) if all_rels else np.zeros((0, 5),
+                                                               np.int32),
+        entity_desc=desc_map, num_segments=hi, seal=seal)
 
 
 def _round_pow2(n: int) -> int:

@@ -1,0 +1,629 @@
+"""Segmented streaming stores + incremental continuous queries.
+
+The two load-bearing invariants of the streaming refactor, pinned
+property-style (hypothesis where available, seeded loops otherwise):
+
+  * **segmentation transparency** — one monolithic store vs. the same rows
+    sealed across K random segment boundaries yields bit-identical search
+    results, statistics, EXPLAIN cost estimates, and query results;
+  * **incremental == cold** — a subscription refreshed across a randomized
+    append schedule returns results bit-identical to a cold ``query()``
+    over the store at every step.
+
+Plus the satellite regressions: version-keyed physical pipelines re-cost
+after an append that flips selectivity, appends validate only the appended
+rows, the subscribed-query EXPLAIN renders segments scanned vs. pruned
+(golden), and the serving drain pushes subscription refreshes through the
+cost-based admission budget.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.physical import StoreStats, prune_segments
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.core.refine import MockVerifier
+from repro.core import stores as stores_mod
+from repro.core.stores import (SegmentStats, append_stores,
+                               entity_search_bounds, seal_stores)
+from repro.core.streaming import _Bank, _merge_topk
+from repro.semantic import OracleEmbedder
+from repro.semantic.search import topk_similarity_ref, \
+    topk_similarity_segmented
+from repro.serving import BatchBudget, CostBasedAdmission, SubscriptionDrain
+from repro.session import open_video_store
+from repro.video import (PREDICATES, SyntheticWorld, WorldConfig, ingest,
+                         ingest_incremental)
+
+
+# ---------------------------------------------------------------------------
+# fixtures + helpers
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    w = SyntheticWorld(WorldConfig(num_segments=10, frames_per_segment=32,
+                                   objects_per_segment=8, seed=0,
+                                   spurious_prob=0.2))
+    w.stage_event_2_1(vid=6)
+    return w
+
+
+@pytest.fixture(scope="module")
+def clean_world():
+    # spurious_prob=0: scene graphs are rng-independent, so a monolithic
+    # ingest and a chain of incremental ingests produce identical rows
+    w = SyntheticWorld(WorldConfig(num_segments=8, frames_per_segment=16,
+                                   objects_per_segment=6, seed=3))
+    w.stage_event_2_1(vid=5)
+    return w
+
+
+def _emb():
+    return OracleEmbedder(dim=64)
+
+
+def _caps(stores):
+    return dict(entity_capacity=stores.entities.capacity,
+                rel_capacity=stores.relationships.capacity)
+
+
+def _build_split(world, splits, caps):
+    """Ingest ``world`` across the given segment boundaries incrementally."""
+    cuts = [0] + list(splits) + [world.cfg.num_segments]
+    stores = ingest(world, _emb(), segment_range=(cuts[0], cuts[1]), **caps)
+    for lo, hi in zip(cuts[1:], cuts[2:]):
+        stores = ingest_incremental(stores, world, _emb(), (lo, hi))
+    return stores
+
+
+def _assert_same(r1, r2):
+    assert r1.segments == r2.segments
+    assert r1.scores == r2.scores
+    assert (r1.end_frames == r2.end_frames).all()
+    assert r1.sql == r2.sql
+
+
+def _single(da, db, rel, **kw):
+    base = dict(top_k=16, text_threshold=0.9)
+    base.update(kw)
+    return VMRQuery(entities=(Entity("a", da), Entity("b", db)),
+                    relationships=(Relationship("r", PREDICATES[rel]),),
+                    frames=(FrameSpec((Triple("a", "r", "b"),)),), **base)
+
+
+def _descs(world):
+    return sorted({o.description for seg in world.segments for o in seg})
+
+
+# ---------------------------------------------------------------------------
+# store-level segment bookkeeping
+# ---------------------------------------------------------------------------
+def test_append_seal_bookkeeping_and_version(clean_world):
+    caps = dict(entity_capacity=1024, rel_capacity=8192)
+    stores = ingest(clean_world, _emb(), segment_range=(0, 2), **caps)
+    assert stores.store_version == 1
+    assert len(stores.segments) == 1 and stores.segments[0].sealed
+
+    s2 = ingest_incremental(stores, clean_world, _emb(), (2, 4))
+    assert s2.store_version == 2
+    assert len(s2.segments) == 2 and s2.segments[-1].sealed
+    # contiguous row ranges
+    assert s2.segments[1].ent_start == s2.segments[0].ent_stop
+    assert s2.segments[1].rel_start == s2.segments[0].rel_stop
+
+    # unsealed appends extend the active segment; sealing opens a new one
+    s3 = ingest_incremental(s2, clean_world, _emb(), (4, 5), seal=False)
+    s4 = ingest_incremental(s3, clean_world, _emb(), (5, 6), seal=False)
+    assert len(s4.segments) == 3 and not s4.segments[-1].sealed
+    assert s4.segments[-1].stats.rel_rows == (s4.segments[-1].rel_stop
+                                              - s4.segments[-1].rel_start)
+    s5 = seal_stores(s4)
+    assert s5.segments[-1].sealed and s5.store_version == s4.store_version + 1
+    assert seal_stores(s5) is s5                      # idempotent no-op
+
+    bounds = entity_search_bounds(s5)
+    assert bounds[0][0] == 0
+    assert bounds[-1][1] == s5.entities.capacity
+    for (_, b), (c, _) in zip(bounds, bounds[1:]):
+        assert b == c                                 # contiguous cover
+
+
+def test_segment_stats_merge_by_addition():
+    a = SegmentStats.of_batch(np.array([0, 0]),
+                              np.array([[0, 3, 0, 1, 1]]), 4)
+    b = SegmentStats.of_batch(np.array([1]),
+                              np.array([[1, 7, 0, 1, 1],
+                                        [1, 2, 0, 2, 1]]), 4)
+    m = a + b
+    assert m.ent_rows == 3 and m.rel_rows == 3
+    assert m.pred_rows == (0, 2, 1, 0)
+    assert (m.vid_lo, m.vid_hi) == (0, 1)
+    assert (m.fid_lo, m.fid_hi) == (2, 7)
+    assert m.fid_span == 6
+
+
+# ---------------------------------------------------------------------------
+# tentpole invariant 1: segmentation transparency (monolithic == K splits)
+# ---------------------------------------------------------------------------
+def _check_split_equivalence(world, splits, query, search_mode="fp32"):
+    mono = ingest(world, _emb())
+    seg = _build_split(world, splits, _caps(mono))
+    assert len(seg.segments) == len(splits) + 1
+
+    # statistics combine by addition into the monolithic totals
+    st_m, st_s = StoreStats.from_stores(mono), StoreStats.from_stores(seg)
+    assert st_m.pred_rows == st_s.pred_rows
+    assert (st_m.rel_rows, st_m.entity_rows) == (st_s.rel_rows,
+                                                 st_s.entity_rows)
+
+    e_m = LazyVLMEngine(mono, _emb(), search_mode=search_mode)
+    e_s = LazyVLMEngine(seg, _emb(), search_mode=search_mode)
+
+    # per-segment top-k + merge is bitwise the monolithic sweep
+    import jax.numpy as jnp
+    q_emb = jnp.asarray(_emb().embed_texts(query.entity_texts))
+    ent_m, ent_s = mono.entities, seg.entities
+    s1, i1 = e_m._search(q_emb, ent_m.text_emb, ent_m.text_i8,
+                         ent_m.table.valid, 8)
+    s2, i2 = e_s._search(q_emb, ent_s.text_emb, ent_s.text_i8,
+                         ent_s.table.valid, 8)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    # EXPLAIN cost estimates equal (same totals feed the cost model)
+    p_m = e_m.physical_for(e_m.plan_for(query))
+    p_s = e_s.physical_for(e_s.plan_for(query))
+    assert p_m.estimates == p_s.estimates
+    assert p_m.order == p_s.order
+    assert p_m.total_estimate() == p_s.total_estimate()
+
+    _assert_same(e_m.query(query), e_s.query(query))
+
+
+def test_monolithic_vs_segmented_bitwise(clean_world):
+    rng = np.random.default_rng(11)
+    n = clean_world.cfg.num_segments
+    for trial in range(3):
+        k = int(rng.integers(1, 4))
+        splits = sorted(rng.choice(np.arange(1, n), size=k, replace=False))
+        _check_split_equivalence(clean_world, [int(s) for s in splits],
+                                 example_2_1())
+
+
+def test_monolithic_vs_segmented_bitwise_int8(clean_world):
+    _check_split_equivalence(clean_world, [2, 5], example_2_1(),
+                             search_mode="int8")
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_split_equivalence_property(clean_world, data):
+    """Hypothesis property: any segmentation of the same rows is invisible
+    to search results, stats, cost estimates, and query results."""
+    n = clean_world.cfg.num_segments
+    splits = data.draw(st.lists(st.integers(1, n - 1), min_size=0,
+                                max_size=3, unique=True).map(sorted))
+    _check_split_equivalence(clean_world, splits, example_2_1())
+
+
+def test_segmented_topk_matches_ref_oracle():
+    rng = np.random.default_rng(5)
+    db = rng.standard_normal((64, 16)).astype(np.float32)
+    db /= np.linalg.norm(db, axis=1, keepdims=True)
+    q = rng.standard_normal((3, 16)).astype(np.float32)
+    valid = np.ones((64,), bool)
+    valid[50:] = False                       # spare tail
+    import jax.numpy as jnp
+    ref_s, ref_i = topk_similarity_ref(jnp.asarray(q), jnp.asarray(db),
+                                       jnp.asarray(valid), 12)
+    for bounds in (((0, 64),), ((0, 10), (10, 64)),
+                   ((0, 7), (7, 30), (30, 64))):
+        s, i = topk_similarity_segmented(jnp.asarray(q), jnp.asarray(db),
+                                         jnp.asarray(valid), 12, bounds)
+        np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(s))
+        np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(i))
+
+
+def test_merge_topk_matches_global():
+    import jax.numpy as jnp
+    import jax
+    rng = np.random.default_rng(9)
+    scores = rng.choice(np.array([0.1, 0.5, 0.9], np.float32),
+                        size=(2, 24))                  # many ties
+    for cut in (1, 8, 16, 23):
+        g_s, g_i = jax.lax.top_k(jnp.asarray(scores), 6)
+        a_s, a_i = jax.lax.top_k(jnp.asarray(scores[:, :cut]),
+                                 min(6, cut))
+        b_s, b_i = jax.lax.top_k(jnp.asarray(scores[:, cut:]),
+                                 min(6, 24 - cut))
+        merged = _merge_topk(_Bank(np.asarray(a_s), np.asarray(a_i)),
+                             np.asarray(b_s), np.asarray(b_i) + cut, 6)
+        np.testing.assert_array_equal(merged.scores, np.asarray(g_s))
+        np.testing.assert_array_equal(merged.idx, np.asarray(g_i))
+
+
+# ---------------------------------------------------------------------------
+# tentpole invariant 2: incremental subscription == cold re-execution
+# ---------------------------------------------------------------------------
+def _run_schedule(world, query, splits, *, verifier=True, check_every=True):
+    caps = _caps(ingest(world, _emb()))
+    cuts = [0] + list(splits) + [world.cfg.num_segments]
+    stores = ingest(world, _emb(), segment_range=(cuts[0], cuts[1]), **caps)
+    session = open_video_store(
+        stores, _emb(), verifier=MockVerifier(world) if verifier else None)
+    sub = session.subscribe(query)
+    _assert_same(sub.result, _cold(world, stores, query, verifier))
+    for lo, hi in zip(cuts[1:], cuts[2:]):
+        stores = ingest_incremental(stores, world, _emb(), (lo, hi))
+        session.update_stores(stores)
+        if check_every:
+            _assert_same(sub.result, _cold(world, stores, query, verifier))
+    _assert_same(sub.result, _cold(world, stores, query, verifier))
+    return sub
+
+
+def _cold(world, stores, query, verifier):
+    engine = LazyVLMEngine(stores, _emb(),
+                           verifier=MockVerifier(world) if verifier
+                           else None)
+    return engine.query(query)
+
+
+def test_subscription_matches_cold_example_2_1(world):
+    sub = _run_schedule(world, example_2_1(), [3, 5, 6, 9])
+    assert sub.stats.refreshes == 5
+    assert sub.result.segments == [6]          # the staged event surfaces
+
+
+def test_subscription_matches_cold_randomized_schedules(world):
+    rng = np.random.default_rng(42)
+    descs = _descs(world)
+    queries = [
+        example_2_1(),
+        _single(descs[0], descs[1], 0),
+        _single(descs[0], descs[2], 1, image_search=True,
+                image_threshold=0.9),
+        dataclasses.replace(example_2_1(), verify_budget=8),
+    ]
+    n = world.cfg.num_segments
+    for trial, q in enumerate(queries):
+        k = int(rng.integers(1, 4))
+        splits = sorted(int(s) for s in
+                        rng.choice(np.arange(1, n), size=k, replace=False))
+        _run_schedule(world, q, splits, verifier=trial % 2 == 0)
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_subscription_matches_cold_property(world, data):
+    """Hypothesis property: whatever the append schedule, the incremental
+    result surface is bit-identical to cold re-execution."""
+    n = world.cfg.num_segments
+    splits = data.draw(st.lists(st.integers(1, n - 1), min_size=0,
+                                max_size=4, unique=True).map(sorted))
+    _run_schedule(world, example_2_1(), splits,
+                  verifier=data.draw(st.booleans()), check_every=False)
+
+
+def test_subscription_noop_refresh_returns_cached(world):
+    stores = ingest(world, _emb())
+    session = open_video_store(stores, _emb())
+    sub = session.subscribe(example_2_1())
+    r1 = sub.result
+    assert sub.refresh() is r1                 # same version -> cached
+    assert not sub.pending
+
+
+# ---------------------------------------------------------------------------
+# satellite: stale-stats regression (version-keyed physical pipelines)
+# ---------------------------------------------------------------------------
+def _histogram_store(counts, capacity=2048):
+    """A store whose predicate histogram is exactly ``counts``."""
+    emb = _emb()
+    descs = ["obj0", "obj1"]
+    text = emb.embed_texts(descs)
+    stores = stores_mod.VideoStores(
+        entities=stores_mod.build_entity_store(
+            np.array([0, 0]), np.array([0, 1]), text, text, 64),
+        relationships=stores_mod.build_relationship_store(
+            _hist_rows(counts), capacity),
+        predicates=stores_mod.PredicateVocab(
+            list(PREDICATES), emb.embed_texts(list(PREDICATES))),
+        num_segments=4, frames_per_segment=8,
+        entity_desc={(0, 0): "obj0", (0, 1): "obj1"})
+    return seal_stores(stores)                 # bootstrap one sealed segment
+
+
+def _hist_rows(counts):
+    rows = []
+    for rl, c in enumerate(counts):
+        for j in range(c):
+            rows.append((0, j % 8, 0, rl, 1))
+    return np.array(rows, np.int32) if rows else np.zeros((0, 5), np.int32)
+
+
+def test_append_flipping_selectivity_reorders_filters():
+    # predicate 0 common, predicate 1 rare -> t1 runs first
+    stores = _histogram_store([30, 2])
+    engine = LazyVLMEngine(stores, _emb())
+    q = VMRQuery(entities=(Entity("a", "obj0"), Entity("b", "obj1")),
+                 relationships=(Relationship("r0", PREDICATES[0]),
+                                Relationship("r1", PREDICATES[1])),
+                 frames=(FrameSpec((Triple("a", "r0", "b"),
+                                    Triple("a", "r1", "b"))),),
+                 top_k=8, text_threshold=0.9)
+    plan = engine.plan_for(q)
+    pipe1 = engine.physical_for(plan)
+    assert pipe1.order == (1, 0)
+
+    # the append floods predicate 1: selectivity flips
+    flood = np.array([(1, j % 8, 0, 1, 1) for j in range(200)], np.int32)
+    engine.stores = append_stores(stores, np.zeros((0,), np.int32),
+                                  np.zeros((0,), np.int32),
+                                  np.zeros((0, 64), np.float32),
+                                  np.zeros((0, 64), np.float32), flood,
+                                  seal=True)
+    pipe2 = engine.physical_for(plan)          # same plan object, re-costed
+    assert pipe2 is not pipe1
+    assert pipe2.order == (0, 1)               # cost order followed the data
+    assert pipe2.store_version == engine.store_version
+    # plan cache still hits (the logical plan is store-shape keyed only)
+    assert engine.plan_for(q) is plan
+
+
+def test_version_keyed_physical_cache_hits_within_version():
+    stores = _histogram_store([5, 5])
+    engine = LazyVLMEngine(stores, _emb())
+    plan = engine.plan_for(example_2_1())
+    assert engine.physical_for(plan) is engine.physical_for(plan)
+
+
+# ---------------------------------------------------------------------------
+# satellite: appends validate only the appended rows
+# ---------------------------------------------------------------------------
+def test_append_validates_only_new_rows(monkeypatch):
+    stores = _histogram_store([64, 64])        # 128 existing rel rows
+    seen = []
+    real = stores_mod.validate_pack_bounds
+
+    def spy(col, values):
+        seen.append(np.asarray(values).size)
+        return real(col, values)
+
+    monkeypatch.setattr(stores_mod, "validate_pack_bounds", spy)
+    batch = np.array([(2, 1, 0, 0, 1)] * 3, np.int32)
+    append_stores(stores, np.array([2]), np.array([0]),
+                  np.zeros((1, 64), np.float32), np.zeros((1, 64),
+                                                          np.float32),
+                  batch, seal=True)
+    assert seen and max(seen) == 3             # never the whole table
+
+
+def test_append_error_still_names_offending_column():
+    from repro.symbolic.ops import PAIR_RADIX
+    stores = _histogram_store([4, 4])
+    bad = np.array([(0, 0, PAIR_RADIX, 0, 1)], np.int32)   # sid overflows
+    with pytest.raises(ValueError, match="'sid'"):
+        append_stores(stores, np.zeros((0,), np.int32),
+                      np.zeros((0,), np.int32),
+                      np.zeros((0, 64), np.float32),
+                      np.zeros((0, 64), np.float32), bad)
+
+
+# ---------------------------------------------------------------------------
+# segment pruning: rules fire and stay result-invisible
+# ---------------------------------------------------------------------------
+def test_prune_rules(clean_world):
+    caps = dict(entity_capacity=2048, rel_capacity=32768)
+    stores = ingest(clean_world, _emb(), segment_range=(0, 4), **caps)
+    engine = LazyVLMEngine(stores, _emb())
+    plan = engine.plan_for(example_2_1())
+    stats = engine.store_stats
+    decisions = prune_segments(plan, stats,
+                               engine._pred_candidates(plan))
+    assert all(d.scanned for d in decisions)
+
+    # an appended segment holding only rows of a label no triple can
+    # select is predicate-pruned; an empty one is empty-pruned
+    cands = engine._pred_candidates(plan)
+    unrelated = [p for p in range(len(PREDICATES))
+                 if all(p not in row for row in cands)]
+    assert unrelated                           # 7 labels, <= 6 candidates
+    rows = np.array([(4, j, 0, unrelated[0], 1) for j in range(16)],
+                    np.int32)
+    s2 = append_stores(stores, np.array([4]), np.array([0]),
+                       np.zeros((1, 64), np.float32),
+                       np.zeros((1, 64), np.float32), rows, seal=True)
+    s3 = append_stores(s2, np.array([5]), np.array([0]),
+                       np.zeros((1, 64), np.float32),
+                       np.zeros((1, 64), np.float32),
+                       np.zeros((0, 5), np.int32), seal=True)
+    engine.stores = s3
+    pipe = engine.physical_for(plan)
+    reasons = {d.sid: d.reason for d in pipe.segment_plan}
+    assert pipe.segment_decision(0).scanned
+    assert reasons[1].startswith("predicate")
+    assert reasons[2] == "empty"
+
+    # pruning is invisible in the result
+    _assert_same(engine.query(example_2_1()),
+                 LazyVLMEngine(s3, _emb()).query(example_2_1()))
+
+
+def _span_query():
+    """Two-frame chain needing a >= 6-frame span inside one vid."""
+    return VMRQuery(entities=(Entity("a", "obj0"), Entity("b", "obj1")),
+                    relationships=(Relationship("r", PREDICATES[0]),),
+                    frames=(FrameSpec((Triple("a", "r", "b"),)),
+                            FrameSpec((Triple("a", "r", "b"),))),
+                    constraints=(TemporalConstraint(0, 1, min_gap=5),),
+                    top_k=8, text_threshold=0.9)
+
+
+def _ent_batch(vid):
+    e = _emb().embed_texts(["obj0", "obj1"])
+    return np.array([vid, vid]), np.array([0, 1]), e, e
+
+
+def test_straddling_vid_defeats_per_segment_pruning():
+    """Regression: one vid's rows split across two sealed segments — each
+    half's fid span is too short for the chain, but the chain completes
+    across them. The ownership condition must keep both scanned, and the
+    subscription must match cold re-execution at every step."""
+    q = _span_query()
+    session = open_video_store(_histogram_store([6, 6]), _emb())
+    sub = session.subscribe(q)
+    stores = session.stores
+    v, e, te, ie = _ent_batch(1)
+    for fid in (2, 7):          # two appends, same vid, far-apart frames
+        stores = append_stores(
+            stores, *( (v, e, te, ie) if fid == 2 else
+                       (np.zeros((0,), np.int32), np.zeros((0,), np.int32),
+                        np.zeros((0, 64), np.float32),
+                        np.zeros((0, 64), np.float32)) ),
+            np.array([(1, fid, 0, 0, 1)], np.int32), seal=True)
+        session.update_stores(stores)
+        cold = LazyVLMEngine(stores, _emb()).query(q)
+        _assert_same(sub.result, cold)
+    assert 1 in sub.result.segments            # the cross-segment chain
+
+
+def test_active_segment_prune_flip_rescans_skipped_rows():
+    """Regression: rows of the unsealed active segment skipped as pruned
+    must be scanned later when further appends flip the decision — never
+    silently lost."""
+    q = _span_query()
+    session = open_video_store(_histogram_store([6, 6]), _emb())
+    sub = session.subscribe(q)
+    stores = session.stores
+    v, e, te, ie = _ent_batch(1)
+    stores = append_stores(stores, v, e, te, ie,
+                           np.array([(1, 2, 0, 0, 1)], np.int32),
+                           seal=False)        # span 1 -> chain-span pruned
+    session.update_stores(stores)
+    cold = LazyVLMEngine(stores, _emb()).query(q)
+    _assert_same(sub.result, cold)
+    stores = append_stores(stores, np.zeros((0,), np.int32),
+                           np.zeros((0,), np.int32),
+                           np.zeros((0, 64), np.float32),
+                           np.zeros((0, 64), np.float32),
+                           np.array([(1, 7, 0, 0, 1)], np.int32),
+                           seal=False)        # span now 6 -> decision flips
+    session.update_stores(stores)
+    cold = LazyVLMEngine(stores, _emb()).query(q)
+    _assert_same(sub.result, cold)
+    assert 1 in sub.result.segments
+
+
+def test_chain_span_prunes_short_segments():
+    # chain needs >= 6 frames (f1 - f0 >= 5); a segment whose rows span 3
+    # frames is provably chain-free
+    stores = _histogram_store([8, 8])
+    rows = np.array([(1, f, 0, 0, 1) for f in (2, 3, 4)], np.int32)
+    s2 = append_stores(stores, np.zeros((0,), np.int32),
+                       np.zeros((0,), np.int32),
+                       np.zeros((0, 64), np.float32),
+                       np.zeros((0, 64), np.float32), rows, seal=True)
+    engine = LazyVLMEngine(s2, _emb())
+    plan = engine.plan_for(example_2_1())
+    pipe = engine.physical_for(plan)
+    assert pipe.segment_decision(1).reason == "chain-span"
+
+
+# ---------------------------------------------------------------------------
+# satellite: subscribed-query EXPLAIN golden (segments scanned vs. pruned)
+# ---------------------------------------------------------------------------
+FOLLOW_QUERY_TEXT = """\
+ENTITIES:
+  a: obj0
+  b: obj1
+RELATIONSHIPS:
+  r: near
+FRAMES:
+  f0: (a r b)
+OPTIONS:
+  top_k = 8
+  text_threshold = 0.9
+  follow = true
+"""
+
+EXPLAIN_FOLLOW_GOLDEN = """\
+PhysicalPipeline  (8 ops, ~9 launches, ~72,432 bytes)
+  EmbedOp[entity_text]         est_rows=2        bytes~512          launches=1  segments=-
+  EmbedOp[relationship_text]   est_rows=1        bytes~256          launches=1  segments=-
+  TopKSearchOp[entity]         est_rows=16       bytes~16,512       launches=1  segments=3/3
+  TopKSearchOp[predicate]      est_rows=2        bytes~1,808        launches=2  segments=-
+  TripleFilterOp[t0]           est_rows=6        bytes~45,056       launches=1  segments=1/3
+  VlmVerifyOp[off]             est_rows=0        bytes~0            launches=0  segments=1/3
+  BitmapConjoinOp              est_rows=32       bytes~8,256        launches=2  segments=1/3
+  TemporalChainOp              est_rows=4        bytes~32           launches=1  segments=-
+  segments: 1 scanned, 2 pruned of 3
+    seg0: scan
+    seg1: pruned [predicate(t0)]
+    seg2: pruned [empty]"""
+
+
+def test_subscribed_explain_golden_segments_column():
+    stores = _histogram_store([6, 6])
+    # predicate 5 ('holding') is not a candidate of 'near' at threshold 0.9
+    rows = np.array([(1, j, 0, 5, 1) for j in range(4)], np.int32)
+    s2 = append_stores(stores, np.zeros((0,), np.int32),
+                       np.zeros((0,), np.int32),
+                       np.zeros((0, 64), np.float32),
+                       np.zeros((0, 64), np.float32), rows, seal=True)
+    s3 = append_stores(s2, np.array([2]), np.array([2]),
+                       np.zeros((1, 64), np.float32),
+                       np.zeros((1, 64), np.float32),
+                       np.zeros((0, 5), np.int32), seal=True)
+    session = open_video_store(s3, _emb())
+    exp = session.explain(FOLLOW_QUERY_TEXT)
+    assert exp.physical == EXPLAIN_FOLLOW_GOLDEN
+    # the plain (non-follow) rendering stays untouched
+    plain = session.explain(FOLLOW_QUERY_TEXT.replace(
+        "  follow = true\n", ""))
+    assert "segments" not in plain.physical
+
+
+# ---------------------------------------------------------------------------
+# satellite: serving drain through the cost-based admission budget
+# ---------------------------------------------------------------------------
+def test_subscription_drain_through_cost_admission(world):
+    caps = _caps(ingest(world, _emb()))
+    stores = ingest(world, _emb(), segment_range=(0, 5), **caps)
+    session = open_video_store(stores, _emb())
+    descs = _descs(world)
+    subs = [session.subscribe(example_2_1()),
+            session.subscribe(_single(descs[0], descs[1], 0)),
+            session.subscribe(_single(descs[0], descs[2], 1))]
+    admission = CostBasedAdmission(session.engine,
+                                   BatchBudget(max_queries=1))
+    drain = SubscriptionDrain(session, admission=admission)
+
+    stores = ingest_incremental(stores, world, _emb(), (5, 10))
+    pending = session.update_stores(stores, refresh=False)
+    assert [s.pending for s in subs] == [True] * 3
+    assert len(pending) == 3
+    assert drain.notify() == 3
+    assert drain.notify() == 0                 # no duplicate tickets
+    assert drain.drain() == 3
+    assert drain.batches_run == 3              # max_queries=1 -> one each
+    for sub in subs:
+        assert not sub.pending
+        _assert_same(sub.result, session.query(sub.query))
+
+
+def test_subscription_drain_count_based_fallback(world):
+    stores = ingest(world, _emb(), segment_range=(0, 8),
+                    **_caps(ingest(world, _emb())))
+    session = open_video_store(stores, _emb())
+    session.subscribe(example_2_1())
+    drain = SubscriptionDrain(session, max_admit=4)
+    session.update_stores(ingest_incremental(stores, world, _emb(),
+                                             (8, 10)), refresh=False)
+    drain.notify()
+    assert drain.step() == 1 and drain.step() == 0
