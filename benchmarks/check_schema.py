@@ -41,6 +41,11 @@ def check(path: str, expect_modules=()) -> int:
     if stream:
         assert stream[0]["value"] == 1, \
             "incremental subscription diverged from cold re-execution"
+    placed = [r for r in rows
+              if r["name"] == "parallelism/exact_vs_monolithic"]
+    if placed:
+        assert placed[0]["value"] == 1, \
+            "placed (sharded) segment execution diverged from monolithic"
     sratio = [r for r in rows
               if r["name"].startswith("streaming/incr_vs_full_bytes")]
     bad = [r for r in sratio if r["value"] >= 1.0]

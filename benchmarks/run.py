@@ -3,7 +3,9 @@
   pruning      — VLM-workload pruning vs end-to-end VLM (system efficiency)
   scaling      — query cost vs video length
   updates      — incremental ingest (update-friendliness)
-  parallelism  — fused batched stages vs sequential launches
+  parallelism  — fused batched stages vs sequential launches + the
+                 1→N host-device placed-execution scaling curve
+                 (qps, modeled merge bytes, exactness asserted)
   multi_query  — batched multi-query throughput vs sequential query loop
   accuracy     — refinement fixes detector noise (robustness)
   kernels      — fused top-k data-movement model + CPU sanity timing

@@ -46,11 +46,13 @@ from repro.core.physical.stages import (_conjoin_bitmaps,  # noqa: F401
                                         make_sql_renderer, render_sql)
 from repro.core.plan import Plan, PlanCache, pow2_bucket
 from repro.core.query import VMRQuery
-from repro.core.stores import REL_SCHEMA, VideoStores, entity_search_bounds
+from repro.core.stores import (REL_SCHEMA, VideoStores, entity_search_bounds,
+                               entity_segment_bounds)
 from repro.core import temporal as temporal_lib
 from repro.semantic.embed import CachingEmbedder
-from repro.semantic.search import (SEARCH_MODES, sharded_topk_similarity,
-                                   topk_prefix)
+from repro.semantic.search import (SEARCH_MODES, place_segment_banks,
+                                   placed_topk_similarity,
+                                   sharded_topk_similarity, topk_prefix)
 from repro.symbolic.table import Table
 
 
@@ -66,6 +68,36 @@ def _to_host(x) -> np.ndarray:
     candidate arrays come back to host.
     """
     return np.asarray(x)
+
+
+def _is_append_descendant(old: VideoStores, new: VideoStores) -> bool:
+    """Whether ``new`` extends ``old`` append-only: a later store version
+    whose segment table keeps every previously *sealed* segment byte-for-
+    byte (sealed row ranges are immutable, so their placed device slices —
+    and anything else keyed on their coordinates — remain valid)."""
+    if getattr(new, "store_version", 0) <= getattr(old, "store_version", 0):
+        return False
+    old_sealed = [s for s in getattr(old, "segments", ()) if s.sealed]
+    new_segs = tuple(getattr(new, "segments", ()))
+    if len(new_segs) < len(old_sealed):
+        return False
+    return all(a.sid == b.sid and a.ent_start == b.ent_start
+               and a.ent_stop == b.ent_stop and b.sealed
+               for a, b in zip(old_sealed, new_segs))
+
+
+def _to_device(x, device):
+    """The single device→device funnel for placed segment execution.
+
+    Every cross-device move the placed search path makes goes through here
+    so tests can spy on the moved *shapes*: per query the cross-device
+    merge ships only each device's ``(Q, k')`` candidate tuples (scores +
+    global row indices) — never a segment bank and never a full-capacity
+    ``(ΣT, cap)`` mask — and segment banks move only once, when a segment
+    is first placed on its device (sealed banks are immutable and stay
+    put, so incremental refreshes re-place only *new* segments).
+    """
+    return jax.device_put(x, device)
 
 
 @dataclass
@@ -158,6 +190,23 @@ class LazyVLMEngine:
         # (texts, m, threshold) -> runtime predicate candidate label ids
         # (store-independent: query text x the static vocab)
         self._pred_cand_cache: Dict[Tuple, Tuple] = {}
+        # -- placed segment execution state (mesh engines) -------------------
+        # sids a subscription's chain frontier touches; the placement pass
+        # co-locates them (Subscription.refresh keeps this current)
+        self.frontier_sids: Tuple[int, ...] = ()
+        # store_version -> SegmentPlacement (placement is deterministic and
+        # sticky per version, so one entry suffices)
+        self._placement_version: Optional[int] = None
+        self._placement = None
+        # sid -> device from the placement before the last store update:
+        # callers append from *their* (unplaced) store handle, so stickiness
+        # must not depend on the incoming segments carrying .device
+        self._prior_assignment: Dict[int, int] = {}
+        # (role, sid, start, stop, dev[, version]) -> placed bank slice.
+        # Sealed segments are append-only, so their entries survive store
+        # updates (the same append-only lineage Subscription assumes) and
+        # an incremental refresh re-places only NEW segments' rows.
+        self._seg_bank_cache: Dict[Tuple, object] = {}
 
     # -- store snapshot ----------------------------------------------------
     @property
@@ -171,7 +220,22 @@ class LazyVLMEngine:
         Statistics snapshots, compiled physical pipelines, and predicate
         candidate memos are invalidated — results never depend on stats
         freshness, but cost ordering, segment pruning, and admission
-        pricing do."""
+        pricing do. Placed segment banks survive **append-descendant**
+        updates (sealed rows are immutable, so their placed slices stay
+        valid and an incremental refresh moves only new segments' rows);
+        any other store swap drops them."""
+        if _is_append_descendant(self._stores, stores):
+            if self._placement is not None:
+                # carry the old assignment by sid: the new store's segment
+                # objects come from the caller's unplaced lineage
+                self._prior_assignment.update(
+                    (s.sid, d) for s, d in zip(
+                        self._stores.segments, self._placement.assignment))
+        else:
+            self._seg_bank_cache.clear()
+            self._prior_assignment = {}
+        self._placement = None
+        self._placement_version = None
         self._stores = stores
         self.refresh_store_stats()
         self._pred_cand_cache.clear()
@@ -249,7 +313,8 @@ class LazyVLMEngine:
             pipe = compile_physical(plan, self.store_stats,
                                     reorder=self.reorder_filters,
                                     pred_candidates=cands,
-                                    store_version=version)
+                                    store_version=version,
+                                    placement=self.segment_placement())
             self._physical_cache[key] = pipe
             while len(self._physical_cache) > self._physical_cache_entries:
                 self._physical_cache.pop(next(iter(self._physical_cache)))
@@ -260,11 +325,93 @@ class LazyVLMEngine:
         scheduler's admission currency)."""
         return self.physical_for(self.plan_for(query)).total_estimate()
 
+    # -- placed segment execution (mesh engines over segmented stores) -------
+    def _mesh_device_table(self):
+        """One device per data-axis slice of the engine's mesh — the device
+        table placement ordinals index into (memoized; the mesh is fixed
+        for the engine's lifetime)."""
+        if getattr(self, "_device_table", None) is None:
+            from repro.distributed.sharding import dp_size
+            devs = np.asarray(self.mesh.devices)
+            dp = max(1, min(dp_size(self.mesh), devs.size))
+            self._device_table = list(devs.reshape(dp, -1)[:, 0])
+        return self._device_table
+
+    def segment_placement(self):
+        """The placement-aware pass output for the current store snapshot.
+
+        Runs :func:`repro.core.physical.cost.place_stores` once per
+        ``store_version`` (placement is deterministic and sticky, so the
+        version fully determines it), writes the assignment back onto the
+        ``StoreSegment`` table, and co-locates the registered subscription
+        frontier (``frontier_sids``). Returns ``None`` on mesh-less engines
+        or unsegmented stores."""
+        if self.mesh is None or not getattr(self._stores, "segments", ()):
+            return None
+        v = self.store_version
+        if self._placement is None or self._placement_version != v:
+            from repro.core.physical.cost import place_stores
+            n_devices = len(self._mesh_device_table())
+            self._stores, self._placement = place_stores(
+                self._stores, n_devices, frontier=self.frontier_sids,
+                prior=self._prior_assignment)
+            self._placement_version = v
+        return self._placement
+
+    def _segment_banks(self, role: str, emb, emb_i8, valid):
+        """Per-segment bank slices committed to their assigned devices.
+
+        Cached per segment: sealed segments key on their immutable row
+        range (their rows never change, so a placed slice survives store
+        updates — incremental refreshes move only NEW segments' rows); the
+        active/tail range keys on ``store_version`` and is re-placed after
+        every append. All moves go through the ``_to_device`` funnel."""
+        placement = self.segment_placement()
+        table = self._mesh_device_table()
+        # fp32 mode never reads the int8 bank — don't place (move) it
+        emb_i8 = emb_i8 if self.search_mode == "int8" else None
+        bounds3 = entity_segment_bounds(self.stores)
+        segs = {s.sid: s for s in self.stores.segments}
+        fresh: Dict[Tuple, object] = {}
+        banks = []
+        last = bounds3[-1]
+        for start, stop, sid in bounds3:
+            dev_ord = placement.device_of(sid)
+            sealed = (segs[sid].sealed and (start, stop, sid) != last)
+            # search_mode is part of the key: fp32 banks carry no int8
+            # slice, so flipping modes must not resurface a mode-less bank
+            key = (role, self.search_mode, sid, start, stop, dev_ord) \
+                if sealed else (role, self.search_mode, sid, start, stop,
+                                dev_ord, self.store_version)
+            bank = self._seg_bank_cache.get(key)
+            if bank is None:
+                bank = place_segment_banks(
+                    emb, valid, ((start, stop),), (dev_ord,), i8=emb_i8,
+                    put=lambda x, d: _to_device(x, d),
+                    device_table=table)[0]
+            fresh[key] = bank
+            banks.append(bank)
+        self._seg_bank_cache = fresh
+        return tuple(banks)
+
     # -- stage 1 search dispatch (used by TopKSearchOp) ----------------------
     def _search(self, q_emb, emb, emb_i8, valid, k):
         if self.mesh is not None:
-            # mesh engines shard rows over devices; segmentation applies
-            # per shard upstream of this build — keep the global sweep
+            bounds = entity_search_bounds(self.stores)
+            if len(bounds) > 1:
+                # sharded segment execution: per-device segment-local
+                # top-k + one fused cross-device merge, bitwise equal to
+                # the monolithic sweep (see placed_topk_similarity)
+                role = "image" if emb is self.stores.entities.image_emb \
+                    else "text"
+                banks = self._segment_banks(role, emb, emb_i8, valid)
+                return placed_topk_similarity(
+                    q_emb, banks, k, use_kernels=self.use_kernels,
+                    mode=self.search_mode,
+                    merge_device=self._mesh_device_table()[0],
+                    to_device=lambda x, d: _to_device(x, d))
+            # unsegmented store on a mesh: shard rows over devices and
+            # keep the global shard_map sweep
             return sharded_topk_similarity(q_emb, emb, valid, k, self.mesh,
                                            use_kernels=self.use_kernels,
                                            mode=self.search_mode, i8=emb_i8)

@@ -58,6 +58,14 @@ class PhysicalPipeline:
     cascade: bool               # VlmVerifyOp runs the budgeted cascade
     segment_plan: Tuple[SegmentDecision, ...] = ()
     store_version: int = 0
+    # placed segment execution (mesh engines): the placement-aware pass
+    # output + its predicted cross-device merge traffic. None on unplaced
+    # engines — per-op estimates above NEVER depend on placement (results
+    # are bitwise placement-independent, so cost must be too), which keeps
+    # EXPLAIN estimates comparable across device counts; the comms
+    # prediction is carried separately and rendered only when placed.
+    placement: Optional[object] = None
+    placement_comms: CostEstimate = CostEstimate(0, 0, 0)
 
     def total_estimate(self) -> CostEstimate:
         total = CostEstimate(0, 0, 0)
@@ -114,6 +122,13 @@ class PhysicalPipeline:
                          f"pruned of {n}")
             for d in self.segment_plan:
                 lines.append(f"    {d.describe()}")
+        if self.placement is not None:
+            lines.append(f"  placement: {self.placement.n_devices} devices"
+                         f" — {self.placement.describe()}")
+            lines.append(f"  predicted comms: "
+                         f"~{self.placement_comms.comms_bytes:,} bytes "
+                         f"(per-device top-k candidate tuples; "
+                         f"{self.placement_comms.launches} device merges)")
         return "\n".join(lines)
 
 
@@ -128,13 +143,17 @@ def order_triple_filters(filters, stats: StoreStats,
 
 def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
                      pred_candidates=None,
-                     store_version: int = 0) -> PhysicalPipeline:
+                     store_version: int = 0,
+                     placement=None) -> PhysicalPipeline:
     """Lower ``plan`` to a :class:`PhysicalPipeline` against ``stats``.
 
     ``pred_candidates`` (per predicate-text row, the runtime candidate
     label ids — store-independent, so the engine computes them once at
     compile time) sharpens the segment-pruning pass; ``store_version``
-    stamps the pipeline with the store snapshot it was costed against."""
+    stamps the pipeline with the store snapshot it was costed against.
+    ``placement`` (a :class:`~repro.core.physical.cost.SegmentPlacement`,
+    placed mesh engines only) is carried for EXPLAIN — per-op estimates
+    and the prune verdicts stay placement-independent by construction."""
     em, pm, ts = plan.entity_match, plan.predicate_match, plan.triple_select
     n_triples = len(ts.triples)
 
@@ -192,6 +211,8 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
         num_segments=plan.num_segments,
         frames_per_segment=plan.frames_per_segment))
 
+    comms = (placement.comms_estimate(em.k, len(em.texts))
+             if placement is not None else CostEstimate(0, 0, 0))
     return PhysicalPipeline(
         ops=tuple(ops),
         estimates=tuple(op.estimate(stats) for op in ops),
@@ -199,4 +220,5 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
         reordered=order != tuple(range(n_triples)),
         cascade=plan.verify.enabled and budget > 0,
         segment_plan=prune_segments(plan, stats, pred_candidates),
-        store_version=store_version)
+        store_version=store_version,
+        placement=placement, placement_comms=comms)

@@ -33,15 +33,23 @@ class CostEstimate:
     rows: int           # estimated result rows / candidates produced
     device_bytes: int   # modeled HBM traffic of the operator's launches
     launches: int       # device program launches
+    # modeled cross-device bytes moved (the placed segment execution's
+    # merge traffic); 0 for every single-device operator, so estimates
+    # stay placement-independent and bitwise comparable across engines
+    comms_bytes: int = 0
 
     def __add__(self, other: "CostEstimate") -> "CostEstimate":
         return CostEstimate(self.rows + other.rows,
                             self.device_bytes + other.device_bytes,
-                            self.launches + other.launches)
+                            self.launches + other.launches,
+                            self.comms_bytes + other.comms_bytes)
 
     def describe(self) -> str:
-        return (f"rows~{self.rows:,} bytes~{self.device_bytes:,} "
-                f"launches={self.launches}")
+        out = (f"rows~{self.rows:,} bytes~{self.device_bytes:,} "
+               f"launches={self.launches}")
+        if self.comms_bytes:
+            out += f" comms~{self.comms_bytes:,}"
+        return out
 
 
 ZERO_COST = CostEstimate(0, 0, 0)
@@ -137,3 +145,139 @@ def estimate_triple_rows(stats: StoreStats, predicate_text: str,
     sel = stats.entity_pair_selectivity(width)
     return max(1, int(round(stats.rows_for_predicate(predicate_text)
                             * sel * sel)))
+
+
+# ---------------------------------------------------------------------------
+# placement-aware pass: segments -> devices
+# ---------------------------------------------------------------------------
+# bytes one merged candidate costs on the wire: fp32 score + int32 global row
+_CANDIDATE_TUPLE_BYTES = 8
+
+
+@dataclass(frozen=True)
+class SegmentPlacement:
+    """Per-segment device assignment for placed (sharded) segment execution.
+
+    ``assignment[i]`` is the device ordinal owning segment ``sid == i`` (the
+    segment table is contiguous in sid). ``loads`` is the modeled entity-row
+    load per device. Placement is *metadata only*: it never changes what any
+    operator computes — the placed per-device search merges to the same bits
+    as the monolithic sweep — so per-operator :class:`CostEstimate`\\ s stay
+    placement-independent and the predicted cross-device traffic is carried
+    separately, via :meth:`comms_estimate`.
+    """
+
+    n_devices: int
+    assignment: Tuple[int, ...]
+    loads: Tuple[int, ...]
+
+    def device_of(self, sid: int) -> int:
+        return self.assignment[sid] if 0 <= sid < len(self.assignment) else 0
+
+    def devices_used(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.assignment)))
+
+    def comms_estimate(self, k: int, n_queries: int = 1) -> CostEstimate:
+        """Predicted cross-device merge traffic for one top-``k`` search of
+        ``n_queries`` queries: every device ships its (k', n_queries)
+        score/global-row candidate tuples to the merge device — never its
+        segment banks or full-capacity masks. k' is capped by the device's
+        own row load (a device cannot contribute more rows than it owns)."""
+        moved = 0
+        for d in self.devices_used():
+            moved += min(k, max(1, self.loads[d])) * n_queries
+        return CostEstimate(0, 0, len(self.devices_used()),
+                            comms_bytes=moved * _CANDIDATE_TUPLE_BYTES)
+
+    def describe(self) -> str:
+        segs: dict = {}
+        for sid, d in enumerate(self.assignment):
+            segs.setdefault(d, []).append(sid)
+        parts = []
+        for d in sorted(segs):
+            ids = " ".join(f"seg{s}" for s in segs[d])
+            parts.append(f"dev{d}: {ids} (rows~{self.loads[d]:,})")
+        return "; ".join(parts)
+
+
+def place_segments(segments, n_devices: int, *, frontier=(), prior=None
+                   ) -> "SegmentPlacement":
+    """The placement-aware pass: assign store segments to mesh devices.
+
+    Deterministic and **sticky**: a segment that already carries a device
+    (``StoreSegment.device``, or a ``prior`` sid→device map from an earlier
+    placement — callers append from *their* store lineage, which never saw
+    the engine's placed copy) keeps it — re-running the pass after an append
+    never migrates sealed rows, so incremental refreshes only ever touch the
+    devices owning *new* segments. Unassigned segments are placed greedily:
+
+    * segments in ``frontier`` (a subscription's chain frontier — the only
+      segments incremental re-evaluation scans) are **co-located** on one
+      device: the device already owning any frontier member, else the
+      least-loaded device;
+    * remaining segments go largest-first (by entity rows, ties by sid) to
+      the least-loaded device (ties to the lowest ordinal) — classic LPT
+      balancing on the per-segment row counts.
+
+    Placement never affects results (the placed merge is bitwise equal to
+    the monolithic sweep); it only decides which device pays which scan.
+    """
+    n_devices = max(1, int(n_devices))
+    segments = tuple(segments)
+    loads = [0] * n_devices
+    assignment = [0] * len(segments)
+    pending = []
+    prior = prior or {}
+    for i, seg in enumerate(segments):
+        dev = getattr(seg, "device", None)
+        if dev is None:
+            dev = prior.get(seg.sid)
+        if dev is not None and 0 <= dev < n_devices:
+            assignment[i] = dev
+            loads[dev] += seg.ent_rows
+        else:
+            pending.append(i)
+
+    def least_loaded() -> int:
+        return min(range(n_devices), key=lambda d: (loads[d], d))
+
+    frontier = set(frontier)
+    front_pending = [i for i in pending if segments[i].sid in frontier]
+    if front_pending:
+        owned = sorted(assignment[i] for i, seg in enumerate(segments)
+                       if seg.sid in frontier and i not in pending)
+        dev = owned[0] if owned else least_loaded()
+        for i in front_pending:
+            assignment[i] = dev
+            loads[dev] += segments[i].ent_rows
+    rest = [i for i in pending if i not in front_pending]
+    for i in sorted(rest, key=lambda i: (-segments[i].ent_rows,
+                                         segments[i].sid)):
+        dev = least_loaded()
+        assignment[i] = dev
+        loads[dev] += segments[i].ent_rows
+    return SegmentPlacement(n_devices=n_devices, assignment=tuple(assignment),
+                            loads=tuple(loads))
+
+
+def place_stores(stores, n_devices: int, *, frontier=(), prior=None):
+    """Run :func:`place_segments` and carry the assignment on the store's
+    ``StoreSegment`` table (the per-segment ``device`` field).
+
+    Returns ``(stores, placement)``; the store object is returned unchanged
+    when every segment already carries its assigned device. ``store_version``
+    is deliberately **not** bumped: placement is metadata, never data — it is
+    a deterministic (and sticky) function of the segment table and the device
+    count, so version-keyed stats/pipeline caches stay valid as-is.
+    """
+    import dataclasses
+    segments = tuple(getattr(stores, "segments", ()))
+    placement = place_segments(segments, n_devices, frontier=frontier,
+                               prior=prior)
+    if all(getattr(s, "device", None) == placement.assignment[i]
+           for i, s in enumerate(segments)):
+        return stores, placement
+    new_segments = tuple(
+        dataclasses.replace(s, device=placement.assignment[i])
+        for i, s in enumerate(segments))
+    return dataclasses.replace(stores, segments=new_segments), placement

@@ -40,6 +40,13 @@ score-emptiness. ``Session.explain`` renders scanned-vs-pruned per
 operator for ``follow=true`` (subscribed) queries; the incremental
 subscription path (``repro.core.streaming``) skips pruned *new* segments
 on every refresh.
+
+Prune verdicts are **per-segment and placement-independent**: the rules
+read only a segment's own :class:`SegmentStats` and the query, never the
+device the placement-aware pass assigned it (``StoreSegment.device``) —
+so a placed mesh engine and a single-device engine compute identical
+``SegmentDecision`` tables for the same store snapshot, and moving a
+segment between devices can never flip a verdict.
 """
 from __future__ import annotations
 

@@ -236,7 +236,14 @@ class StoreSegment:
     """One immutable unit of the segmented store: a contiguous row range
     over the global entity and relationship banks (rows are append-only, so
     a sealed range — and the int8 bank rows backing it — never changes),
-    plus its accumulated :class:`SegmentStats`."""
+    plus its accumulated :class:`SegmentStats`.
+
+    ``device`` is the mesh-device ordinal the segment is placed on (the
+    placement-aware pass, ``repro.core.physical.cost.place_segments``);
+    ``None`` until a placed engine assigns one. Placement is sticky — a
+    sealed segment never migrates — and is pure metadata: results are
+    bitwise independent of it.
+    """
 
     sid: int
     ent_start: int
@@ -245,6 +252,7 @@ class StoreSegment:
     rel_stop: int
     sealed: bool
     stats: SegmentStats
+    device: Optional[int] = None
 
     @property
     def ent_rows(self) -> int:
@@ -476,6 +484,25 @@ def entity_search_bounds(stores: "VideoStores") -> Tuple[Tuple[int, int], ...]:
         return ((0, cap),)
     starts = [s.ent_start for s in segs] + [cap]
     return tuple((a, b) for a, b in zip(starts, starts[1:]) if b > a)
+
+
+def entity_segment_bounds(stores: "VideoStores"
+                          ) -> Tuple[Tuple[int, int, int], ...]:
+    """:func:`entity_search_bounds` ranges with their owning segment:
+    ``(start, stop, sid)`` per non-empty range, in ascending row order.
+
+    The placed execution path needs the sid to look up each range's device
+    assignment (``StoreSegment.device``); empty ranges are dropped exactly
+    as in :func:`entity_search_bounds`, so zipping the two outputs is safe.
+    """
+    segs = stores.segments
+    cap = stores.entities.capacity
+    if len(segs) <= 1:
+        sid = segs[0].sid if segs else 0
+        return ((0, cap, sid),)
+    starts = [s.ent_start for s in segs] + [cap]
+    return tuple((a, b, seg.sid)
+                 for a, b, seg in zip(starts, starts[1:], segs) if b > a)
 
 
 def append_relationships(store: RelationshipStore, rows: np.ndarray

@@ -160,8 +160,15 @@ class Subscription:
             return self.result
         t0 = time.perf_counter()
         plan = engine.plan_for(self.query)
-        pipe = engine.physical_for(plan)
         segs = engine.stores.segments or _bootstrap_segments(engine.stores)
+        # register the chain frontier with the placement-aware pass: the
+        # active segment and the most recently sealed one are where chain
+        # continuations land, so placed engines co-locate them — an
+        # incremental refresh then touches only the devices owning new
+        # segments (the delta scan reads appended rows only; sealed placed
+        # banks stay where they are)
+        engine.frontier_sids = tuple(s.sid for s in segs[-2:])
+        pipe = engine.physical_for(plan)
         result = self._evaluate(plan, pipe, segs)
         self._version = version
         self.result = result

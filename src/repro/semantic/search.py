@@ -17,6 +17,7 @@ graph-traversal ANN structures on TPU for per-shard DB sizes in the millions.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -108,18 +109,37 @@ def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
     Returns (scores, global_idx): (Q, k) — indices are into the logical
     (unsharded) DB. Each shard's local top-k is exact (both modes), so the
     all-gather + merge of partials is exact too.
+
+    Row counts that don't divide the shard count are padded with
+    invalid-masked rows (they score -inf and can only surface on slots a
+    monolithic scan would also leave -inf), and a shard holding fewer than
+    ``k`` rows contributes its full row count — ``n_shards·min(k, n_local)``
+    gathered partials always cover the global top-k when ``k ≤ N``.
     """
-    n_local = db.shape[0] // int(
-        jnp.prod(jnp.array([mesh.shape[a] for a in shard_axes])))
+    n_shards = 1
+    for a in shard_axes:
+        n_shards *= int(mesh.shape[a])
+    n = db.shape[0]
+    pad = (-n) % n_shards
+    if pad:
+        # invalid-masked padding: -inf scores, never beat a valid row
+        db = jnp.pad(db, ((0, pad), (0, 0)))
+        db_valid = jnp.pad(db_valid, (0, pad))
+        if i8 is not None:
+            i8 = type(i8)(jnp.pad(i8.codes, ((0, pad), (0, 0))),
+                          jnp.pad(i8.scale, (0, pad)),
+                          jnp.pad(i8.err, (0, pad)))
+    n_local = (n + pad) // n_shards
+    k_local = min(k, n_local)
 
     def local(q, dbs, dvs, i8s):
-        s, i = topk_similarity(q, dbs, dvs, k, use_kernels=use_kernels,
+        s, i = topk_similarity(q, dbs, dvs, k_local, use_kernels=use_kernels,
                                mode=mode, i8=i8s)
         # global index = shard offset + local index
         ax_index = jax.lax.axis_index(shard_axes)
         offset = ax_index * n_local
         gi = i + offset
-        # gather partials from all shards: (n_shards*k,) per query
+        # gather partials from all shards: (n_shards*k_local,) per query
         s_all = jax.lax.all_gather(s, shard_axes, axis=1, tiled=True)
         i_all = jax.lax.all_gather(gi, shard_axes, axis=1, tiled=True)
         sm, im = jax.lax.top_k(s_all, k)
@@ -135,6 +155,82 @@ def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
                    out_specs=(P(), P()),
                    check_replication=False)  # holds post all-gather+merge
     return fn(queries, db, db_valid, i8)
+
+
+# ---------------------------------------------------------------------------
+# placed segment execution: per-device segment-local top-k + fused merge
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("k", "mode", "use_kernels"))
+def _segment_local_topk(queries, db, db_valid, i8, k: int, mode: str,
+                        use_kernels: bool):
+    """One segment's local top-k, jitted per (shape, k, mode) — runs on
+    whichever device its inputs are committed to."""
+    return topk_similarity(queries, db, db_valid, k,
+                           use_kernels=use_kernels, mode=mode, i8=i8)
+
+
+def place_segment_banks(db, db_valid, bounds, devices, *, i8=None,
+                        put=None, device_table=None):
+    """Slice the global banks into per-segment row ranges and commit each
+    slice to its assigned device.
+
+    ``bounds``/``devices`` are parallel: ``bounds[j]`` is the segment's
+    ``(start, stop)`` entity-row range (``entity_search_bounds`` order —
+    ascending, the last range extended to capacity) and ``devices[j]`` the
+    owning device ordinal from the placement pass. Sealed rows are
+    append-only and per-row quantization makes an int8 row slice *be* the
+    segment's own bank, so a placed slice stays valid for the segment's
+    lifetime. Returns per-segment tuples
+    ``(start, size, device, db_seg, valid_seg, i8_seg)``.
+    """
+    put = put or jax.device_put
+    devs = device_table if device_table is not None else jax.devices()
+    banks = []
+    for (start, stop), d in zip(bounds, devices):
+        dev = devs[d % len(devs)]
+        dbs = put(jax.lax.slice_in_dim(db, start, stop), dev)
+        dvs = put(jax.lax.slice_in_dim(db_valid, start, stop), dev)
+        i8s = None
+        if i8 is not None:
+            i8s = type(i8)(
+                put(jax.lax.slice_in_dim(i8.codes, start, stop), dev),
+                put(jax.lax.slice_in_dim(i8.scale, start, stop), dev),
+                put(jax.lax.slice_in_dim(i8.err, start, stop), dev))
+        banks.append((start, stop - start, dev, dbs, dvs, i8s))
+    return tuple(banks)
+
+
+def placed_topk_similarity(queries, banks, k: int, *,
+                           use_kernels: bool = False, mode: str = "fp32",
+                           merge_device=None, to_device=None):
+    """Sharded segment execution: per-device segment-local top-k + ONE
+    fused cross-device merge — bitwise equal to the monolithic sweep.
+
+    ``banks`` is :func:`place_segment_banks` output. Each segment's device
+    runs the same local top-``min(k, size)`` the single-device segmented
+    path runs (``topk_similarity_segmented``), remaps local indices to
+    global rows by adding the segment's start, and ships **only** its
+    ``(Q, k')`` score/global-row candidate tuples — never a segment bank
+    or a full-capacity mask — to the merge device through ``to_device``.
+    Partials concatenate in ascending-global-index (segment) order, so the
+    final ``lax.top_k`` reproduces the monolithic scan's lowest-index-first
+    tie order; per-segment dots hit the same kernels on identical slices as
+    the segmented single-device path, so scores are bitwise identical too.
+    """
+    to_device = to_device or jax.device_put
+    merge_device = merge_device or jax.devices()[0]
+    parts_s, parts_i = [], []
+    for start, size, dev, dbs, dvs, i8s in banks:
+        # broadcast the (small) query block to the segment's device
+        q_local = jax.device_put(queries, dev)
+        s, i = _segment_local_topk(q_local, dbs, dvs, i8s, min(k, size),
+                                   mode, use_kernels)
+        parts_s.append(to_device(s, merge_device))
+        parts_i.append(to_device(i + start, merge_device))
+    cat_s = jnp.concatenate(parts_s, axis=1)
+    cat_i = jnp.concatenate(parts_i, axis=1)
+    vals, pos = jax.lax.top_k(cat_s, k)
+    return vals, jnp.take_along_axis(cat_i, pos, axis=1)
 
 
 def threshold_candidates(scores: jax.Array, idx: jax.Array, threshold: float

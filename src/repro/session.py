@@ -145,9 +145,13 @@ class Session:
         and its predicted HBM bytes moved), the physical pipeline with
         per-operator cost estimates (triple filters in cost order),
         per-triple SQL templates, the predicted launch counts, and whether
-        the plan cache hit. With ``analyze=True`` the query is *executed*
-        and the physical rows additionally report actual vs. estimated rows
-        per operator (EXPLAIN ANALYZE)."""
+        the plan cache hit. On a placed mesh engine the physical rendering
+        additionally shows the per-device segment assignment and the
+        predicted cross-device comms bytes (the merge's candidate-tuple
+        traffic); per-operator estimates themselves stay placement-
+        independent, exactly like results. With ``analyze=True`` the query
+        is *executed* and the physical rows additionally report actual vs.
+        estimated rows per operator (EXPLAIN ANALYZE)."""
         q = self.resolve(query)
         plan, cached = self.engine.plan_cache.lookup(
             q, self.engine.stores, verify=self.engine.verifier is not None,

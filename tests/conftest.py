@@ -1,5 +1,36 @@
+"""Shared test fixtures — including the multi-device CPU harness.
+
+CI runs the whole tier-1 suite twice: once on the default single host
+device, and once under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+so the placed mesh paths execute on a real 8-device topology. Tests that
+*require* more than one device request the ``multi_device`` fixture and
+skip cleanly on single-device hosts (with a hint for how to get more);
+everything else must pass identically in both jobs — that is the
+bitwise placement-invariance contract.
+"""
+import pytest
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-device subprocess tests (included by default)")
+
+
+@pytest.fixture(scope="session")
+def device_count():
+    """Host device count, importing jax lazily (XLA_FLAGS must be set
+    before jax initializes — the fixture never sets it itself)."""
+    import jax
+    return jax.device_count()
+
+
+@pytest.fixture
+def multi_device(device_count):
+    """Skip unless the host exposes >1 device. Mesh-only tests depend on
+    this; run them via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8 pytest ...``."""
+    if device_count < 2:
+        pytest.skip(
+            "needs >1 device; rerun with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return device_count

@@ -145,6 +145,73 @@ def test_elastic_checkpoint_reshard_8dev():
 
 
 @pytest.mark.slow
+def test_placed_segment_search_bitwise_8dev():
+    """Sharded segment execution on a forced 8-device host: placed per-
+    device top-k + fused merge must be bitwise equal to the monolithic
+    single-device sweep (fp32 + int8, cold/batch/incremental refresh) —
+    runs even when the outer pytest host exposes only one device."""
+    out = _run_subprocess("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.semantic import OracleEmbedder
+    from repro.video import (SyntheticWorld, WorldConfig, ingest,
+                             ingest_incremental)
+    from repro.core.executor import LazyVLMEngine
+    from repro.core import example_2_1
+    from repro.compat import make_mesh
+    from repro.session import Session
+    assert jax.device_count() == 8
+    # spurious_prob=0: monolithic ingest and an incremental chain produce
+    # identical rows, so any result drift is the placed path's fault
+    w = SyntheticWorld(WorldConfig(num_segments=8, frames_per_segment=16,
+                                   objects_per_segment=6, seed=3))
+    w.stage_event_2_1(vid=5)
+    emb = OracleEmbedder(dim=64)
+    st_m = ingest(w, emb)
+    caps = dict(entity_capacity=st_m.entities.capacity,
+                rel_capacity=st_m.relationships.capacity)
+    cuts = [0, 3, 5, 8]
+    st_s = ingest(w, emb, segment_range=(0, 3), **caps)
+    for a, b in zip(cuts[1:], cuts[2:]):
+        st_s = ingest_incremental(st_s, w, emb, (a, b))
+    q = example_2_1()
+    qe = jnp.asarray(emb.embed_texts(q.entity_texts))
+    for devices in (2, 4, 8):
+        mesh = make_mesh((devices, 1), ("data", "model"))
+        for mode in ("fp32", "int8"):
+            e_m = LazyVLMEngine(st_m, emb, search_mode=mode)
+            e_p = LazyVLMEngine(st_s, emb, mesh=mesh, search_mode=mode)
+            s1, i1 = e_m._search(qe, st_m.entities.text_emb,
+                                 st_m.entities.text_i8,
+                                 st_m.entities.table.valid, 8)
+            s2, i2 = e_p._search(qe, st_s.entities.text_emb,
+                                 st_s.entities.text_i8,
+                                 st_s.entities.table.valid, 8)
+            np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+            np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+            r1, r2 = e_m.query(q), e_p.query(q)
+            assert r1.segments == r2.segments and r1.scores == r2.scores
+            assert (r1.end_frames == r2.end_frames).all()
+            b1 = e_m.query_batch([q, q]); b2 = e_p.query_batch([q, q])
+            for x, y in zip(b1, b2):
+                assert x.segments == y.segments and x.scores == y.scores
+    # incremental refresh on a placed engine == cold query at every step
+    st = ingest(w, emb, segment_range=(0, 3), **caps)
+    sess = Session(LazyVLMEngine(st, emb,
+                                 mesh=make_mesh((8, 1), ("data", "model"))))
+    sub = sess.subscribe(q)
+    for a, b in zip(cuts[1:], cuts[2:]):
+        st = ingest_incremental(st, w, emb, (a, b))
+        sess.update_stores(st)
+        cold = LazyVLMEngine(st, emb).query(q)
+        assert sub.result.segments == cold.segments
+        assert sub.result.scores == cold.scores
+        assert (sub.result.end_frames == cold.end_frames).all()
+    print("PLACED_OK")
+    """)
+    assert "PLACED_OK" in out
+
+
+@pytest.mark.slow
 def test_dryrun_smoke_small_device_count():
     """The dry-run driver itself (reduced device count for CI speed)."""
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))

@@ -12,7 +12,8 @@ from repro.core.query import (Entity, FrameSpec, QueryValidationError,
 from repro.core.refine import MockVerifier
 from repro.semantic import OracleEmbedder
 from repro.serving import QueryFrontend
-from repro.video import PREDICATES, SyntheticWorld, WorldConfig, ingest
+from repro.video import (PREDICATES, SyntheticWorld, WorldConfig, ingest,
+                         ingest_incremental)
 
 
 @pytest.fixture(scope="module")
@@ -304,6 +305,113 @@ def test_transfer_funnel_covers_batch_and_cascade(world, stores,
     assert casc.query(with_rows).stats.refine_candidates > 0
     assert any(len(s) == 2 and s[1] == cap for s in shapes)
     assert any(s == () for s in shapes)
+
+
+def _split_stores(world, emb):
+    """The executor world's rows sealed across three segments (so a mesh
+    engine takes the placed per-segment path)."""
+    mono = ingest(world, emb)
+    caps = dict(entity_capacity=mono.entities.capacity,
+                rel_capacity=mono.relationships.capacity)
+    st = ingest(world, emb, segment_range=(0, 2), **caps)
+    st = ingest_incremental(st, world, emb, (2, 4))
+    return st, caps
+
+
+def _spy_to_device(ex, monkeypatch):
+    """Record every array shape crossing the ``_to_device`` funnel (bank
+    placement + the cross-device merge's candidate tuples)."""
+    moved = []
+    orig = ex._to_device
+
+    def spy(x, dev):
+        moved.append(tuple(x.shape))
+        return orig(x, dev)
+
+    monkeypatch.setattr(ex, "_to_device", spy)
+    return moved
+
+
+def test_placed_merge_moves_only_candidate_tuples(world, monkeypatch):
+    """On the placed mesh path the cross-device merge moves only ``(Q, k')``
+    candidate tuples per device (``k' ≤ k``) — never a ``(ΣT, cap)`` row
+    mask or a capacity-width bank. Once banks are resident, repeat single
+    and batched queries move *nothing but* those tuples."""
+    import jax
+
+    from repro.compat import make_mesh
+    from repro.core import executor as ex
+    emb = OracleEmbedder(dim=64)
+    st, _ = _split_stores(world, emb)
+    st = ingest_incremental(st, world, emb, (4, 6))
+    cap = st.relationships.capacity
+    ent_cap = st.entities.capacity
+    kmax = 16                                  # _workload queries' top_k
+
+    moved = _spy_to_device(ex, monkeypatch)
+    mesh = make_mesh((min(4, jax.device_count()), 1), ("data", "model"))
+    engine = LazyVLMEngine(st, emb, mesh=mesh)
+    queries = [q for q in _workload(world) if not q.image_search]
+
+    engine.query(queries[0])                   # priming: banks + merge
+    assert moved, "placed path did not route through _to_device"
+    assert not [s for s in moved if len(s) == 2 and s[1] in (cap, ent_cap)]
+
+    # banks are now resident: single + batch repeats move only the merge's
+    # (Q, k') score/index tuples
+    moved.clear()
+    engine.query(queries[0])
+    assert moved and all(len(s) == 2 and s[1] <= kmax for s in moved)
+    moved.clear()
+    engine.query_batch(queries)
+    assert moved and all(len(s) == 2 and s[1] <= kmax for s in moved)
+
+
+def test_placed_refresh_moves_only_new_segment_rows(world, monkeypatch):
+    """Incremental refreshes on a placed engine move no banks at all (the
+    delta path scans only appended rows and merges host-side), and a cold
+    query after the append re-places only the two ranges the append
+    changed — the new tail segment and the formerly-last segment (its
+    range no longer extends to capacity). Sealed prefix segments stay
+    device-resident; everything else crossing the funnel is ``(Q, k')``
+    merge candidate tuples, never a capacity-width mask."""
+    import jax
+
+    from repro.compat import make_mesh
+    from repro.core import executor as ex
+    from repro.core.stores import entity_segment_bounds
+    from repro.session import Session
+    emb = OracleEmbedder(dim=64)
+    st, _ = _split_stores(world, emb)
+    dim = 64
+
+    mesh = make_mesh((min(4, jax.device_count()), 1), ("data", "model"))
+    sess = Session(LazyVLMEngine(st, emb, mesh=mesh))
+    queries = [q for q in _workload(world) if not q.image_search]
+    sub = sess.subscribe(queries[0])
+    assert sub.result is not None
+
+    moved = _spy_to_device(ex, monkeypatch)
+    st2 = ingest_incremental(st, world, emb, (4, 6))
+    sess.update_stores(st2)           # refresh: delta scan, zero bank moves
+    assert not [s for s in moved if len(s) == 2 and s[1] == dim], moved
+
+    # a cold query now re-places exactly the append-changed ranges
+    moved.clear()
+    sess.engine.query(queries[1])
+    bounds = entity_segment_bounds(st2)
+    expect = sorted(stop - start for start, stop, _ in bounds[-2:])
+    got = sorted(s[0] for s in moved if len(s) == 2 and s[1] == dim)
+    # exactly two bank moves, sized as the two append-changed ranges — the
+    # sealed prefix segments' banks never re-cross the funnel
+    assert got == expect, (got, expect)
+    # everything else is the re-placed banks' 1-D valid slices plus
+    # (Q, k') merge tuples — never a capacity-width mask
+    rest = [s for s in moved if not (len(s) == 2 and s[1] == dim)]
+    assert rest
+    for s in rest:
+        assert (s[0] in expect if len(s) == 1
+                else len(s) == 2 and s[1] <= 16), s
 
 
 def test_sql_renders_lazily_and_stably(world, stores):

@@ -80,3 +80,71 @@ def test_sharded_int8_matches_single_device():
     # two-phase is exact per shard, so the sharded merge is bitwise exact
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def _sharded_vs_ref(n, k, valid_fn, devices, mode="fp32"):
+    """Run sharded_topk_similarity on a ``devices``-way mesh against the
+    reference scan; idx compared only on finite-score slots (slots a
+    monolithic scan also leaves -inf carry arbitrary indices)."""
+    from repro.compat import make_mesh
+    from repro.kernels.topk_similarity_i8 import quantize_rows
+    from repro.semantic.search import topk_similarity_ref
+    mesh = make_mesh((devices, 1), ("data", "model"))
+    q = jax.random.normal(jax.random.PRNGKey(0), (3, 32))
+    db = jax.random.normal(jax.random.PRNGKey(1), (n, 32))
+    valid = jnp.asarray(valid_fn(n))
+    i8 = quantize_rows(db) if mode == "int8" else None
+    ref_s, ref_i = topk_similarity_ref(q, db, valid, k)
+    s, i = sharded_topk_similarity(q, db, valid, k, mesh, mode=mode, i8=i8)
+    ref_s, ref_i = np.asarray(ref_s), np.asarray(ref_i)
+    s, i = np.asarray(s), np.asarray(i)
+    if mode == "fp32":
+        np.testing.assert_allclose(s, ref_s, rtol=1e-5)
+    else:
+        np.testing.assert_array_equal(s, ref_s)
+    finite = ref_s > -np.inf
+    np.testing.assert_array_equal(np.where(finite, i, 0),
+                                  np.where(finite, ref_i, 0))
+
+
+def test_sharded_topk_unequal_rows(multi_device):
+    """Row count not divisible by the shard count: padded rows are invalid
+    (-inf) and can never displace a real candidate."""
+    for mode in ("fp32", "int8"):
+        _sharded_vs_ref(250, 8, lambda n: np.ones((n,), bool),
+                        devices=min(4, multi_device), mode=mode)
+
+
+def test_sharded_topk_rows_below_k(multi_device):
+    """Shards holding fewer than k rows contribute their full row count;
+    the merged result still covers the global top-k."""
+    for mode in ("fp32", "int8"):
+        _sharded_vs_ref(10, 8, lambda n: np.ones((n,), bool),
+                        devices=min(4, multi_device), mode=mode)
+
+
+def test_sharded_topk_all_invalid_shard(multi_device):
+    """A shard whose rows are all invalid-masked contributes only -inf
+    partials; valid rows elsewhere fill the merged top-k."""
+    devices = min(4, multi_device)
+
+    def valid_fn(n):
+        v = np.ones((n,), bool)
+        v[: n // devices] = False           # first shard fully invalid
+        return v
+
+    for mode in ("fp32", "int8"):
+        _sharded_vs_ref(64, 8, valid_fn, devices=devices, mode=mode)
+
+
+def test_sharded_topk_fewer_valid_than_k(multi_device):
+    """Fewer valid rows than k in total: every valid row surfaces, the
+    remaining slots are -inf exactly like the monolithic scan."""
+    def valid_fn(n):
+        v = np.zeros((n,), bool)
+        v[::13] = True                      # 5 valid rows, k=8
+        return v
+
+    for mode in ("fp32", "int8"):
+        _sharded_vs_ref(60, 8, valid_fn, devices=min(4, multi_device),
+                        mode=mode)

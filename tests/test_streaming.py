@@ -31,6 +31,7 @@ from repro.core.refine import MockVerifier
 from repro.core import stores as stores_mod
 from repro.core.stores import (SegmentStats, append_stores,
                                entity_search_bounds, seal_stores)
+from repro.compat import make_mesh
 from repro.core.streaming import _Bank, _merge_topk
 from repro.semantic import OracleEmbedder
 from repro.semantic.search import topk_similarity_ref, \
@@ -150,7 +151,12 @@ def test_segment_stats_merge_by_addition():
 # ---------------------------------------------------------------------------
 # tentpole invariant 1: segmentation transparency (monolithic == K splits)
 # ---------------------------------------------------------------------------
-def _check_split_equivalence(world, splits, query, search_mode="fp32"):
+def _check_split_equivalence(world, splits, query, search_mode="fp32",
+                             devices=1):
+    """``devices > 1`` additionally places the segmented store across a
+    ``devices``-way mesh — sharded per-device execution must stay bitwise
+    equal to the monolithic single-device sweep (and so must its EXPLAIN
+    estimates, which are placement-independent by construction)."""
     mono = ingest(world, _emb())
     seg = _build_split(world, splits, _caps(mono))
     assert len(seg.segments) == len(splits) + 1
@@ -161,8 +167,10 @@ def _check_split_equivalence(world, splits, query, search_mode="fp32"):
     assert (st_m.rel_rows, st_m.entity_rows) == (st_s.rel_rows,
                                                  st_s.entity_rows)
 
+    mesh = (make_mesh((devices, 1), ("data", "model"))
+            if devices > 1 else None)
     e_m = LazyVLMEngine(mono, _emb(), search_mode=search_mode)
-    e_s = LazyVLMEngine(seg, _emb(), search_mode=search_mode)
+    e_s = LazyVLMEngine(seg, _emb(), search_mode=search_mode, mesh=mesh)
 
     # per-segment top-k + merge is bitwise the monolithic sweep
     import jax.numpy as jnp
@@ -209,6 +217,44 @@ def test_split_equivalence_property(clean_world, data):
     splits = data.draw(st.lists(st.integers(1, n - 1), min_size=0,
                                 max_size=3, unique=True).map(sorted))
     _check_split_equivalence(clean_world, splits, example_2_1())
+
+
+# ---------------------------------------------------------------------------
+# tentpole invariant 1b: placement invariance (mesh == monolithic, bitwise)
+# ---------------------------------------------------------------------------
+def _device_counts():
+    import jax
+    return [d for d in (1, 2, 4, 8) if d <= jax.device_count()]
+
+
+def test_placed_vs_monolithic_bitwise(clean_world, multi_device):
+    """Seeded fallback for the placed-invariance property: random segment
+    boundaries on every available mesh width, both search modes."""
+    rng = np.random.default_rng(23)
+    n = clean_world.cfg.num_segments
+    for devices in _device_counts():
+        k = int(rng.integers(1, 4))
+        splits = sorted(int(s) for s in
+                        rng.choice(np.arange(1, n), size=k, replace=False))
+        for mode in ("fp32", "int8"):
+            _check_split_equivalence(clean_world, splits, example_2_1(),
+                                     search_mode=mode, devices=devices)
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_placement_invariance_property(clean_world, multi_device, data):
+    """Hypothesis property: randomized segment boundaries × device count ×
+    search mode — the placed mesh engine's search results, ``StoreStats``
+    totals, EXPLAIN estimates, and full ``QueryResult`` are all bitwise
+    equal to the monolithic single-device engine's."""
+    n = clean_world.cfg.num_segments
+    splits = data.draw(st.lists(st.integers(1, n - 1), min_size=1,
+                                max_size=3, unique=True).map(sorted))
+    devices = data.draw(st.sampled_from(_device_counts()))
+    mode = data.draw(st.sampled_from(["fp32", "int8"]))
+    _check_split_equivalence(clean_world, splits, example_2_1(),
+                             search_mode=mode, devices=devices)
 
 
 def test_segmented_topk_matches_ref_oracle():
