@@ -46,6 +46,12 @@ def check(path: str, expect_modules=()) -> int:
     if placed:
         assert placed[0]["value"] == 1, \
             "placed (sharded) segment execution diverged from monolithic"
+    coal = [r for r in rows
+            if r["name"] == "serving/coalesced_vs_sequential"]
+    if coal:
+        assert coal[0]["value"] == 1, \
+            ("runtime-coalesced concurrent execution diverged from "
+             "sequential per-query execution")
     sratio = [r for r in rows
               if r["name"].startswith("streaming/incr_vs_full_bytes")]
     bad = [r for r in sratio if r["value"] >= 1.0]

@@ -13,6 +13,9 @@
   cascade      — budgeted VLM cascade: calls avoided + wall-clock vs full
   streaming    — segmented ingest + incremental continuous queries vs full
                  re-execution (bytes/launches model, exactness asserted)
+  serving      — multi-tenant runtime: coalesced concurrent queries +
+                 scheduled subscription refreshes vs a sequential loop
+                 (qps, p50/p99, exactness asserted)
   roofline     — printed separately: python -m benchmarks.roofline
 
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
@@ -47,10 +50,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy, cascade, kernels, multi_query,
-                            parallelism, pruning, scaling, streaming,
-                            topk_search, updates)
+                            parallelism, pruning, scaling, serving,
+                            streaming, topk_search, updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
-               kernels, topk_search, cascade, streaming]
+               kernels, topk_search, cascade, streaming, serving]
     if args.modules:
         want = {m.strip() for m in args.modules.split(",")}
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}

@@ -1,0 +1,194 @@
+"""Multi-tenant serving runtime: coalesced vs. sequential execution under
+a mixed interactive + subscription workload.
+
+The serving claim, measured in two passes:
+
+* **exactness pass** (versioned stores, standing subscriptions, verifier
+  on): many users' queries admitted through the runtime's cost-based
+  scheduler and **coalesced** into shared ``query_batch`` calls must
+  return results **bit-identical** to a one-user-at-a-time sequential
+  loop over the same arrival schedule, across store appends that also
+  schedule incremental subscription refreshes through the same admission
+  budget (``serving/coalesced_vs_sequential`` is asserted by
+  ``benchmarks.check_schema``).
+* **throughput pass** (steady state, warm plan caches and jitted
+  programs, paired rounds a la ``benchmarks.multi_query``): the same
+  burst-arrival schedule driven through the runtime vs. a sequential
+  ``query()`` loop. Coalescing amortizes the fused stage launches across
+  users, so sustained qps must beat sequential. Latency percentiles come
+  from the ticket lifecycle timestamps, so queueing delay is reported
+  separately from execution time.
+
+Workload: a precomputed burst-arrival schedule in waves; queries drawn
+(with duplicates — hot queries recur across users) from the 8-query
+overlap pool under randomized priorities from four tenant sessions;
+between exactness-pass waves, video keeps arriving
+(``ingest_incremental``), refreshing two standing ``follow`` streams.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.refine import MockVerifier
+from repro.semantic import OracleEmbedder
+from repro.serving import BatchBudget, ServingRuntime
+from repro.session import Session, SessionRegistry
+from repro.video import ingest, ingest_incremental, overlapping_queries
+
+SEGMENTS = 12
+BASE = 8                       # segments ingested before serving starts
+WAVES = 3                      # arrival waves (appends land between them)
+WAVE_SIZE = 8                  # interactive submissions per wave
+TENANTS = 4
+ROUNDS = 5                     # paired steady-state timing rounds
+
+
+def _world():
+    w = C.build_world(num_segments=SEGMENTS, frames=16, objects=6, seed=7)
+    w.stage_event_2_1(vid=5)
+    return w
+
+
+def _schedule(rng, pool_size):
+    """Precomputed open-loop arrival schedule: per wave, (query index,
+    priority, tenant) triples. Duplicates are intentional — they are what
+    cross-user coalescing dedupes."""
+    return [[(int(rng.integers(0, pool_size)), int(rng.integers(0, 3)),
+              int(rng.integers(0, TENANTS)))
+             for _ in range(WAVE_SIZE)]
+            for _ in range(WAVES)]
+
+
+def _same(r1, r2):
+    return (r1.segments == r2.segments and r1.scores == r2.scores
+            and (r1.end_frames == r2.end_frames).all() and r1.sql == r2.sql)
+
+
+def run():
+    world = _world()
+    emb = OracleEmbedder(dim=64)
+    full = ingest(world, emb)
+    caps = dict(entity_capacity=full.entities.capacity,
+                rel_capacity=full.relationships.capacity)
+    queries = overlapping_queries(world)
+    rng = np.random.default_rng(11)
+    schedule = _schedule(rng, len(queries))
+    appends = [(BASE + 2 * i, BASE + 2 * (i + 1)) for i in range(WAVES - 1)]
+    n_interactive = WAVES * WAVE_SIZE
+
+    # ---- exactness pass: versioned stores + subscriptions + verifier ----
+    base = ingest(world, emb, segment_range=(0, BASE), **caps)
+    registry = SessionRegistry(LazyVLMEngine(base, OracleEmbedder(dim=64),
+                                             verifier=MockVerifier(world)))
+    runtime = ServingRuntime(registry, budget=BatchBudget(max_queries=6))
+    streams = [runtime.follow(example_2_1(), session="dashboard"),
+               runtime.follow(queries[0], session="dashboard")]
+
+    tickets, stores = [], base
+    for w, wave in enumerate(schedule):
+        tickets.append([runtime.submit(queries[qi], session=f"user{tenant}",
+                                       priority=prio)
+                        for qi, prio, tenant in wave])
+        runtime.run_until_idle()
+        if w < len(appends):
+            stores = ingest_incremental(stores, world, emb, appends[w])
+            runtime.update_stores(stores)      # queues subscription refreshes
+            runtime.run_until_idle()
+    m = runtime.metrics
+    assert m.completed == n_interactive and m.failed == 0 and m.rejected == 0
+
+    # sequential baseline: one user at a time, same schedule + appends
+    session = Session(LazyVLMEngine(base, OracleEmbedder(dim=64),
+                                    verifier=MockVerifier(world)))
+    subs = [session.subscribe(example_2_1()), session.subscribe(queries[0])]
+    seq_results, seq_stores = [], base
+    for w, wave in enumerate(schedule):
+        seq_results.append([session.query(queries[qi]) for qi, _, _ in wave])
+        if w < len(appends):
+            seq_stores = ingest_incremental(seq_stores, world, emb,
+                                            appends[w])
+            session.update_stores(seq_stores)  # inline refreshes
+    exact = 1
+    for wave_tickets, wave_refs in zip(tickets, seq_results):
+        for t, ref in zip(wave_tickets, wave_refs):
+            exact &= int(t.error is None and _same(t.result, ref))
+    for stream, sub in zip(streams, subs):
+        exact &= int(_same(stream.result, sub.result))
+        exact &= int(stream.sub.version == sub.version == stores.store_version)
+    # every stream saw one delta per refresh (snapshot + one per append)
+    exact &= int(all(len(s) == WAVES for s in streams))
+
+    # ---- steady-state throughput: warm paired rounds, full store --------
+    # (verifier cost excluded — MockVerifier is O(rows) host python — so
+    # the timing isolates the engine's launch overheads, exactly like
+    # benchmarks.multi_query; rounds alternate so jitter hits both sides)
+    coal = ServingRuntime(LazyVLMEngine(full, OracleEmbedder(dim=64)),
+                          budget=BatchBudget(max_queries=6))
+    seq = LazyVLMEngine(full, OracleEmbedder(dim=64))
+
+    def coal_pass():
+        out = []
+        for wave in schedule:                  # burst arrival per wave
+            out += [coal.submit(queries[qi], session=f"user{tenant}",
+                                priority=prio)
+                    for qi, prio, tenant in wave]
+            coal.run_until_idle()
+        return out
+
+    def seq_pass():
+        return [seq.query(queries[qi])
+                for wave in schedule for qi, _, _ in wave]
+
+    for _ in range(2):                         # jit + plan-cache warmup
+        coal_pass()
+        seq_pass()
+    tc, ts = [], []
+    last = None
+    for _ in range(ROUNDS):
+        t0 = time.perf_counter()
+        last = coal_pass()
+        tc.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        seq_pass()
+        ts.append(time.perf_counter() - t0)
+    t_coal, t_seq = float(np.median(tc)), float(np.median(ts))
+    speedup = float(np.median([a / b for a, b in zip(ts, tc)]))
+    lat = np.array([t.latency for t in last])
+    queue = np.array([t.queue_seconds for t in last])
+
+    return [
+        ("serving/interactive_queries", n_interactive,
+         f"{WAVES} waves x {WAVE_SIZE}, {TENANTS} tenants"),
+        ("serving/refreshes", m.refreshes,
+         f"{len(streams)} subscriptions x {len(appends)} appends"),
+        ("serving/batches", m.batches,
+         f"{m.coalesced_queries / max(1, m.batches):.1f} queries "
+         "coalesced per batch (exactness pass)"),
+        ("serving/coalesced_qps",
+         round(n_interactive / max(t_coal, 1e-9), 1),
+         "sustained, runtime-scheduled"),
+        ("serving/sequential_qps", round(n_interactive / max(t_seq, 1e-9), 1),
+         "one query() at a time"),
+        ("serving/p50_ms", round(float(np.percentile(lat, 50)) * 1e3, 3),
+         "submit -> complete, steady state"),
+        ("serving/p99_ms", round(float(np.percentile(lat, 99)) * 1e3, 3),
+         "submit -> complete, steady state"),
+        ("serving/queue_p99_ms",
+         round(float(np.percentile(queue, 99)) * 1e3, 3),
+         "queueing delay (ticket timestamps), separable from execution"),
+        ("serving/speedup", round(speedup, 3),
+         "PASS >= 1.5x" if speedup >= 1.5 else "FAIL < 1.5x"),
+        ("serving/coalesced_vs_sequential", exact,
+         "scheduled concurrent == one-at-a-time (bitwise, versioned "
+         "stores + streams)"),
+    ]
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -56,6 +56,47 @@ from repro.core.physical import stages
 from repro.core.plan import Plan, pow2_bucket
 from repro.core.query import VMRQuery
 from repro.core.stores import REL_SCHEMA, _bootstrap_segments
+
+
+@dataclass(frozen=True)
+class RefreshDelta:
+    """What one incremental refresh changed in a subscription's result.
+
+    Emitted to listeners registered with :meth:`Subscription.add_listener`
+    (the serving runtime's ``follow=true`` streams are fed from exactly
+    this hook). ``added``/``removed``/``changed`` describe the ranked-
+    segment diff against the previous refresh; ``segments``/``scores`` are
+    the full post-refresh ranking, so a late-joining consumer can
+    reconstruct state from any single delta. A refresh that changed
+    nothing still emits (``empty`` is True) — one delta per refresh is the
+    stream's heartbeat contract."""
+
+    store_version: int
+    refresh_index: int                       # 1-based lifetime refresh count
+    added: Tuple[Tuple[int, int], ...]       # (segment, score) new in result
+    removed: Tuple[int, ...]                 # segment ids that dropped out
+    changed: Tuple[Tuple[int, int, int], ...]  # (segment, old, new score)
+    segments: Tuple[int, ...]                # full current ranking
+    scores: Tuple[int, ...]
+
+    @property
+    def empty(self) -> bool:
+        return not (self.added or self.removed or self.changed)
+
+
+def _result_delta(prev, result, *, store_version: int,
+                  refresh_index: int) -> RefreshDelta:
+    """Diff two ``QueryResult`` rankings into a :class:`RefreshDelta`."""
+    old = dict(zip(prev.segments, prev.scores)) if prev is not None else {}
+    new = dict(zip(result.segments, result.scores))
+    return RefreshDelta(
+        store_version=store_version, refresh_index=refresh_index,
+        added=tuple((s, new[s]) for s in result.segments if s not in old),
+        removed=tuple(s for s in prev.segments if s not in new)
+        if prev is not None else (),
+        changed=tuple((s, old[s], new[s]) for s in result.segments
+                      if s in old and old[s] != new[s]),
+        segments=tuple(result.segments), scores=tuple(result.scores))
 
 
 @dataclass
@@ -140,6 +181,9 @@ class Subscription:
         self._state: Optional[_State] = None
         # memoized runtime predicate candidate arrays (store-independent)
         self._pred_arrays = None
+        # delta listeners: called with a RefreshDelta after every refresh
+        # that actually re-evaluated (the serving runtime's follow streams)
+        self._listeners: List[Callable[[RefreshDelta], None]] = []
 
     # -- public API --------------------------------------------------------
     @property
@@ -151,6 +195,18 @@ class Subscription:
     def pending(self) -> bool:
         """True when the engine's store moved past the last refresh."""
         return self._version != self.engine.store_version
+
+    def add_listener(self, fn: Callable[[RefreshDelta], None]) -> None:
+        """Register a per-refresh delta callback (the emission hook the
+        serving runtime's streamed ``follow=true`` results are built on).
+        Each listener is invoked once per actual re-evaluation, after the
+        result is committed; a no-op refresh (version unchanged) emits
+        nothing."""
+        self._listeners.append(fn)
+
+    def remove_listener(self, fn: Callable[[RefreshDelta], None]) -> None:
+        """Unregister a callback added with :meth:`add_listener`."""
+        self._listeners.remove(fn)
 
     def refresh(self):
         """Bring the result up to date with the engine's current stores."""
@@ -169,11 +225,17 @@ class Subscription:
         # banks stay where they are)
         engine.frontier_sids = tuple(s.sid for s in segs[-2:])
         pipe = engine.physical_for(plan)
+        prev = self.result
         result = self._evaluate(plan, pipe, segs)
         self._version = version
         self.result = result
         self.stats.refreshes += 1
         result.stats.stage_seconds["refresh"] = time.perf_counter() - t0
+        if self._listeners:
+            delta = _result_delta(prev, result, store_version=version,
+                                  refresh_index=self.stats.refreshes)
+            for fn in list(self._listeners):
+                fn(delta)
         return result
 
     # -- incremental evaluation -------------------------------------------

@@ -1,7 +1,12 @@
 from repro.serving.engine import (AdmitResult, Request,  # noqa: F401
                                   ServingEngine)
 from repro.serving.frontend import QueryFrontend, QueryTicket  # noqa: F401
+from repro.serving.runtime import (AsyncServingRuntime,  # noqa: F401
+                                   AsyncStream, PRIORITY_HIGH, PRIORITY_LOW,
+                                   PRIORITY_NORMAL, RuntimeMetrics,
+                                   RuntimeOverloaded, RuntimeTicket,
+                                   ServingRuntime, StreamHandle,
+                                   SubmitRejection)
 from repro.serving.scheduler import (BatchBudget,  # noqa: F401
                                      CostBasedAdmission, Scheduler,
-                                     StragglerMitigator, SubscriptionDrain,
-                                     SubscriptionTicket)
+                                     SubscriptionDrain, SubscriptionTicket)

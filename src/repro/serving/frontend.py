@@ -24,11 +24,23 @@ from repro.session import QueryLike, Session
 
 @dataclass
 class QueryTicket:
+    """One submitted query's lifecycle record.
+
+    The four timestamps split end-to-end latency into its serving phases:
+    ``submitted_at`` (enqueued), ``admitted_at`` (popped from the queue
+    into an execution batch), ``execute_started_at`` (the batch's engine
+    call began — admission pricing may run between the two), and
+    ``completed_at``. Queueing delay is therefore separable from execution
+    time (``queue_seconds`` vs ``execute_seconds``), which is what the
+    serving runtime's p50/p99 accounting needs."""
+
     qid: int
     query: VMRQuery
     submitted_at: float
     result: Optional[QueryResult] = None
     done: bool = False
+    admitted_at: Optional[float] = None
+    execute_started_at: Optional[float] = None
     completed_at: Optional[float] = None
     error: Optional[Exception] = None    # engine failure for this batch
 
@@ -38,6 +50,21 @@ class QueryTicket:
         if self.completed_at is None:
             return None
         return self.completed_at - self.submitted_at
+
+    @property
+    def queue_seconds(self) -> Optional[float]:
+        """Seconds spent waiting in the queue before admission."""
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
+
+    @property
+    def execute_seconds(self) -> Optional[float]:
+        """Seconds inside the engine call (batch wall time for coalesced
+        tickets), once the ticket is done."""
+        if self.completed_at is None or self.execute_started_at is None:
+            return None
+        return self.completed_at - self.execute_started_at
 
 
 class QueryFrontend:
@@ -76,9 +103,14 @@ class QueryFrontend:
         admission policy is configured, by count (``max_admit``) otherwise.
         Arrival order is preserved either way."""
         if self.admission is not None:
-            return self.admission.take(self.waiting)
-        return [self.waiting.popleft()
-                for _ in range(min(self.max_admit, len(self.waiting)))]
+            batch = self.admission.take(self.waiting)
+        else:
+            batch = [self.waiting.popleft()
+                     for _ in range(min(self.max_admit, len(self.waiting)))]
+        now = time.perf_counter()
+        for ticket in batch:
+            ticket.admitted_at = now
+        return batch
 
     def step(self) -> int:
         """Admit one batch and execute it. Returns the batch size."""
@@ -89,6 +121,9 @@ class QueryFrontend:
         return len(batch)
 
     def _execute(self, batch: List[QueryTicket]) -> None:
+        started = time.perf_counter()
+        for ticket in batch:
+            ticket.execute_started_at = started
         try:
             results = self.session.query_batch([t.query for t in batch])
         except Exception as exc:

@@ -1,5 +1,4 @@
-"""Continuous-batching scheduler + straggler mitigation + cost-based
-query admission.
+"""Continuous-batching scheduler + cost-based query admission.
 
 ``Scheduler`` feeds a ``ServingEngine``: admission control (batch up to
 ``max_admit`` waiting requests whenever slots free up, bounded queueing delay),
@@ -20,18 +19,17 @@ work FIFO through a ``CostBasedAdmission`` budget — a burst of ingest
 batches can't starve interactive queries, because subscription refreshes
 are priced with exactly the same pipeline-cost currency.
 
-``StragglerMitigator`` implements the policy layer used at pod scale: per-shard
-step latencies are tracked as an EMA; a shard slower than ``threshold`` × the
-median gets its work speculatively re-issued to the fastest idle shard, first
-result wins. On this single-host build the executor is simulated (tests inject
-delays), but the policy/bookkeeping code is exactly what the pod deployment
-drives — the decision logic is host-side either way.
+(An earlier ``StragglerMitigator`` speculative-reissue policy lived here
+with no caller; PR 6's placed segment execution made per-device work a
+deterministic fused program with nothing to re-issue, so it was removed —
+see docs/serving.md for the decision record. Tail-latency control now
+belongs to the runtime's deadline scheduler, ``repro.serving.runtime``.)
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Deque, List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -204,65 +202,3 @@ class SubscriptionDrain:
         while self.waiting:
             done += self.step()
         return done
-
-
-@dataclass
-class ShardStats:
-    ema_latency: float = 0.0
-    issued: int = 0
-    reissued: int = 0
-
-
-class StragglerMitigator:
-    """Speculative re-issue policy for data-parallel shard work."""
-
-    def __init__(self, num_shards: int, *, threshold: float = 2.0,
-                 ema: float = 0.8):
-        self.stats = [ShardStats() for _ in range(num_shards)]
-        self.threshold = threshold
-        self.ema = ema
-        self.reissues = 0
-
-    def observe(self, shard: int, latency: float) -> None:
-        s = self.stats[shard]
-        s.ema_latency = (self.ema * s.ema_latency + (1 - self.ema) * latency
-                         if s.issued else latency)
-        s.issued += 1
-
-    def median_latency(self) -> float:
-        lats = [s.ema_latency for s in self.stats if s.issued]
-        return float(np.median(lats)) if lats else 0.0
-
-    def should_reissue(self, shard: int) -> bool:
-        med = self.median_latency()
-        s = self.stats[shard]
-        return bool(s.issued and med > 0
-                    and s.ema_latency > self.threshold * med)
-
-    def fastest_shard(self, exclude: int) -> int:
-        cands = [(s.ema_latency, i) for i, s in enumerate(self.stats)
-                 if i != exclude]
-        return min(cands)[1]
-
-    def run_batch(self, work: List, executor: Callable[[int, object], object]
-                  ) -> List:
-        """Execute ``work[i]`` on shard i; re-issue stragglers, first wins.
-
-        ``executor(shard, item)`` returns (result, latency_seconds).
-        """
-        results: List = [None] * len(work)
-        for i, item in enumerate(work):
-            res, lat = executor(i % len(self.stats), item)
-            self.observe(i % len(self.stats), lat)
-            results[i] = res
-        # second pass: re-issue from stragglers
-        for i in range(len(work)):
-            shard = i % len(self.stats)
-            if self.should_reissue(shard):
-                alt = self.fastest_shard(shard)
-                res, lat = executor(alt, work[i])
-                self.observe(alt, lat)
-                self.stats[shard].reissued += 1
-                self.reissues += 1
-                results[i] = res
-        return results

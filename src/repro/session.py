@@ -81,8 +81,11 @@ class Session:
     directly (``Session(engine)``) to share its plan/embedding caches.
     """
 
-    def __init__(self, engine: LazyVLMEngine):
+    def __init__(self, engine: LazyVLMEngine, name: Optional[str] = None):
         self.engine = engine
+        # registry handle: the session's name inside a SessionRegistry
+        # (None for directly-constructed sessions)
+        self.name = name
         # standing queries registered via subscribe() / follow=true
         self.subscriptions: List[Subscription] = []
 
@@ -182,6 +185,74 @@ class Session:
     @property
     def stores(self):
         return self.engine.stores
+
+
+class SessionRegistry:
+    """Named session handles multiplexed over ONE shared engine.
+
+    The multi-tenant serving runtime's unit of tenancy: every user (or
+    agent, or dashboard) gets its own :class:`Session` by name — its own
+    subscription list and identity — while all of them share the engine's
+    stores, plan cache, embedding cache, and compiled pipelines. That
+    sharing is what makes cross-user coalescing pay: two users' queries
+    compiled through one cache and executed in one ``query_batch`` hit the
+    same fused launches and the same deduped VLM pass.
+
+    ``open(name)`` is create-or-get (idempotent), so callers can use it as
+    their per-request session lookup."""
+
+    def __init__(self, engine: LazyVLMEngine):
+        self.engine = engine
+        self._sessions: Dict[str, Session] = {}
+
+    def open(self, name: str) -> Session:
+        """Return the named session, creating it on first use."""
+        session = self._sessions.get(name)
+        if session is None:
+            session = Session(self.engine, name=name)
+            self._sessions[name] = session
+        return session
+
+    def get(self, name: str) -> Session:
+        """Return an existing session; KeyError (with the available names)
+        if it was never opened."""
+        try:
+            return self._sessions[name]
+        except KeyError:
+            raise KeyError(f"unknown session {name!r}; open sessions: "
+                           f"{sorted(self._sessions)}") from None
+
+    def close(self, name: str) -> None:
+        """Drop a session handle (its subscriptions stop refreshing)."""
+        self._sessions.pop(name, None)
+
+    def names(self) -> List[str]:
+        return sorted(self._sessions)
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def __iter__(self):
+        return iter(self._sessions.values())
+
+    @property
+    def subscriptions(self) -> List[Subscription]:
+        """Every session's standing queries, registry-wide."""
+        return [sub for s in self._sessions.values()
+                for sub in s.subscriptions]
+
+    def update_stores(self, stores, *, refresh: bool = True
+                      ) -> List[Subscription]:
+        """Re-point the shared engine at updated stores; every session sees
+        the new ``store_version`` at once. Returns the subscriptions left
+        pending (refreshed inline unless ``refresh=False`` — the serving
+        runtime defers them to its scheduled refresh queue)."""
+        self.engine.stores = stores
+        pending = [s for s in self.subscriptions if s.pending]
+        if refresh:
+            for sub in pending:
+                sub.refresh()
+        return pending
 
 
 def open_video_store(stores, embedder, *, verifier=None, mesh=None,

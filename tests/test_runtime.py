@@ -1,0 +1,503 @@
+"""Multi-tenant serving runtime: coalescing exactness, scheduling
+fairness, backpressure, streamed deltas, and the asyncio wrapper.
+
+The two load-bearing invariants, pinned property-style (hypothesis where
+available, seeded fallbacks otherwise):
+
+  * **coalescing exactness** — N concurrent queries, submitted in any
+    arrival order with any priorities and executed across store versions,
+    return results bitwise-equal (segments/scores/end_frames/sql) to N
+    sequential ``Session.query`` calls on the store each executed
+    against — across fp32/int8 search modes and monolithic/segmented/
+    placed stores;
+  * **bounded-wait fairness** — a flood of cheap low-priority queries
+    cannot starve a high-priority deadline query, and aging promotes any
+    waiting entry into the top class in bounded time.
+
+Plus: structured backpressure (a full queue rejects with a
+``SubmitRejection`` value, never an exception from deep in the engine,
+never a silent drop), engine-failure containment, per-refresh delta
+streams fed by the ``Subscription.add_listener`` hook, the session
+registry, and the asyncio wrapper end-to-end.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.compat import make_mesh
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.query import QueryValidationError
+from repro.core.refine import MockVerifier
+from repro.serving import (BatchBudget, CostBasedAdmission, PRIORITY_HIGH,
+                           PRIORITY_LOW, PRIORITY_NORMAL, AsyncServingRuntime,
+                           RuntimeOverloaded, ServingRuntime, SubmitRejection)
+from repro.session import Session, SessionRegistry
+from repro.video import (SyntheticWorld, WorldConfig, ingest,
+                         ingest_incremental, overlapping_queries)
+
+
+# ---------------------------------------------------------------------------
+# fixtures + helpers
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    # spurious_prob=0: scene graphs are rng-independent, so monolithic and
+    # incremental ingests produce identical rows (the store-version cases
+    # need appends that extend, not perturb)
+    w = SyntheticWorld(WorldConfig(num_segments=8, frames_per_segment=16,
+                                   objects_per_segment=6, seed=3))
+    w.stage_event_2_1(vid=6)
+    return w
+
+
+def _emb():
+    from repro.semantic import OracleEmbedder
+    return OracleEmbedder(dim=64)
+
+
+def _caps(stores):
+    return dict(entity_capacity=stores.entities.capacity,
+                rel_capacity=stores.relationships.capacity)
+
+
+def _assert_same(r1, r2):
+    assert r1.segments == r2.segments
+    assert r1.scores == r2.scores
+    assert (r1.end_frames == r2.end_frames).all()
+    assert r1.sql == r2.sql
+
+
+def _queries(world):
+    return overlapping_queries(world)
+
+
+def _sequential_reference(world, stores, queries, *, search_mode="fp32"):
+    """Fresh single-caller engine: one ``query()`` per query, in isolation."""
+    engine = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world),
+                           search_mode=search_mode)
+    return [engine.query(q) for q in queries]
+
+
+class FakeClock:
+    """Deterministic injectable clock for scheduling tests."""
+
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# coalescing exactness (tentpole invariant)
+# ---------------------------------------------------------------------------
+def test_coalesced_batch_bitwise_equal_to_sequential(world):
+    stores = ingest(world, _emb())
+    runtime = ServingRuntime(
+        LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world)),
+        budget=BatchBudget(max_queries=8))
+    queries = _queries(world)
+    tickets = [runtime.submit(q, session=f"user{i % 3}")
+               for i, q in enumerate(queries)]
+    runtime.run_until_idle()
+    assert all(t.done and t.error is None for t in tickets)
+    # one tick coalesced the whole pool into a single query_batch
+    assert all(t.coalesced_with == len(queries) for t in tickets)
+    assert runtime.metrics.batches == 1
+    assert runtime.metrics.coalesced_queries == len(queries)
+    for t, ref in zip(tickets, _sequential_reference(world, stores, queries)):
+        _assert_same(t.result, ref)
+    # lifecycle timestamps present and ordered on runtime tickets too
+    for t in tickets:
+        assert (t.submitted_at <= t.admitted_at <= t.execute_started_at
+                <= t.completed_at)
+        assert t.queue_seconds is not None and t.execute_seconds is not None
+
+
+def _check_runtime_vs_sequential(world, *, order, priorities, split_at,
+                                 search_mode, layout, max_queries,
+                                 devices=1):
+    """Randomized-schedule exactness: submit a permutation of the query
+    pool with arbitrary priorities, half before and half after a store
+    append, and compare every ticket against a sequential ``query()`` on
+    the store version it executed at."""
+    queries = _queries(world)
+    caps = _caps(ingest(world, _emb()))
+    n = world.cfg.num_segments
+    if layout == "monolithic":
+        base = ingest(world, _emb(), segment_range=(0, n - 2), **caps)
+    else:
+        # segmented (and maybe placed): two video segments kept back so
+        # the append below is a real store-version bump on a lineage that
+        # already has multiple store segments
+        base = ingest(world, _emb(), segment_range=(0, 2), **caps)
+        base = ingest_incremental(base, world, _emb(), (2, n - 2))
+    mesh = (make_mesh((devices, 1), ("data", "model"))
+            if layout == "placed" else None)
+    engine = LazyVLMEngine(base, _emb(), verifier=MockVerifier(world),
+                           search_mode=search_mode, mesh=mesh)
+    runtime = ServingRuntime(engine,
+                             budget=BatchBudget(max_queries=max_queries))
+
+    first, second = order[:split_at], order[split_at:]
+    t1 = [runtime.submit(queries[i], session=f"u{i % 4}",
+                         priority=priorities[i]) for i in first]
+    runtime.run_until_idle()
+    grown = ingest_incremental(base, world, _emb(), (n - 2, n))
+    runtime.update_stores(grown)
+    t2 = [runtime.submit(queries[i], session=f"u{i % 4}",
+                         priority=priorities[i]) for i in second]
+    runtime.run_until_idle()
+
+    assert all(t.done and t.error is None for t in t1 + t2)
+    ref1 = _sequential_reference(world, base, [queries[i] for i in first],
+                                 search_mode=search_mode)
+    ref2 = _sequential_reference(world, grown, [queries[i] for i in second],
+                                 search_mode=search_mode)
+    for t, ref in zip(t1 + t2, ref1 + ref2):
+        _assert_same(t.result, ref)
+
+
+def test_runtime_exactness_seeded(world):
+    """Seeded fallback for the coalescing-exactness property: randomized
+    arrival orders / priorities / batch budgets across both search modes
+    and store layouts."""
+    rng = np.random.default_rng(17)
+    cases = [("fp32", "monolithic"), ("fp32", "segmented"),
+             ("int8", "segmented"), ("int8", "monolithic")]
+    for mode, layout in cases:
+        order = [int(i) for i in rng.permutation(8)]
+        priorities = [int(p) for p in rng.integers(0, 3, size=8)]
+        _check_runtime_vs_sequential(
+            world, order=order, priorities=priorities,
+            split_at=int(rng.integers(0, 9)), search_mode=mode,
+            layout=layout, max_queries=int(rng.integers(1, 5)))
+
+
+def test_runtime_exactness_placed(world):
+    """Placed (mesh) engines coalesce through the sharded segment path and
+    must stay bitwise equal to the sequential single-device reference."""
+    import jax
+    devices = min(2, jax.device_count())
+    _check_runtime_vs_sequential(
+        world, order=list(range(8)), priorities=[1] * 8, split_at=5,
+        search_mode="fp32", layout="placed", max_queries=4,
+        devices=devices)
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_coalescing_exactness_property(world, data):
+    """Hypothesis property: any arrival order × priorities × admission
+    budget × store-version split × search mode × layout — coalesced,
+    priority-scheduled concurrent execution ≡ sequential per-query
+    execution, bitwise."""
+    order = data.draw(st.permutations(list(range(8))))
+    priorities = data.draw(st.lists(st.integers(0, 2), min_size=8,
+                                    max_size=8))
+    split_at = data.draw(st.integers(0, 8))
+    mode = data.draw(st.sampled_from(["fp32", "int8"]))
+    layout = data.draw(st.sampled_from(["monolithic", "segmented"]))
+    max_queries = data.draw(st.integers(1, 4))
+    _check_runtime_vs_sequential(world, order=list(order),
+                                 priorities=priorities, split_at=split_at,
+                                 search_mode=mode, layout=layout,
+                                 max_queries=max_queries)
+
+
+# ---------------------------------------------------------------------------
+# scheduling: priorities, EDF, aging, fairness
+# ---------------------------------------------------------------------------
+def test_flood_of_cheap_low_priority_cannot_starve_high_priority(world):
+    stores = ingest(world, _emb())
+    engine = LazyVLMEngine(stores, _emb())
+    runtime = ServingRuntime(engine, budget=BatchBudget(max_queries=2),
+                             max_queue=256)
+    queries = _queries(world)
+    flood = [runtime.submit(queries[i % 4], priority=PRIORITY_LOW)
+             for i in range(20)]
+    urgent = runtime.submit(queries[6], priority=PRIORITY_HIGH,
+                            deadline_s=0.01)
+    # the very next tick must pick the urgent query despite 20 earlier
+    # arrivals
+    runtime.tick()
+    assert urgent.done and urgent.error is None
+    assert sum(t.done for t in flood) < len(flood)
+    runtime.run_until_idle()
+    assert all(t.done for t in flood)          # nothing starved forever
+
+
+def test_edf_orders_within_a_priority_class(world):
+    stores = ingest(world, _emb())
+    clock = FakeClock()
+    runtime = ServingRuntime(LazyVLMEngine(stores, _emb()),
+                             budget=BatchBudget(max_queries=1), clock=clock,
+                             aging_s=0)                # isolate pure EDF
+    queries = _queries(world)
+    late = runtime.submit(queries[0], deadline_s=10.0)
+    tight = runtime.submit(queries[1], deadline_s=0.5)
+    runtime.tick()
+    assert tight.done and not late.done
+
+
+def test_aging_promotes_waiting_work_bounded_time(world):
+    """Starvation-freedom: under a continuous stream of fresh high-priority
+    arrivals, a low-priority entry still completes once aging lifts it
+    into the top class (bounded by priority_levels × aging_s)."""
+    stores = ingest(world, _emb())
+    clock = FakeClock()
+    runtime = ServingRuntime(LazyVLMEngine(stores, _emb()),
+                             budget=BatchBudget(max_queries=1), clock=clock,
+                             aging_s=0.25)
+    queries = _queries(world)
+    low = runtime.submit(queries[0], priority=PRIORITY_LOW)
+    ticks_until_low = None
+    for i in range(8):
+        runtime.submit(queries[1 + i % 3], priority=PRIORITY_HIGH)
+        clock.advance(0.3)
+        runtime.tick()
+        if low.done and ticks_until_low is None:
+            ticks_until_low = i + 1
+    # 2 classes x 0.25s aging / 0.3s per tick -> promoted by tick 3; EDF
+    # then prefers its (oldest) deadline over every fresh arrival
+    assert ticks_until_low is not None and ticks_until_low <= 3
+
+
+def test_refreshes_and_queries_interleave_under_shared_budget(world):
+    n = world.cfg.num_segments
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, n - 1), **caps)
+    session = Session(LazyVLMEngine(base, _emb(),
+                                    verifier=MockVerifier(world)))
+    runtime = ServingRuntime(session, budget=BatchBudget(max_queries=3))
+    s1 = runtime.follow(example_2_1())
+    s2 = runtime.follow(_queries(world)[0])
+    queries = _queries(world)
+    tickets = [runtime.submit(q) for q in queries[:4]]
+    grown = ingest_incremental(base, world, _emb(), (n - 1, n))
+    assert runtime.update_stores(grown) == 2           # both subs enqueued
+    assert runtime.queue_depth == 6
+    processed = runtime.tick()
+    assert processed == 3          # one shared-budget batch, mixed kinds
+    runtime.run_until_idle()
+    assert all(t.done for t in tickets)
+    assert runtime.metrics.refreshes == 2
+    # both streams got their refresh delta; results stay exact vs cold
+    assert s1.sub.version == grown.store_version
+    cold = LazyVLMEngine(grown, _emb(),
+                         verifier=MockVerifier(world)).query(example_2_1())
+    _assert_same(s1.result, cold)
+    assert len(s1) >= 1 and len(s2) >= 1
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+def test_full_queue_rejects_with_structured_error(world):
+    stores = ingest(world, _emb())
+    runtime = ServingRuntime(LazyVLMEngine(stores, _emb()),
+                             budget=BatchBudget(max_queries=4), max_queue=4)
+    queries = _queries(world)
+    accepted = [runtime.submit(queries[i % 8]) for i in range(4)]
+    rejections = [runtime.submit(queries[i % 8]) for i in range(2)]
+    for rej in rejections:
+        # a structured value, not an exception from deep in the engine
+        assert isinstance(rej, SubmitRejection) and rej.rejected
+        assert rej.retry_after_s > 0
+        assert rej.queue_depth == 4
+        assert rej.queue_device_bytes > 0
+        assert "full" in rej.reason
+    assert runtime.metrics.rejected == 2
+    # retry-after scales with queued pipeline cost
+    assert rejections[0].retry_after_s == pytest.approx(
+        max(1e-3, rejections[0].queue_device_bytes
+            / runtime.service_bytes_per_s))
+    runtime.run_until_idle()
+    assert all(t.done for t in accepted)               # nothing dropped
+    after = runtime.submit(queries[0])                 # drained: admits again
+    assert not isinstance(after, SubmitRejection)
+    runtime.run_until_idle()
+    assert after.done
+
+
+def test_queue_cost_budget_backpressure(world):
+    stores = ingest(world, _emb())
+    engine = LazyVLMEngine(stores, _emb())
+    per_query = engine.estimate_cost(_queries(world)[0]).device_bytes
+    runtime = ServingRuntime(engine, budget=BatchBudget(max_queries=8),
+                             max_queue_device_bytes=2 * per_query)
+    q = _queries(world)[0]
+    assert not isinstance(runtime.submit(q), SubmitRejection)
+    assert not isinstance(runtime.submit(q), SubmitRejection)
+    rej = runtime.submit(q)
+    assert isinstance(rej, SubmitRejection) and "cost budget" in rej.reason
+
+
+def test_engine_failure_completes_tickets_never_kills_the_loop(world):
+    stores = ingest(world, _emb())
+    engine = LazyVLMEngine(stores, _emb())
+    runtime = ServingRuntime(engine, budget=BatchBudget(max_queries=8))
+    queries = _queries(world)
+    boom = RuntimeError("device OOM")
+
+    real = engine.query_batch
+    engine.query_batch = lambda qs: (_ for _ in ()).throw(boom)
+    t1 = runtime.submit(queries[0])
+    t2 = runtime.submit(queries[1])
+    runtime.tick()                                 # must not raise
+    assert t1.done and t1.error is boom and t1.result is None
+    assert t2.done and t2.error is boom
+    assert runtime.metrics.failed == 2
+    engine.query_batch = real
+    t3 = runtime.submit(queries[2])                # daemon keeps serving
+    runtime.run_until_idle()
+    assert t3.done and t3.error is None
+
+
+def test_malformed_query_fails_its_submitter_immediately(world):
+    from repro.core.query import (Entity, FrameSpec, Relationship, Triple,
+                                  VMRQuery)
+    stores = ingest(world, _emb())
+    runtime = ServingRuntime(LazyVLMEngine(stores, _emb()))
+    bad = VMRQuery(entities=(Entity("a", "thing"),),
+                   relationships=(Relationship("r", "near"),),
+                   frames=(FrameSpec((Triple("a", "r", "ghost"),)),))
+    with pytest.raises(QueryValidationError):
+        runtime.submit(bad)
+    assert runtime.queue_depth == 0                # nothing poisoned
+
+
+# ---------------------------------------------------------------------------
+# streamed incremental results
+# ---------------------------------------------------------------------------
+def test_follow_stream_emits_one_delta_per_refresh(world):
+    n = world.cfg.num_segments
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, 6), **caps)
+    session = Session(LazyVLMEngine(base, _emb(),
+                                    verifier=MockVerifier(world)))
+    runtime = ServingRuntime(session)
+    stream = runtime.follow(example_2_1())
+
+    first = stream.poll()
+    assert len(first) == 1                      # the registration snapshot
+    assert first[0].refresh_index == 1
+    assert first[0].segments == tuple(stream.result.segments)
+    assert 6 not in first[0].segments           # event vid not ingested yet
+
+    stores = ingest_incremental(base, world, _emb(), (6, 7))   # event lands
+    runtime.update_stores(stores)
+    runtime.run_until_idle()
+    deltas = stream.poll()
+    assert len(deltas) == 1
+    d = deltas[0]
+    assert d.refresh_index == 2
+    assert d.store_version == stores.store_version
+    assert any(seg == 6 for seg, _ in d.added)  # the staged event appeared
+    assert not d.empty
+    # full-ranking fields let a late joiner reconstruct state
+    assert d.segments == tuple(stream.result.segments)
+    cold = LazyVLMEngine(stores, _emb(),
+                         verifier=MockVerifier(world)).query(example_2_1())
+    _assert_same(stream.result, cold)
+
+    stores2 = ingest_incremental(stores, world, _emb(), (7, n))
+    runtime.update_stores(stores2)
+    runtime.run_until_idle()
+    (d2,) = stream.poll()
+    assert d2.refresh_index == 3                # heartbeat even if unchanged
+
+    stream.close()
+    runtime.update_stores(stores2)              # no version bump: no refresh
+    assert stream.poll() == []
+
+
+def test_closed_stream_stops_receiving_but_subscription_lives(world):
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, 6), **caps)
+    session = Session(LazyVLMEngine(base, _emb(),
+                                    verifier=MockVerifier(world)))
+    runtime = ServingRuntime(session)
+    stream = runtime.follow(example_2_1())
+    stream.poll()
+    stream.close()
+    stores = ingest_incremental(base, world, _emb(), (6, 7))
+    runtime.update_stores(stores)
+    runtime.run_until_idle()
+    assert stream.poll() == []                  # closed: no more deltas
+    assert stream.sub.version == stores.store_version  # still refreshing
+
+
+# ---------------------------------------------------------------------------
+# session registry
+# ---------------------------------------------------------------------------
+def test_session_registry_shares_engine_isolates_subscriptions(world):
+    stores = ingest(world, _emb())
+    engine = LazyVLMEngine(stores, _emb())
+    reg = SessionRegistry(engine)
+    a, b = reg.open("alice"), reg.open("bob")
+    assert reg.open("alice") is a               # create-or-get
+    assert a is not b and a.engine is b.engine is engine
+    assert a.name == "alice" and reg.names() == ["alice", "bob"]
+    sub = a.subscribe(example_2_1())
+    assert a.subscriptions == [sub] and b.subscriptions == []
+    assert reg.subscriptions == [sub]
+    with pytest.raises(KeyError, match="alice"):
+        reg.get("carol")
+    reg.close("bob")
+    assert reg.names() == ["alice"]
+    # both tenants' queries price/compile through ONE shared plan cache
+    q = _queries(world)[0]
+    a.query(q)
+    misses = engine.plan_cache.misses
+    b.query(q)
+    assert engine.plan_cache.misses == misses
+
+
+# ---------------------------------------------------------------------------
+# asyncio wrapper
+# ---------------------------------------------------------------------------
+def test_async_runtime_end_to_end(world):
+    n = world.cfg.num_segments
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, 6), **caps)
+    queries = _queries(world)
+    refs = _sequential_reference(world, base, queries[:4])
+
+    async def main():
+        session = Session(LazyVLMEngine(base, _emb(),
+                                        verifier=MockVerifier(world)))
+        core = ServingRuntime(session, budget=BatchBudget(max_queries=4))
+        async with AsyncServingRuntime(core, idle_sleep_s=0.0) as rt:
+            # concurrent awaitable submissions coalesce through the core
+            results = await asyncio.gather(
+                *(rt.submit(q, session=f"user{i}")
+                  for i, q in enumerate(queries[:4])))
+            for r, ref in zip(results, refs):
+                _assert_same(r, ref)
+
+            stream = await rt.follow(example_2_1())
+            snap = await asyncio.wait_for(stream.__anext__(), timeout=10)
+            assert snap.refresh_index == 1
+            grown = ingest_incremental(base, world, _emb(), (6, n))
+            rt.update_stores(grown)
+            delta = await asyncio.wait_for(stream.__anext__(), timeout=10)
+            assert delta.store_version == grown.store_version
+            assert any(seg == 6 for seg, _ in delta.added)
+            stream.close()
+
+            # backpressure surfaces as a typed exception, not a hang
+            core.max_queue = 0
+            with pytest.raises(RuntimeOverloaded) as exc:
+                await rt.submit(queries[0])
+            assert exc.value.rejection.retry_after_s > 0
+        assert core.metrics.completed == 4
+
+    asyncio.run(main())

@@ -1,4 +1,5 @@
-"""Serving engine: continuous batching correctness + scheduler + stragglers."""
+"""Serving engine: continuous batching correctness + scheduler + the
+cost-based query admission layer (ticket lifecycle timestamps included)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,8 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serving import (AdmitResult, Request, Scheduler, ServingEngine,
-                           StragglerMitigator)
+from repro.serving import (AdmitResult, Request, Scheduler, ServingEngine)
 
 
 @pytest.fixture(scope="module")
@@ -117,27 +117,6 @@ def test_scheduler_requeues_rejected_requests():
     assert [r.rid for r in done] == [r.rid for r in reqs]   # FIFO, complete
 
 
-def test_straggler_reissue_policy():
-    sm = StragglerMitigator(4, threshold=1.5)
-
-    def executor(shard, item):
-        return (item * 10 + shard, 5.0 if shard == 2 else 1.0)
-
-    res = sm.run_batch(list(range(8)), executor)
-    assert len(res) == 8
-    assert sm.reissues > 0
-    assert sm.stats[2].reissued > 0
-    # non-stragglers never re-issued
-    assert all(sm.stats[i].reissued == 0 for i in (0, 1, 3))
-
-
-def test_straggler_no_reissue_when_uniform():
-    sm = StragglerMitigator(4, threshold=2.0)
-    res = sm.run_batch(list(range(8)), lambda s, it: (it, 1.0))
-    assert sm.reissues == 0
-    assert res == list(range(8))
-
-
 # ---------------------------------------------------------------------------
 # cost-based query admission (PR 4)
 # ---------------------------------------------------------------------------
@@ -209,6 +188,33 @@ def test_cost_based_admission_count_ceiling(vmr_setup):
     batch = admission.take(waiting)
     assert [t.qid for t in batch] == [0, 1, 2, 3]
     assert [t.qid for t in waiting] == [4, 5]
+
+
+def test_ticket_lifecycle_timestamps_separate_queue_from_execution(vmr_setup):
+    """Tickets must record enqueue/admit/execute timestamps so queueing
+    delay is separable from execution time (the runtime's p50/p99
+    accounting needs the split, not just end-to-end latency)."""
+    from repro.serving import QueryFrontend
+    world, engine = vmr_setup
+    frontend = QueryFrontend(engine, max_admit=2)
+    tickets = [frontend.submit(q) for q in _vmr_queries(world, n=3)]
+    assert all(t.admitted_at is None and t.execute_started_at is None
+               and t.queue_seconds is None and t.execute_seconds is None
+               for t in tickets)
+    frontend.drain()
+    for t in tickets:
+        assert t.done
+        # monotone lifecycle: enqueue <= admit <= execute-start <= complete
+        assert (t.submitted_at <= t.admitted_at <= t.execute_started_at
+                <= t.completed_at)
+        assert t.queue_seconds >= 0 and t.execute_seconds >= 0
+        # the phases tile the end-to-end latency (admit->execute-start is
+        # inside the queue->completion window)
+        assert t.latency >= t.execute_seconds
+        assert abs((t.admitted_at - t.submitted_at)
+                   + (t.completed_at - t.admitted_at) - t.latency) < 1e-9
+    # batch 2 waited for batch 1: strictly later admission than submission
+    assert tickets[2].queue_seconds > 0
 
 
 def test_cost_estimates_price_through_plan_cache(vmr_setup):
