@@ -52,6 +52,17 @@ def check(path: str, expect_modules=()) -> int:
         assert coal[0]["value"] == 1, \
             ("runtime-coalesced concurrent execution diverged from "
              "sequential per-query execution")
+    faulty = [r for r in rows
+              if r["name"] == "robustness/faulty_vs_clean_exact"]
+    if faulty:
+        assert faulty[0]["value"] == 1, \
+            ("chaos-injected run (faults retried to success) diverged "
+             "from the fault-free run")
+    deg = [r for r in rows if r["name"] == "robustness/degraded_flagged"]
+    if deg:
+        assert deg[0]["value"] == 1, \
+            ("breaker-open query did not return a degraded-flagged result "
+             "with its unverified candidates attached")
     sratio = [r for r in rows
               if r["name"].startswith("streaming/incr_vs_full_bytes")]
     bad = [r for r in sratio if r["value"] >= 1.0]

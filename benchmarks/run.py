@@ -16,6 +16,9 @@
   serving      — multi-tenant runtime: coalesced concurrent queries +
                  scheduled subscription refreshes vs a sequential loop
                  (qps, p50/p99, exactness asserted)
+  robustness   — chaos-injected verifier/embedder faults: throughput/p99
+                 at 0/5/20% fault rates, faulty-vs-clean exactness and
+                 breaker-open degradation asserted
   roofline     — printed separately: python -m benchmarks.roofline
 
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
@@ -50,10 +53,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy, cascade, kernels, multi_query,
-                            parallelism, pruning, scaling, serving,
-                            streaming, topk_search, updates)
+                            parallelism, pruning, robustness, scaling,
+                            serving, streaming, topk_search, updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
-               kernels, topk_search, cascade, streaming, serving]
+               kernels, topk_search, cascade, streaming, serving, robustness]
     if args.modules:
         want = {m.strip() for m in args.modules.split(",")}
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}

@@ -1,6 +1,13 @@
 from repro.core.query import (Entity, FrameSpec, QueryValidationError,  # noqa: F401
                               Relationship, TemporalConstraint, Triple,
                               VMRQuery, example_2_1)
+from repro.core.fault import (ChaosInjector, CircuitBreaker,  # noqa: F401
+                              DeviceLossError, FaultGuard, FaultPolicy,
+                              FaultStats, FaultTimeout, FaultTolerantEmbedder,
+                              FaultTolerantVerifier, FlakyEmbedder,
+                              FlakyVerifier, RateLimitFault,
+                              ServiceUnavailable, TransientFault,
+                              TransientServiceError, seeded_jitter)
 from repro.core.plan import (Plan, PlanCache, compile_plan)  # noqa: F401
 from repro.core.executor import (LazyVLMEngine, QueryResult,  # noqa: F401
                                  QueryStats)

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fault import (FaultGuard, FaultPolicy, FaultTolerantEmbedder,
+                              FaultTolerantVerifier, ServiceUnavailable)
 from repro.core.physical import compile_physical
 from repro.core.physical.cost import StoreStats
 from repro.core.physical.ops import ExecContext, cascade_for_plan
@@ -111,6 +113,10 @@ class QueryStats:
     vlm_calls: int = 0
     frames_scanned_equivalent: int = 0   # what an e2e VLM would have ingested
     stage_seconds: Dict[str, float] = field(default_factory=dict)
+    # -- graceful degradation (verifier ServiceUnavailable mid-query) -------
+    degraded: bool = False               # some candidates went unverified
+    unverified_rows: Optional[np.ndarray] = None   # (M, 5) unique rows
+    degraded_cause: Optional[Exception] = None
 
 
 @dataclass
@@ -127,6 +133,14 @@ class QueryResult:
     is rendered **lazily** on first access from candidate arrays that are
     already on host — query execution itself does no string formatting and
     no extra device transfers for it.
+
+    ``degraded`` is the graceful-degradation contract: when the verifier
+    became :class:`ServiceUnavailable` mid-query AND the cascade's
+    monotonicity certificate could not complete the answer exactly, the
+    result is flagged with the unverified candidate row set in
+    ``unverified`` (``(M, 5)`` (vid,fid,sid,rl,oid) rows) — the matched
+    windows shown are the *confirmed-only* subset, never a silent guess.
+    A False ``degraded`` means the result is exact, faults notwithstanding.
     """
 
     segments: List[int]                  # ranked segment ids
@@ -135,6 +149,8 @@ class QueryResult:
     stats: QueryStats = field(default_factory=QueryStats)
     sql_renderer: Optional[Callable[[], List[str]]] = None
     _sql: Optional[List[str]] = field(default=None, repr=False)
+    degraded: bool = False
+    unverified: Optional[np.ndarray] = None
 
     @property
     def sql(self) -> List[str]:
@@ -153,12 +169,26 @@ class LazyVLMEngine:
                  search_mode: str = "fp32",
                  reorder_filters: bool = True,
                  embed_cache_entries: int = 4096,
-                 plan_cache_entries: int = 256):
+                 plan_cache_entries: int = 256,
+                 fault_policy: Optional[FaultPolicy] = None):
         self._stores = stores
+        # retry/backoff/breaker envelope around the remote-shaped services
+        # (verifier + embedder); guards are exposed for counter accounting
+        self.fault_policy = fault_policy
+        self.fault_guards: Dict[str, FaultGuard] = {}
+        if fault_policy is not None:
+            if verifier is not None and not isinstance(verifier,
+                                                       FaultTolerantVerifier):
+                verifier = FaultTolerantVerifier(verifier, fault_policy)
+                self.fault_guards["verifier"] = verifier.guard
+            if not isinstance(embedder, FaultTolerantEmbedder):
+                embedder = FaultTolerantEmbedder(embedder, fault_policy)
+                self.fault_guards["embedder"] = embedder.guard
         self.embedder = embedder
         # host-side text->embedding memo; both the single-query and the
         # batched path go through it (inner embedders are deterministic, so
-        # cached rows are bit-identical to recomputed ones)
+        # cached rows are bit-identical to recomputed ones; the fault guard
+        # sits INSIDE the cache, so absorbed faults never poison it)
         self._embed = CachingEmbedder(embedder,
                                       max_entries=embed_cache_entries)
         self.verifier = verifier          # None => trust the symbolic stage
@@ -207,6 +237,9 @@ class LazyVLMEngine:
         # updates (the same append-only lineage Subscription assumes) and
         # an incremental refresh re-places only NEW segments' rows.
         self._seg_bank_cache: Dict[Tuple, object] = {}
+        # ordinals reported lost (mark_device_lost); the placement pass
+        # excludes them and their segments re-place onto survivors
+        self._lost_devices: set = set()
 
     # -- store snapshot ----------------------------------------------------
     @property
@@ -354,9 +387,33 @@ class LazyVLMEngine:
             n_devices = len(self._mesh_device_table())
             self._stores, self._placement = place_stores(
                 self._stores, n_devices, frontier=self.frontier_sids,
-                prior=self._prior_assignment)
+                prior=self._prior_assignment,
+                exclude=frozenset(self._lost_devices))
             self._placement_version = v
         return self._placement
+
+    def mark_device_lost(self, ordinal: int) -> None:
+        """Record a (simulated) device loss and trigger sticky re-placement.
+
+        The current assignment is snapshotted into the prior map so
+        surviving segments stay put; only the lost device's segments move
+        (LPT onto the survivors, ``place_segments``' ``exclude`` path).
+        Placement is metadata + bank location, never data — the re-placed
+        query is bitwise-equal to the pre-loss run (pinned by the device-
+        loss tests)."""
+        if self.mesh is not None:
+            n = len(self._mesh_device_table())
+            if len(self._lost_devices | {int(ordinal)}) >= n:
+                raise RuntimeError(
+                    f"cannot lose device {ordinal}: no surviving devices")
+        self._lost_devices.add(int(ordinal))
+        if self._placement is not None:
+            self._prior_assignment.update(
+                (s.sid, d) for s, d in zip(self._stores.segments,
+                                           self._placement.assignment))
+        self._placement = None
+        self._placement_version = None
+        self._physical_cache.clear()     # pipelines embed the placement
 
     def _segment_banks(self, role: str, emb, emb_i8, valid):
         """Per-segment bank slices committed to their assigned devices.
@@ -405,10 +462,13 @@ class LazyVLMEngine:
                 role = "image" if emb is self.stores.entities.image_emb \
                     else "text"
                 banks = self._segment_banks(role, emb, emb_i8, valid)
+                table = self._mesh_device_table()
+                merge_ord = next(i for i in range(len(table))
+                                 if i not in self._lost_devices)
                 return placed_topk_similarity(
                     q_emb, banks, k, use_kernels=self.use_kernels,
                     mode=self.search_mode,
-                    merge_device=self._mesh_device_table()[0],
+                    merge_device=table[merge_ord],
                     to_device=lambda x, d: _to_device(x, d))
             # unsegmented store on a mesh: shard rows over devices and
             # keep the global shard_map sweep
@@ -460,6 +520,8 @@ class LazyVLMEngine:
             end_frames=_to_host(reach),
             sql_renderer=ctx.vals["sql_renderer"],
             stats=ctx.stats,
+            degraded=ctx.stats.degraded,
+            unverified=ctx.stats.unverified_rows,
         )
 
     # -- batched multi-query path -------------------------------------------------
@@ -661,7 +723,34 @@ class LazyVLMEngine:
             memo: Dict[tuple, bool] = {}
             cols = None
             if verif.any():
-                out = self._verify_rows(rel, masks_np & verif[:, None])
+                try:
+                    out = self._verify_rows(rel, masks_np & verif[:, None])
+                except ServiceUnavailable as exc:
+                    # verifier gone during the fused pass: every full-verify
+                    # plan in the batch degrades (confirmed-only = nothing;
+                    # their candidates are excluded and attached unverified);
+                    # budgeted plans below still run — their cascades may
+                    # complete from memo-free certificates or degrade too
+                    out = None
+                    cols = {k: _to_host(rel[k]) for k in REL_SCHEMA}
+                    calls = getattr(self.verifier, "calls", 0)
+                    for qi, p in enumerate(plans):
+                        if not p.verify.enabled or p.verify.budget > 0:
+                            continue
+                        lo = row_offs[qi]
+                        q_any = masks_np[lo: lo + counts[qi]].any(axis=0)
+                        ridx = np.nonzero(q_any)[0]
+                        if len(ridx) == 0:
+                            continue    # no candidates of its own: exact
+                        stats[qi].vlm_calls = calls
+                        stats[qi].degraded = True
+                        stats[qi].degraded_cause = exc
+                        stats[qi].unverified_rows = np.unique(
+                            np.stack([cols[k][ridx] for k in REL_SCHEMA],
+                                     axis=1), axis=0)
+                        stats[qi].refine_candidates = len(
+                            stats[qi].unverified_rows)
+                    masks = masks & ~jnp.asarray(verif)[:, None]
                 if out is not None:
                     keep_rows, uniq, verdict_u, cols = out
                     for u, vd in zip(uniq, verdict_u):
@@ -756,6 +845,8 @@ class LazyVLMEngine:
                 end_frames=_to_host(matched[qi][1]),
                 sql_renderer=renderers[qi],
                 stats=stats[qi],
+                degraded=stats[qi].degraded,
+                unverified=stats[qi].unverified_rows,
             ))
         return results
 

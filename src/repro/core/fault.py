@@ -1,0 +1,410 @@
+"""Fault tolerance for the query path: retry/backoff/breaker + chaos.
+
+The expensive, failure-prone components of a LazyVLM deployment are the
+remote-endpoint-shaped ones — the VLM verifier and the embedding service.
+This module wraps them in a :class:`FaultPolicy` envelope (bounded
+retries, exponential backoff with deterministic injectable jitter, an
+optional per-call timeout, and a circuit breaker), and provides the
+seeded chaos doubles (:class:`ChaosInjector`, :class:`FlakyVerifier`,
+:class:`FlakyEmbedder`) the robustness tests and benchmark drive — the
+query-path extension of ``repro.distributed.fault``'s step-indexed
+``FailureInjector`` idea.
+
+Exactness under faults is structural, not probabilistic: injected faults
+fire *before* the wrapped call runs, and a retry re-issues the identical
+arguments to a deterministic inner verifier/embedder — so any fault
+schedule whose transients are retried to success yields bitwise the
+fault-free results, and :class:`FaultStats` accounts for every injected
+fault (``faults_absorbed`` == the injector's ``total_injected``).
+
+When retries are exhausted or the breaker is open, callers see ONE
+terminal exception type — :class:`ServiceUnavailable` — which the
+verification paths catch to degrade *explicitly* (a ``QueryResult``
+flagged ``degraded`` carrying the unverified candidate set; see
+``physical.ops.run_cascade``) and the serving runtime classifies as
+transient for re-queue-with-backoff (``serving.runtime``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fault taxonomy
+# ---------------------------------------------------------------------------
+class TransientFault(RuntimeError):
+    """A retryable failure of one call (timeout / 5xx-ish / rate limit)."""
+
+
+class FaultTimeout(TransientFault):
+    """One call exceeded its per-call deadline."""
+
+
+class TransientServiceError(TransientFault):
+    """One call failed with a retryable service error."""
+
+
+class RateLimitFault(TransientFault):
+    """One call was rate-limited; ``retry_after_s`` is the server's hint
+    (0 = none) — backoff honors ``max(policy backoff, retry_after_s)``."""
+
+    def __init__(self, msg: str = "rate limited", retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
+class ServiceUnavailable(RuntimeError):
+    """Terminal verdict of a :class:`FaultGuard` call: the retry budget is
+    exhausted or the circuit breaker is open. Carries the envelope
+    (``op``, ``attempts``, ``elapsed_s``, ``breaker_open``) and chains the
+    last underlying fault as ``__cause__``."""
+
+    def __init__(self, msg: str, *, op: str = "call", attempts: int = 0,
+                 elapsed_s: float = 0.0, breaker_open: bool = False):
+        super().__init__(msg)
+        self.op = op
+        self.attempts = attempts
+        self.elapsed_s = elapsed_s
+        self.breaker_open = breaker_open
+
+
+class DeviceLossError(RuntimeError):
+    """A (simulated) device failure during placed segment execution.
+
+    Carries the lost device ``ordinal``; the serving runtime reacts by
+    calling ``LazyVLMEngine.mark_device_lost(ordinal)`` — sticky
+    re-placement of the lost device's segments — and re-queueing the
+    batch, whose re-execution is bitwise-equal to the pre-loss run
+    (placement is metadata, never data)."""
+
+    def __init__(self, ordinal: int, msg: str = ""):
+        super().__init__(msg or f"device {ordinal} lost")
+        self.ordinal = int(ordinal)
+
+
+# ---------------------------------------------------------------------------
+# policy + breaker + guard
+# ---------------------------------------------------------------------------
+def seeded_jitter(seed: int = 0) -> Callable[[int], float]:
+    """Deterministic jitter stream in [0, 1): the injectable default for
+    tests and benchmarks (production can pass any callable)."""
+    rng = np.random.default_rng(seed)
+    return lambda attempt: float(rng.random())
+
+
+@dataclass
+class FaultPolicy:
+    """Knobs of the retry/backoff/timeout/breaker envelope.
+
+    ``sleep``/``clock`` are injectable so every test is deterministic and
+    sleep-free; ``jitter`` maps the attempt index to a fraction in [0, 1)
+    that scales the backoff up by at most 2x (``seeded_jitter`` gives a
+    reproducible stream). ``call_timeout_s`` is checked against the
+    injectable clock after each call — a too-slow call counts as a
+    :class:`FaultTimeout` and is retried (deterministic callees make the
+    retry bit-identical, so discarding the slow result is safe)."""
+
+    max_retries: int = 3
+    backoff_base_s: float = 0.01
+    backoff_multiplier: float = 2.0
+    backoff_max_s: float = 1.0
+    jitter: Optional[Callable[[int], float]] = None
+    call_timeout_s: Optional[float] = None
+    breaker_threshold: int = 5          # consecutive failures to open
+    breaker_cooldown_s: float = 1.0     # open -> half-open probe delay
+    sleep: Callable[[float], None] = time.sleep
+    clock: Callable[[], float] = time.perf_counter
+
+    def backoff_s(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (1-based)."""
+        base = min(self.backoff_max_s,
+                   self.backoff_base_s
+                   * self.backoff_multiplier ** max(0, attempt - 1))
+        frac = self.jitter(attempt) if self.jitter is not None else 0.0
+        return base * (1.0 + frac)
+
+
+@dataclass
+class FaultStats:
+    """Lifetime fault accounting for one guard (one wrapped service)."""
+
+    attempts: int = 0            # calls issued to the inner service
+    successes: int = 0
+    retries: int = 0             # attempts that were retried after a fault
+    timeouts: int = 0
+    transient_errors: int = 0
+    rate_limits: int = 0
+    exhausted: int = 0           # calls that ran out of retry budget
+    breaker_short_circuits: int = 0   # calls refused while the breaker was open
+
+    @property
+    def faults_absorbed(self) -> int:
+        """Faults observed (== the chaos injector's ``total_injected`` when
+        every fault was injected and nothing short-circuited)."""
+        return self.timeouts + self.transient_errors + self.rate_limits
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker with a half-open probe.
+
+    closed → (``threshold`` consecutive failures) → open → (after
+    ``cooldown_s``) → half-open: ONE probe call is allowed; success closes
+    the breaker, failure re-opens it (fresh cooldown). While open,
+    ``allow()`` is False and the guard short-circuits without touching the
+    inner service."""
+
+    def __init__(self, threshold: int, cooldown_s: float,
+                 clock: Callable[[], float]):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self.failures = 0            # consecutive
+        self.opened_at: Optional[float] = None
+        self.opens = 0               # lifetime open transitions
+
+    @property
+    def state(self) -> str:
+        if self.opened_at is None:
+            return "closed"
+        if self.clock() - self.opened_at >= self.cooldown_s:
+            return "half_open"
+        return "open"
+
+    def allow(self) -> bool:
+        return self.state != "open"
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self.opened_at = None
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.opened_at is not None:       # half-open probe failed
+            self.opened_at = self.clock()
+            self.opens += 1
+        elif self.failures >= self.threshold:
+            self.opened_at = self.clock()
+            self.opens += 1
+
+
+class FaultGuard:
+    """The retry/backoff/timeout/breaker envelope around one service.
+
+    One guard = one breaker + one :class:`FaultStats`; share a guard
+    across wrappers when they front the same physical endpoint."""
+
+    def __init__(self, policy: Optional[FaultPolicy] = None,
+                 name: str = "service"):
+        self.policy = policy or FaultPolicy()
+        self.name = name
+        self.breaker = CircuitBreaker(self.policy.breaker_threshold,
+                                      self.policy.breaker_cooldown_s,
+                                      self.policy.clock)
+        self.stats = FaultStats()
+
+    def call(self, fn: Callable[[], object], *, op: str = "call"):
+        p = self.policy
+        t_start = p.clock()
+        last: Optional[BaseException] = None
+        for attempt in range(1, p.max_retries + 2):
+            if not self.breaker.allow():
+                self.stats.breaker_short_circuits += 1
+                err = ServiceUnavailable(
+                    f"{self.name}.{op}: circuit breaker open", op=op,
+                    attempts=attempt - 1, elapsed_s=p.clock() - t_start,
+                    breaker_open=True)
+                err.__cause__ = last
+                raise err
+            self.stats.attempts += 1
+            t0 = p.clock()
+            try:
+                out = fn()
+                if (p.call_timeout_s is not None
+                        and p.clock() - t0 > p.call_timeout_s):
+                    raise FaultTimeout(
+                        f"{self.name}.{op} exceeded {p.call_timeout_s}s")
+            except TransientFault as exc:
+                last = exc
+                if isinstance(exc, FaultTimeout):
+                    self.stats.timeouts += 1
+                elif isinstance(exc, RateLimitFault):
+                    self.stats.rate_limits += 1
+                else:
+                    self.stats.transient_errors += 1
+                self.breaker.record_failure()
+                if attempt <= p.max_retries and self.breaker.allow():
+                    self.stats.retries += 1
+                    delay = p.backoff_s(attempt)
+                    if isinstance(exc, RateLimitFault):
+                        delay = max(delay, exc.retry_after_s)
+                    p.sleep(delay)
+                    continue
+                self.stats.exhausted += 1
+                raise ServiceUnavailable(
+                    f"{self.name}.{op}: {'breaker opened' if not self.breaker.allow() else 'retries exhausted'}"
+                    f" after {attempt} attempts", op=op, attempts=attempt,
+                    elapsed_s=p.clock() - t_start,
+                    breaker_open=not self.breaker.allow()) from exc
+            self.breaker.record_success()
+            self.stats.successes += 1
+            return out
+        raise AssertionError("unreachable")     # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# service wrappers (verifier + embedder)
+# ---------------------------------------------------------------------------
+class FaultTolerantVerifier:
+    """Any verifier (``verify(rows) -> bool (M,)`` + ``calls``) behind a
+    :class:`FaultGuard`. Retries re-verify the identical rows, so with a
+    deterministic inner verifier the absorbed-fault run is bit-identical
+    to the fault-free one; terminal failures surface as
+    :class:`ServiceUnavailable` for the cascade to degrade on."""
+
+    def __init__(self, inner, policy: Optional[FaultPolicy] = None, *,
+                 guard: Optional[FaultGuard] = None):
+        self.inner = inner
+        self.guard = guard or FaultGuard(policy, name="verifier")
+
+    @property
+    def calls(self) -> int:
+        return getattr(self.inner, "calls", 0)
+
+    def verify(self, rows: np.ndarray) -> np.ndarray:
+        return self.guard.call(lambda: self.inner.verify(rows), op="verify")
+
+
+class FaultTolerantEmbedder:
+    """Any embedder (``embed_texts``/``embed_for_image``/``dim``) behind a
+    :class:`FaultGuard`. Sits *inside* the engine's ``CachingEmbedder``,
+    so absorbed faults never poison the cache (only successful rows are
+    memoized)."""
+
+    def __init__(self, inner, policy: Optional[FaultPolicy] = None, *,
+                 guard: Optional[FaultGuard] = None):
+        self.inner = inner
+        self.guard = guard or FaultGuard(policy, name="embedder")
+
+    @property
+    def dim(self) -> int:
+        return self.inner.dim
+
+    def embed_texts(self, texts, rng=None) -> np.ndarray:
+        return self.guard.call(lambda: self.inner.embed_texts(texts, rng),
+                               op="embed_texts")
+
+    def embed_for_image(self, texts) -> np.ndarray:
+        return self.guard.call(lambda: self.inner.embed_for_image(texts),
+                               op="embed_for_image")
+
+
+# ---------------------------------------------------------------------------
+# chaos injection (test doubles)
+# ---------------------------------------------------------------------------
+class ChaosInjector:
+    """Seeded per-call fault schedule for the query path.
+
+    Each ``maybe_fail()`` draws once from a seeded stream and raises a
+    :class:`FaultTimeout` / :class:`TransientServiceError` /
+    :class:`RateLimitFault` (rate limits arrive in bursts of
+    ``burst_len``) or returns. ``max_consecutive`` caps the consecutive
+    faults injected — set it at or below the policy's ``max_retries`` to
+    guarantee every call eventually succeeds, the precondition of the
+    bitwise faulty-equals-clean property. The schedule is a pure function
+    of (seed, call index), so a run is exactly replayable."""
+
+    def __init__(self, *, seed: int = 0, timeout_rate: float = 0.0,
+                 error_rate: float = 0.0, rate_limit_rate: float = 0.0,
+                 burst_len: int = 2, retry_after_s: float = 0.0,
+                 max_consecutive: Optional[int] = None):
+        self.rng = np.random.default_rng(seed)
+        self.timeout_rate = timeout_rate
+        self.error_rate = error_rate
+        self.rate_limit_rate = rate_limit_rate
+        self.burst_len = max(1, burst_len)
+        self.retry_after_s = retry_after_s
+        self.max_consecutive = max_consecutive
+        self.calls_seen = 0
+        self.injected = {"timeout": 0, "error": 0, "rate_limit": 0}
+        self._consecutive = 0
+        self._burst_left = 0
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def _fire(self, kind: str):
+        self._consecutive += 1
+        self.injected[kind] += 1
+        if kind == "timeout":
+            raise FaultTimeout("injected timeout")
+        if kind == "error":
+            raise TransientServiceError("injected transient error")
+        raise RateLimitFault("injected rate limit",
+                             retry_after_s=self.retry_after_s)
+
+    def maybe_fail(self) -> None:
+        self.calls_seen += 1
+        if (self.max_consecutive is not None
+                and self._consecutive >= self.max_consecutive):
+            self._consecutive = 0
+            self._burst_left = 0
+            return
+        if self._burst_left > 0:
+            self._burst_left -= 1
+            self._fire("rate_limit")
+        u = float(self.rng.random())
+        if u < self.timeout_rate:
+            self._fire("timeout")
+        u -= self.timeout_rate
+        if u < self.error_rate:
+            self._fire("error")
+        u -= self.error_rate
+        if u < self.rate_limit_rate:
+            self._burst_left = self.burst_len - 1
+            self._fire("rate_limit")
+        self._consecutive = 0
+
+
+class FlakyVerifier:
+    """Chaos double: a deterministic verifier behind a seeded fault
+    schedule. Faults fire *before* the inner call, so an injected fault
+    never consumes inner ``calls`` and a retried call returns exactly the
+    verdicts the fault-free run would have."""
+
+    def __init__(self, inner, injector: ChaosInjector):
+        self.inner = inner
+        self.injector = injector
+
+    @property
+    def calls(self) -> int:
+        return getattr(self.inner, "calls", 0)
+
+    def verify(self, rows: np.ndarray) -> np.ndarray:
+        self.injector.maybe_fail()
+        return self.inner.verify(rows)
+
+
+class FlakyEmbedder:
+    """Chaos double for the embedding service (same contract as
+    :class:`FlakyVerifier`: fault first, then the deterministic call)."""
+
+    def __init__(self, inner, injector: ChaosInjector):
+        self.inner = inner
+        self.injector = injector
+
+    @property
+    def dim(self) -> int:
+        return self.inner.dim
+
+    def embed_texts(self, texts, rng=None) -> np.ndarray:
+        self.injector.maybe_fail()
+        return self.inner.embed_texts(texts, rng)
+
+    def embed_for_image(self, texts) -> np.ndarray:
+        self.injector.maybe_fail()
+        return self.inner.embed_for_image(texts)

@@ -200,8 +200,8 @@ class SegmentPlacement:
         return "; ".join(parts)
 
 
-def place_segments(segments, n_devices: int, *, frontier=(), prior=None
-                   ) -> "SegmentPlacement":
+def place_segments(segments, n_devices: int, *, frontier=(), prior=None,
+                   exclude=()) -> "SegmentPlacement":
     """The placement-aware pass: assign store segments to mesh devices.
 
     Deterministic and **sticky**: a segment that already carries a device
@@ -221,8 +221,18 @@ def place_segments(segments, n_devices: int, *, frontier=(), prior=None
 
     Placement never affects results (the placed merge is bitwise equal to
     the monolithic sweep); it only decides which device pays which scan.
+
+    ``exclude`` lists *lost* device ordinals (device-loss recovery): a
+    sticky assignment to an excluded device is invalidated — the segment
+    re-places greedily onto the survivors — and the greedy pass never
+    picks an excluded ordinal. Surviving segments keep their devices, so
+    a loss moves exactly the lost device's segments.
     """
     n_devices = max(1, int(n_devices))
+    exclude = frozenset(int(d) for d in exclude)
+    live = [d for d in range(n_devices) if d not in exclude]
+    if not live:
+        raise ValueError(f"every device of {n_devices} is excluded")
     segments = tuple(segments)
     loads = [0] * n_devices
     assignment = [0] * len(segments)
@@ -232,14 +242,14 @@ def place_segments(segments, n_devices: int, *, frontier=(), prior=None
         dev = getattr(seg, "device", None)
         if dev is None:
             dev = prior.get(seg.sid)
-        if dev is not None and 0 <= dev < n_devices:
+        if dev is not None and 0 <= dev < n_devices and dev not in exclude:
             assignment[i] = dev
             loads[dev] += seg.ent_rows
         else:
             pending.append(i)
 
     def least_loaded() -> int:
-        return min(range(n_devices), key=lambda d: (loads[d], d))
+        return min(live, key=lambda d: (loads[d], d))
 
     frontier = set(frontier)
     front_pending = [i for i in pending if segments[i].sid in frontier]
@@ -260,7 +270,8 @@ def place_segments(segments, n_devices: int, *, frontier=(), prior=None
                             loads=tuple(loads))
 
 
-def place_stores(stores, n_devices: int, *, frontier=(), prior=None):
+def place_stores(stores, n_devices: int, *, frontier=(), prior=None,
+                 exclude=()):
     """Run :func:`place_segments` and carry the assignment on the store's
     ``StoreSegment`` table (the per-segment ``device`` field).
 
@@ -273,7 +284,7 @@ def place_stores(stores, n_devices: int, *, frontier=(), prior=None):
     import dataclasses
     segments = tuple(getattr(stores, "segments", ()))
     placement = place_segments(segments, n_devices, frontier=frontier,
-                               prior=prior)
+                               prior=prior, exclude=exclude)
     if all(getattr(s, "device", None) == placement.assignment[i]
            for i, s in enumerate(segments)):
         return stores, placement

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import temporal as temporal_lib
+from repro.core.fault import ServiceUnavailable
 from repro.core.physical import stages
 from repro.core.physical.cost import CostEstimate, StoreStats, ZERO_COST
 from repro.core.stores import REL_SCHEMA
@@ -302,7 +303,14 @@ class VlmVerifyOp(PhysicalOp):
         # no-verifier fast path never reaches
         masks_np = stages.to_host(masks)
         if self.budget <= 0:
-            out = engine._verify_rows(rel, masks_np)
+            try:
+                out = engine._verify_rows(rel, masks_np)
+            except ServiceUnavailable as exc:
+                # verifier gone mid-query: degrade explicitly — exclude every
+                # unverified candidate (conservative, monotone-safe) and
+                # attach the unverified row set; never a silent wrong answer
+                _degrade_full(ctx, rel, masks, masks_np, exc)
+                return
             if out is None:
                 return
             keep_rows, uniq, verdict_u, _ = out
@@ -322,6 +330,25 @@ class VlmVerifyOp(PhysicalOp):
                                                        jnp.asarray(keep))
         if ctx.analyze:
             ctx.actual_rows[self.label] = stats.refine_candidates
+
+
+def _degrade_full(ctx, rel, masks, masks_np, exc) -> None:
+    """Full-verification path lost the verifier entirely: keep no candidate
+    rows (an all-False keep only clears mask bits on candidate rows — non-
+    candidates have none set) and flag the result degraded with the
+    unverified unique row set attached."""
+    stats = ctx.stats
+    rows_idx = np.nonzero(masks_np.any(axis=0))[0]
+    cols = {k: stages.to_host(rel[k]) for k in REL_SCHEMA}
+    uniq = np.unique(np.stack([cols[k][rows_idx] for k in REL_SCHEMA],
+                              axis=1), axis=0)
+    stats.refine_candidates = len(uniq)
+    stats.vlm_calls = getattr(ctx.engine.verifier, "calls", 0)
+    stats.degraded = True
+    stats.unverified_rows = uniq
+    stats.degraded_cause = exc
+    keep = np.zeros((rel.capacity,), bool)
+    ctx.vals["masks"] = stages._apply_keep(masks, jnp.asarray(keep))
 
 
 def cascade_for_plan(*, engine, plan, pipeline, masks, masks_np,
@@ -349,6 +376,10 @@ def cascade_for_plan(*, engine, plan, pipeline, masks, masks_np,
         stats.refine_verified = info["verified"]
         stats.refine_passed = info["passed"]
         stats.verify_rounds = info["rounds"]
+        if info["degraded"]:
+            stats.degraded = True
+            stats.unverified_rows = info["unverified"]
+            stats.degraded_cause = info["failure"]
     return keep
 
 
@@ -367,8 +398,17 @@ def run_cascade(*, verifier, rel, masks, masks_np, pred_row_of_pos,
     content to verdicts already known (e.g. from a batch's fused pass);
     memo hits cost zero VLM calls and deterministic verifiers make them
     bit-identical to re-verification.
+
+    If the verifier becomes :class:`ServiceUnavailable` mid-cascade (retry
+    budget exhausted / breaker open), the cascade degrades *explicitly*:
+    it returns the confirmed-only keep vector (conservative — every
+    still-unverified row excluded) with ``info["degraded"]`` set and the
+    unverified unique rows attached, unless the monotonicity certificate
+    had already proven the remaining rows irrelevant — in which case the
+    result is simply exact, faults notwithstanding.
     """
-    info = {"candidates": 0, "verified": 0, "passed": 0, "rounds": 0}
+    info = {"candidates": 0, "verified": 0, "passed": 0, "rounds": 0,
+            "degraded": False, "unverified": None, "failure": None}
     any_mask = masks_np.any(axis=0)
     rows_idx = np.nonzero(any_mask)[0]
     if len(rows_idx) == 0:
@@ -429,7 +469,17 @@ def run_cascade(*, verifier, rel, masks, masks_np, pred_row_of_pos,
         if not pending:        # unreachable: all-known makes conf == opt
             break
         chunk = pending[:budget]
-        chunk_verdict = verifier.verify(uniq[chunk])
+        try:
+            chunk_verdict = verifier.verify(uniq[chunk])
+        except ServiceUnavailable as exc:
+            # the certificate above already said the unverified rows still
+            # matter, so the exact answer is out of reach: degrade to the
+            # confirmed-only keep (rows proven by verdicts, nothing more)
+            info["degraded"] = True
+            info["failure"] = exc
+            info["unverified"] = uniq[~known]
+            info["passed"] = int((verdict & known).sum())
+            return keep_conf, info
         if len(chunk_verdict) != len(chunk):
             # fail as loudly as the full-verification path would: a short
             # verdict vector must not leave rows unknown (the loop would

@@ -13,6 +13,13 @@ After the symbolic stage has pruned the search space to a candidate set of
 
 Laziness is measurable: ``calls`` counts VLM-verified frames; benchmarks
 compare it against the frames an end-to-end VLM would ingest.
+
+Against a real endpoint, either verifier should sit behind the fault
+layer's retry/backoff/breaker envelope — ``FaultTolerantVerifier`` (same
+``verify``/``calls`` contract, re-exported here from
+:mod:`repro.core.fault`), which the engine applies automatically when
+constructed with a ``fault_policy``; ``FlakyVerifier`` is the seeded
+chaos double the robustness tests wrap around ``MockVerifier``.
 """
 from __future__ import annotations
 
@@ -22,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.fault import (FaultPolicy,  # noqa: F401  (re-exports)
+                              FaultTolerantVerifier, FlakyVerifier)
 from repro.models import model as M
 from repro.semantic.tokenizer import HashTokenizer
 from repro.video.synth import PREDICATES, SyntheticWorld

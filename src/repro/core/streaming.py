@@ -209,7 +209,16 @@ class Subscription:
         self._listeners.remove(fn)
 
     def refresh(self):
-        """Bring the result up to date with the engine's current stores."""
+        """Bring the result up to date with the engine's current stores.
+
+        Retry-safe under faults: a refresh that raises (e.g. the fault
+        layer's ``ServiceUnavailable`` from a failing verifier) commits
+        nothing — ``self._state``/``self.result`` are assigned only after
+        ``_evaluate`` returns, the verdict memo is content-keyed and
+        deterministic, and the serving runtime re-queues the refresh with
+        backoff (quarantining the subscription after repeated failures) —
+        so a later successful refresh is bitwise what an unfaulted one
+        would have produced."""
         engine = self.engine
         version = engine.store_version
         if self.result is not None and version == self._version:

@@ -9,6 +9,12 @@ bitwise-identical final state versus an uninterrupted run.
 (changed pod/data/model extents) via device_put with the new shardings —
 combined with the checkpoint manager's logical-form storage this is the
 rescale path (e.g. 2-pod job resuming on 1 pod after a pod loss).
+
+The *query-path* counterpart of this module — seeded chaos schedules for
+the VLM verifier/embedder, retry/backoff/breaker policies, and device-loss
+re-placement — lives in :mod:`repro.core.fault` (the injector idea here,
+extended from step-indexed training loops to per-call service faults);
+its chaos doubles are re-exported below for discoverability.
 """
 from __future__ import annotations
 
@@ -16,6 +22,8 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 
+from repro.core.fault import (ChaosInjector,  # noqa: F401  (re-exports)
+                              DeviceLossError, FlakyEmbedder, FlakyVerifier)
 from repro.training.checkpoint import CheckpointManager
 
 

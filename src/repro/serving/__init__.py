@@ -1,6 +1,7 @@
 from repro.serving.engine import (AdmitResult, Request,  # noqa: F401
                                   ServingEngine)
-from repro.serving.frontend import QueryFrontend, QueryTicket  # noqa: F401
+from repro.serving.frontend import (QueryFailure,  # noqa: F401
+                                    QueryFrontend, QueryTicket)
 from repro.serving.runtime import (AsyncServingRuntime,  # noqa: F401
                                    AsyncStream, PRIORITY_HIGH, PRIORITY_LOW,
                                    PRIORITY_NORMAL, RuntimeMetrics,

@@ -22,6 +22,29 @@ from repro.core.query import VMRQuery
 from repro.session import QueryLike, Session
 
 
+class QueryFailure(RuntimeError):
+    """Structured terminal failure of one submitted query.
+
+    ``kind`` names the failure class (``"engine"`` — the batch's engine
+    call raised; ``"deadline"`` — the EDF deadline passed before
+    execution; ``"retries_exhausted"`` — transient failures outlived the
+    retry budget). Carries ``attempts`` (engine calls made), ``elapsed_s``
+    (since submission), ``deadline`` when relevant, and chains the
+    underlying exception as ``__cause__`` so tracebacks keep the root
+    cause."""
+
+    def __init__(self, msg: str, *, kind: str = "engine", attempts: int = 1,
+                 elapsed_s: float = 0.0, deadline: Optional[float] = None,
+                 cause: Optional[BaseException] = None):
+        super().__init__(msg)
+        self.kind = kind
+        self.attempts = attempts
+        self.elapsed_s = elapsed_s
+        self.deadline = deadline
+        if cause is not None:
+            self.__cause__ = cause
+
+
 @dataclass
 class QueryTicket:
     """One submitted query's lifecycle record.
@@ -128,15 +151,21 @@ class QueryFrontend:
             results = self.session.query_batch([t.query for t in batch])
         except Exception as exc:
             # never strand tickets: an engine failure completes the whole
-            # batch with the error attached (result stays None)
+            # batch with a structured, cause-chained failure attached
+            # (result stays None); completed_at is stamped so the ticket's
+            # queue_seconds/execute_seconds stay monotone on failure too
             now = time.perf_counter()
             for ticket in batch:
-                ticket.error = exc
+                ticket.error = QueryFailure(
+                    f"batch execution failed: {exc}", kind="engine",
+                    elapsed_s=now - ticket.submitted_at, cause=exc)
                 ticket.done = True
                 ticket.completed_at = now
                 self.finished.append(ticket)
             self.batches_run += 1
-            raise
+            raise QueryFailure(
+                f"batch of {len(batch)} failed: {exc}", kind="engine",
+                elapsed_s=now - started, cause=exc) from exc
         now = time.perf_counter()
         for ticket, result in zip(batch, results):
             ticket.result = result

@@ -57,8 +57,10 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Union
 
 from repro.core.executor import LazyVLMEngine, QueryResult
+from repro.core.fault import (DeviceLossError, ServiceUnavailable,
+                              TransientFault)
 from repro.core.streaming import RefreshDelta, Subscription, _result_delta
-from repro.serving.frontend import QueryTicket
+from repro.serving.frontend import QueryFailure, QueryTicket
 from repro.serving.scheduler import (BatchBudget, CostBasedAdmission,
                                      SubscriptionDrain)
 from repro.session import QueryLike, Session, SessionRegistry
@@ -138,6 +140,12 @@ class RuntimeMetrics:
     batches: int = 0
     coalesced_queries: int = 0       # queries that shared a >1-query batch
     peak_queue_depth: int = 0
+    # -- fault tolerance ---------------------------------------------------
+    requeued: int = 0                # transient failures re-entered the queue
+    deadline_failures: int = 0       # tickets expired before execution
+    retry_exhausted: int = 0         # tickets that outlived their retry budget
+    quarantined: int = 0             # subscriptions quarantined as poisoned
+    device_losses: int = 0           # DeviceLossError batches observed
 
 
 @dataclass
@@ -153,6 +161,8 @@ class _Entry:
     est_rows: int
     ticket: Optional[RuntimeTicket] = None     # kind == "query"
     sub: Optional[Subscription] = None         # kind == "refresh"
+    attempts: int = 0                # transient failures survived so far
+    not_before: float = 0.0          # backoff gate: ineligible until then
 
 
 class StreamHandle:
@@ -221,7 +231,12 @@ class ServingRuntime:
                  refresh_priority: int = PRIORITY_NORMAL,
                  default_slo_s: float = 0.05,
                  service_bytes_per_s: float = 2e9,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 enforce_deadlines: bool = False,
+                 max_ticket_retries: int = 3,
+                 retry_backoff_s: float = 0.05,
+                 retry_jitter: Optional[Callable[[int], float]] = None,
+                 max_refresh_failures: int = 3):
         if isinstance(sessions, SessionRegistry):
             self.registry = sessions
         elif isinstance(sessions, Session):
@@ -242,12 +257,23 @@ class ServingRuntime:
         self.default_slo_s = default_slo_s
         self.service_bytes_per_s = service_bytes_per_s
         self.clock = clock
+        # -- fault-tolerance knobs ------------------------------------------
+        # deadline enforcement is opt-in: the default SLOs are tight enough
+        # that a flood test driving the real clock would expire its tail
+        self.enforce_deadlines = enforce_deadlines
+        self.max_ticket_retries = max_ticket_retries
+        self.retry_backoff_s = retry_backoff_s
+        # attempt -> fraction in [0, 1) (fault.seeded_jitter for tests)
+        self.retry_jitter = retry_jitter
+        self.max_refresh_failures = max_refresh_failures
         self.metrics = RuntimeMetrics()
         self.last_refresh_error: Optional[Exception] = None
         self._queue: List[_Entry] = []
         self._queued_bytes = 0
         self._queued_subs: set = set()           # id(sub) already enqueued
         self._drains: Dict[str, SubscriptionDrain] = {}
+        self._refresh_failures: Dict[int, int] = {}   # id(sub) -> consecutive
+        self._quarantined: Dict[int, Subscription] = {}
         self._next_qid = 0
         self._next_seq = 0
 
@@ -366,7 +392,8 @@ class ServingRuntime:
             drain.notify()
             while drain.waiting:
                 t = drain.waiting.popleft()
-                if id(t.sub) in self._queued_subs:
+                if (id(t.sub) in self._queued_subs
+                        or id(t.sub) in self._quarantined):
                     continue
                 est = self.admission.cost_of(t.query)
                 deadline = now + (self.default_slo_s + est.device_bytes
@@ -377,6 +404,24 @@ class ServingRuntime:
                                   est.device_bytes, est.rows, sub=t.sub))
                 queued += 1
         return queued
+
+    def release_quarantine(self, sub: Optional[Subscription] = None) -> int:
+        """Lift the quarantine (one subscription, or all of them) and
+        re-derive staleness through :meth:`notify_ingest` — a released
+        subscription that is still behind the store version re-enters the
+        queue immediately; an up-to-date one simply resumes on the next
+        ingest. Returns how many refresh entries were enqueued."""
+        if sub is None:
+            self._quarantined.clear()
+            self._refresh_failures.clear()
+        else:
+            self._quarantined.pop(id(sub), None)
+            self._refresh_failures.pop(id(sub), None)
+        return self.notify_ingest()
+
+    @property
+    def quarantined_subscriptions(self) -> List[Subscription]:
+        return list(self._quarantined.values())
 
     # -- scheduling --------------------------------------------------------
     def _effective_priority(self, entry: _Entry, now: float) -> int:
@@ -398,8 +443,13 @@ class ServingRuntime:
         The head of the order is always admitted (no livelock); selection
         stops at the first entry that would overflow the budget rather
         than skipping past it, so a large high-priority query cannot be
-        bypassed indefinitely by smaller late arrivals."""
-        order = sorted(self._queue, key=lambda e: self._schedule_key(e, now))
+        bypassed indefinitely by smaller late arrivals.
+
+        Entries inside a retry-backoff window (``not_before``) are not
+        eligible this round — they stay queued and become schedulable when
+        the clock passes their gate."""
+        order = sorted((e for e in self._queue if e.not_before <= now),
+                       key=lambda e: self._schedule_key(e, now))
         b = self.admission.budget
         batch: List[_Entry] = []
         bytes_total = rows_total = 0
@@ -428,14 +478,26 @@ class ServingRuntime:
         Query entries in the batch are **coalesced** into one
         ``query_batch`` call against the engine's current store version;
         refresh entries run their subscription's incremental refresh.
-        Engine failures complete the affected tickets with the error
-        attached (and are counted) — the daemon loop never dies on one bad
-        batch."""
+
+        Failure semantics (the daemon loop never dies on one bad batch):
+        *transient* engine failures (:class:`TransientFault`,
+        :class:`ServiceUnavailable`, :class:`DeviceLossError` — the last
+        also triggers sticky re-placement) re-queue their entries with
+        exponential backoff until ``max_ticket_retries``, then complete the
+        ticket with a structured, cause-chained :class:`QueryFailure`;
+        non-transient failures complete the batch's tickets immediately
+        with the raw error attached. A refresh that keeps failing is
+        retried with the same backoff and **quarantined** after
+        ``max_refresh_failures`` consecutive failures instead of wedging
+        the drain (see :meth:`release_quarantine`)."""
         if not self._queue:
             return 0
         if now is None:
             now = self.clock()
+        self._expire_deadlines(now)
         batch = self._select_batch(now)
+        if not batch:          # everything eligible is inside a backoff gate
+            return 0
         queries = [e for e in batch if e.kind == "query"]
         refreshes = [e for e in batch if e.kind == "refresh"]
         if queries:
@@ -445,12 +507,71 @@ class ServingRuntime:
             try:
                 e.sub.refresh()
                 self.metrics.refreshes += 1
+                self._refresh_failures.pop(id(e.sub), None)
             except Exception as exc:              # keep serving
                 self.metrics.refresh_failures += 1
                 self.last_refresh_error = exc
+                self._refresh_failed(e, exc, now)
         self.metrics.batches += 1
         self.admission.batches_admitted += 1
         return len(batch)
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Fail query entries whose EDF deadline already passed (opt-in via
+        ``enforce_deadlines``): they complete with a structured
+        ``kind="deadline"`` :class:`QueryFailure` instead of consuming a
+        batch slot they can no longer use."""
+        if not self.enforce_deadlines:
+            return
+        expired = [e for e in self._queue
+                   if e.kind == "query" and e.deadline < now]
+        if not expired:
+            return
+        taken = {e.seq for e in expired}
+        self._queue = [e for e in self._queue if e.seq not in taken]
+        for e in expired:
+            self._queued_bytes -= e.est_device_bytes
+            t = e.ticket
+            t.error = QueryFailure(
+                f"deadline missed by {now - e.deadline:.3f}s",
+                kind="deadline", attempts=e.attempts,
+                elapsed_s=now - t.submitted_at, deadline=e.deadline)
+            t.done = True
+            t.completed_at = now
+            self.metrics.failed += 1
+            self.metrics.deadline_failures += 1
+            t._complete()
+
+    def _backoff_gate(self, attempt: int, now: float) -> float:
+        """Eligibility time for retry number ``attempt`` (1-based):
+        exponential backoff scaled up by the injectable jitter."""
+        frac = self.retry_jitter(attempt) if self.retry_jitter else 0.0
+        return now + (self.retry_backoff_s * 2 ** max(0, attempt - 1)
+                      * (1.0 + frac))
+
+    def _requeue(self, e: _Entry) -> None:
+        """Put a transiently-failed entry back (original ``seq`` — its
+        FIFO tie-break and aging baseline survive the retry)."""
+        self._queue.append(e)
+        self._queued_bytes += e.est_device_bytes
+        self.metrics.requeued += 1
+        self.metrics.peak_queue_depth = max(self.metrics.peak_queue_depth,
+                                            len(self._queue))
+
+    def _refresh_failed(self, e: _Entry, exc: Exception, now: float) -> None:
+        n = self._refresh_failures.get(id(e.sub), 0) + 1
+        self._refresh_failures[id(e.sub)] = n
+        if n >= self.max_refresh_failures:
+            # poisoned: stop retrying so it cannot wedge the drain; the
+            # subscription's state is untouched (refresh commits only on
+            # success) and release_quarantine resumes it exactly
+            self._quarantined[id(e.sub)] = e.sub
+            self.metrics.quarantined += 1
+            return
+        e.attempts += 1
+        e.not_before = self._backoff_gate(n, now)
+        self._queued_subs.add(id(e.sub))
+        self._requeue(e)
 
     def _execute_queries(self, entries: List[_Entry]) -> None:
         tickets = [e.ticket for e in entries]
@@ -464,7 +585,9 @@ class ServingRuntime:
         try:
             results = self.engine.query_batch([t.query for t in tickets])
             error = None
-        except Exception as exc:                  # pragma: no cover - rare
+        except Exception as exc:
+            if self._handle_query_failure(entries, exc):
+                return           # transient: re-queued / structured-failed
             results = [None] * len(tickets)
             error = exc
         done = self.clock()
@@ -481,8 +604,48 @@ class ServingRuntime:
         if len(tickets) > 1:
             self.metrics.coalesced_queries += len(tickets)
 
+    def _handle_query_failure(self, entries: List[_Entry],
+                              exc: Exception) -> bool:
+        """Classify one batch failure. Transient classes — the fault
+        layer's :class:`TransientFault` / :class:`ServiceUnavailable`, and
+        :class:`DeviceLossError` (which additionally triggers the engine's
+        sticky re-placement) — re-queue each entry with exponential
+        backoff while its retry budget lasts, then complete its ticket
+        with a ``kind="retries_exhausted"`` :class:`QueryFailure` chaining
+        the cause. Returns True when the failure was handled here;
+        non-transient errors return False and take the raw-error path
+        (unchanged pre-fault-layer behavior)."""
+        now = self.clock()
+        if isinstance(exc, DeviceLossError):
+            self.metrics.device_losses += 1
+            if hasattr(self.engine, "mark_device_lost"):
+                self.engine.mark_device_lost(exc.ordinal)
+        elif not isinstance(exc, (TransientFault, ServiceUnavailable)):
+            return False
+        for e in entries:
+            if e.attempts < self.max_ticket_retries:
+                e.attempts += 1
+                e.not_before = self._backoff_gate(e.attempts, now)
+                self._requeue(e)                 # ticket stays pending
+                continue
+            t = e.ticket
+            t.error = QueryFailure(
+                f"transient failures outlived {e.attempts} retries: {exc}",
+                kind="retries_exhausted", attempts=e.attempts + 1,
+                elapsed_s=now - t.submitted_at, cause=exc)
+            t.done = True
+            t.completed_at = now
+            self.metrics.failed += 1
+            self.metrics.retry_exhausted += 1
+            t._complete()
+        return True
+
     def run_until_idle(self, max_ticks: int = 10_000) -> int:
-        """Drive ticks until the queue empties; returns items processed."""
+        """Drive ticks until nothing is schedulable; returns items
+        processed. Entries still inside a retry-backoff gate remain queued
+        — re-invoke once the clock passes their ``not_before`` (tests
+        advance the injected clock; the async driver simply keeps
+        ticking)."""
         done = 0
         for _ in range(max_ticks):
             n = self.tick()

@@ -55,14 +55,20 @@ class TokenPipeline:
         return {"tokens": tokens, "labels": labels, "loss_mask": mask}
 
     def _producer(self):
+        # retry-until-shutdown: a full queue re-offers the SAME built batch
+        # on a short timeout (no rebuild, no skipped index, no silent thread
+        # death) until a consumer frees a slot or close() sets the stop flag
         i = 0
+        batch = None
         while not self._stop.is_set():
-            batch = self._make(i)
+            if batch is None:
+                batch = self._make(i)
             try:
-                self._q.put((i, batch), timeout=1.0)
-                i += 1
+                self._q.put((i, batch), timeout=0.1)
             except queue.Full:
                 continue
+            batch = None
+            i += 1
 
     def __next__(self) -> Dict[str, jax.Array]:
         _, batch = self._q.get()

@@ -1,3 +1,4 @@
 from repro.video.synth import SyntheticWorld, WorldConfig, PREDICATES  # noqa: F401
-from repro.video.ingest import ingest, ingest_incremental  # noqa: F401
+from repro.video.ingest import (IngestError, ingest,  # noqa: F401
+                                ingest_incremental, validate_ingest_batch)
 from repro.video.workload import overlapping_queries  # noqa: F401

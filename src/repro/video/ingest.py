@@ -23,6 +23,68 @@ from repro.core.stores import (PredicateVocab, SegmentStats, StoreSegment,
 from repro.video.synth import PREDICATES, SyntheticWorld
 
 
+class IngestError(ValueError):
+    """A structured rejection of one ingest batch, raised BEFORE any store
+    mutation — ``column`` names the offending input, ``reason`` says what
+    failed, and the store (version, stats, caches) is left untouched."""
+
+    def __init__(self, column: str, reason: str):
+        super().__init__(f"ingest batch rejected: {column}: {reason}")
+        self.column = column
+        self.reason = reason
+
+
+def validate_ingest_batch(stores: VideoStores, vids: np.ndarray,
+                          eids: np.ndarray, text_emb: np.ndarray,
+                          img_emb: np.ndarray, rel_rows: np.ndarray,
+                          segment_range: Tuple[int, int]) -> None:
+    """Shape/dtype/monotonicity checks for one incremental batch.
+
+    Raises :class:`IngestError` naming the first offending column; runs
+    before ``append_stores`` touches anything, so a rejected batch leaves
+    ``store_version`` and per-segment stats exactly as they were."""
+    lo, hi = segment_range
+    if not (isinstance(lo, (int, np.integer))
+            and isinstance(hi, (int, np.integer)) and lo < hi):
+        raise IngestError("segment_range", f"need int lo < hi, got ({lo}, {hi})")
+    for name, arr, kind in (("vids", vids, "i"), ("eids", eids, "i")):
+        if np.asarray(arr).ndim != 1:
+            raise IngestError(name, f"must be 1-D, got shape "
+                                    f"{np.asarray(arr).shape}")
+        if np.asarray(arr).dtype.kind != kind:
+            raise IngestError(name, f"must be integer, got "
+                                    f"{np.asarray(arr).dtype}")
+    if len(vids) != len(eids):
+        raise IngestError("eids", f"length {len(eids)} != vids {len(vids)}")
+    dim = stores.entities.text_emb.shape[1]
+    for name, emb in (("text_emb", text_emb), ("img_emb", img_emb)):
+        emb = np.asarray(emb)
+        if emb.ndim != 2 or emb.shape != (len(vids), dim):
+            raise IngestError(name, f"must be ({len(vids)}, {dim}) float, "
+                                    f"got shape {emb.shape}")
+        if emb.dtype.kind != "f":
+            raise IngestError(name, f"must be float, got {emb.dtype}")
+    rel_rows = np.asarray(rel_rows)
+    if rel_rows.ndim != 2 or rel_rows.shape[1] != 5:
+        raise IngestError("rel_rows", f"must be (M, 5) (vid,fid,sid,rl,oid), "
+                                      f"got shape {rel_rows.shape}")
+    if rel_rows.dtype.kind != "i":
+        raise IngestError("rel_rows", f"must be integer, got {rel_rows.dtype}")
+    for name, col in (("vids", np.asarray(vids)),
+                      ("rel_rows", rel_rows[:, 0])):
+        if len(col) and not ((col >= lo) & (col < hi)).all():
+            raise IngestError(
+                name, f"vid outside segment_range [{lo}, {hi})")
+    # append-only vid monotonicity: the new range must start past every
+    # vid any existing segment has sealed (stats carry per-segment vid_hi)
+    prev_hi = max((s.stats.vid_hi for s in stores.segments
+                   if s.stats is not None), default=-1)
+    if lo <= prev_hi:
+        raise IngestError(
+            "segment_range", f"vids must be append-monotone: lo {lo} <= "
+                             f"already-ingested vid_hi {prev_hi}")
+
+
 def _collect_segment(world: SyntheticWorld, vid: int,
                      rng: np.random.Generator):
     cfg = world.cfg
@@ -89,7 +151,11 @@ def ingest_incremental(stores: VideoStores, world: SyntheticWorld,
                        embedder, segment_range: Tuple[int, int], *,
                        seal: bool = True) -> VideoStores:
     """Append new video segments into spare store capacity (no reprocessing
-    of existing rows) as one new store segment, sealed by default."""
+    of existing rows) as one new store segment, sealed by default.
+
+    Inputs are validated (:func:`validate_ingest_batch`) before any store
+    mutation: a bad batch raises :class:`IngestError` naming the offending
+    column and the store is left untouched."""
     lo, hi = segment_range
     rng = np.random.default_rng(world.cfg.seed + 9876 + lo)
     all_ents, all_descs, all_rels = [], [], []
@@ -104,10 +170,12 @@ def ingest_incremental(stores: VideoStores, world: SyntheticWorld,
     eids = np.array([e for _, e in all_ents], np.int32)
     desc_map = {(int(v), int(e)): d
                 for (v, e), d in zip(all_ents, all_descs)}
+    rel_rows = (np.array(all_rels, np.int32) if all_rels
+                else np.zeros((0, 5), np.int32))
+    validate_ingest_batch(stores, vids, eids, text_emb, img_emb, rel_rows,
+                          segment_range)
     return append_stores(
-        stores, vids, eids, text_emb, img_emb,
-        np.array(all_rels, np.int32) if all_rels else np.zeros((0, 5),
-                                                               np.int32),
+        stores, vids, eids, text_emb, img_emb, rel_rows,
         entity_desc=desc_map, num_segments=hi, seal=seal)
 
 

@@ -1,0 +1,561 @@
+"""Fault-tolerant query execution: retry/backoff/breaker units, seeded
+chaos exactness, graceful degradation, device-loss re-placement, and
+ingest validation.
+
+The headline property (hypothesis where available, seeded fallbacks
+otherwise): under ANY seeded fault schedule whose transient faults are
+retried to success, final ``QueryResult``s — cold, batched, and
+incremental-refresh — are **bitwise identical** to the fault-free run,
+and the fault guards account for every injected fault. When retries do
+NOT succeed (breaker open / budget exhausted), queries return results
+explicitly flagged ``degraded`` with the unverified candidate set
+attached — never a silent wrong answer, never an unhandled exception.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.compat import make_mesh
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.fault import (ChaosInjector, DeviceLossError, FaultGuard,
+                              FaultPolicy, FaultTimeout,
+                              FaultTolerantEmbedder, FaultTolerantVerifier,
+                              FlakyEmbedder, FlakyVerifier, RateLimitFault,
+                              ServiceUnavailable, TransientServiceError,
+                              seeded_jitter)
+from repro.core.refine import MockVerifier
+from repro.session import Session
+from repro.video import (IngestError, SyntheticWorld, WorldConfig, ingest,
+                         ingest_incremental, overlapping_queries,
+                         validate_ingest_batch)
+
+
+# ---------------------------------------------------------------------------
+# fixtures + helpers
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    w = SyntheticWorld(WorldConfig(num_segments=8, frames_per_segment=16,
+                                   objects_per_segment=6, seed=3))
+    w.stage_event_2_1(vid=6)
+    return w
+
+
+def _emb():
+    from repro.semantic import OracleEmbedder
+    return OracleEmbedder(dim=64)
+
+
+def _caps(stores):
+    return dict(entity_capacity=stores.entities.capacity,
+                rel_capacity=stores.relationships.capacity)
+
+
+def _assert_same(r1, r2):
+    assert r1.segments == r2.segments
+    assert r1.scores == r2.scores
+    assert (r1.end_frames == r2.end_frames).all()
+    assert r1.sql == r2.sql
+
+
+def _queries(world):
+    return overlapping_queries(world)
+
+
+def _verify_queries(world):
+    """Queries that actually reach the VLM verifier against this world
+    (most of the workload's queries are fully pruned symbolically)."""
+    qs = overlapping_queries(world)
+    return [qs[4], qs[7], example_2_1()]
+
+
+def _policy(**kw):
+    kw.setdefault("sleep", lambda s: None)
+    kw.setdefault("jitter", seeded_jitter(0))
+    kw.setdefault("backoff_base_s", 0.0)
+    return FaultPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# unit: policy / guard / breaker / injector
+# ---------------------------------------------------------------------------
+def test_guard_retries_transients_then_succeeds():
+    g = FaultGuard(_policy(max_retries=3))
+    n = {"calls": 0}
+
+    def fn():
+        n["calls"] += 1
+        if n["calls"] < 3:
+            raise TransientServiceError("blip")
+        return "ok"
+
+    assert g.call(fn) == "ok"
+    assert n["calls"] == 3
+    assert g.stats.retries == 2 and g.stats.transient_errors == 2
+    assert g.stats.successes == 1 and g.stats.exhausted == 0
+    assert g.stats.faults_absorbed == 2
+
+
+def test_backoff_is_exponential_with_injected_jitter():
+    sleeps = []
+    p = FaultPolicy(max_retries=3, backoff_base_s=0.01, backoff_multiplier=2,
+                    backoff_max_s=10.0, jitter=lambda a: 0.5,
+                    sleep=sleeps.append)
+    g = FaultGuard(p)
+    n = {"calls": 0}
+
+    def fn():
+        n["calls"] += 1
+        if n["calls"] < 4:
+            raise TransientServiceError("blip")
+        return 1
+
+    g.call(fn)
+    assert sleeps == pytest.approx([0.015, 0.03, 0.06])
+
+
+def test_rate_limit_backoff_honors_retry_after_hint():
+    sleeps = []
+    g = FaultGuard(FaultPolicy(max_retries=1, backoff_base_s=0.01,
+                               sleep=sleeps.append))
+    n = {"calls": 0}
+
+    def fn():
+        n["calls"] += 1
+        if n["calls"] == 1:
+            raise RateLimitFault(retry_after_s=0.75)
+        return 1
+
+    g.call(fn)
+    assert sleeps == [0.75]                 # max(backoff, server hint)
+    assert g.stats.rate_limits == 1
+
+
+def test_per_call_timeout_counts_as_transient_and_retries():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    slow = {"first": True}
+
+    def fn():
+        t[0] += 2.0 if slow["first"] else 0.01
+        slow["first"] = False
+        return "ok"
+
+    g = FaultGuard(_policy(max_retries=2, call_timeout_s=1.0, clock=clock))
+    assert g.call(fn) == "ok"
+    assert g.stats.timeouts == 1 and g.stats.retries == 1
+
+
+def test_exhausted_retries_raise_service_unavailable_with_cause():
+    g = FaultGuard(_policy(max_retries=2))
+    boom = TransientServiceError("always")
+    with pytest.raises(ServiceUnavailable) as e:
+        g.call(lambda: (_ for _ in ()).throw(boom), op="verify")
+    assert e.value.attempts == 3 and e.value.op == "verify"
+    assert e.value.__cause__ is boom
+    assert g.stats.exhausted == 1 and g.stats.attempts == 3
+
+
+def test_circuit_breaker_opens_short_circuits_and_half_open_probes():
+    t = [0.0]
+    g = FaultGuard(_policy(max_retries=0, breaker_threshold=2,
+                           breaker_cooldown_s=10.0, clock=lambda: t[0]))
+    boom = TransientServiceError("down")
+    calls = {"n": 0}
+
+    def failing():
+        calls["n"] += 1
+        raise boom
+
+    for _ in range(2):                       # 2 consecutive failures -> open
+        with pytest.raises(ServiceUnavailable):
+            g.call(failing)
+    assert g.breaker.state == "open" and g.breaker.opens == 1
+    with pytest.raises(ServiceUnavailable) as e:
+        g.call(failing)                      # short-circuit: inner not called
+    assert e.value.breaker_open and calls["n"] == 2
+    assert g.stats.breaker_short_circuits == 1
+
+    t[0] = 11.0                              # cooldown passed: one probe
+    assert g.breaker.state == "half_open"
+    with pytest.raises(ServiceUnavailable):
+        g.call(failing)                      # probe fails -> re-open
+    assert calls["n"] == 3 and g.breaker.state == "open"
+    assert g.breaker.opens == 2
+
+    t[0] = 22.0
+    assert g.call(lambda: "up") == "up"      # probe succeeds -> closed
+    assert g.breaker.state == "closed"
+
+
+def test_chaos_injector_is_seeded_deterministic_and_capped():
+    def schedule(inj, n=300):
+        out = []
+        for _ in range(n):
+            try:
+                inj.maybe_fail()
+                out.append(None)
+            except Exception as exc:
+                out.append(type(exc).__name__)
+        return out
+
+    kw = dict(timeout_rate=0.15, error_rate=0.15, rate_limit_rate=0.1,
+              max_consecutive=2)
+    s1 = schedule(ChaosInjector(seed=7, **kw))
+    s2 = schedule(ChaosInjector(seed=7, **kw))
+    assert s1 == s2                              # pure fn of (seed, index)
+    assert {"FaultTimeout", "TransientServiceError",
+            "RateLimitFault"} <= set(x for x in s1 if x)
+    # the consecutive cap: never 3 faults in a row
+    run = 0
+    for x in s1:
+        run = run + 1 if x else 0
+        assert run <= 2
+    inj = ChaosInjector(seed=7, **kw)
+    schedule(inj)
+    assert inj.total_injected == sum(x is not None for x in s1)
+    assert inj.calls_seen == 300
+
+
+# ---------------------------------------------------------------------------
+# chaos exactness: faulty-with-retries == fault-free, bitwise
+# ---------------------------------------------------------------------------
+def _stores_for(world, layout):
+    n = world.cfg.num_segments
+    caps = _caps(ingest(world, _emb()))
+    if layout == "monolithic":
+        base = ingest(world, _emb(), segment_range=(0, n - 1), **caps)
+    else:
+        base = ingest(world, _emb(), segment_range=(0, 2), **caps)
+        base = ingest_incremental(base, world, _emb(), (2, n - 1))
+    return base, (n - 1, n)
+
+
+def _chaos_engine(world, stores, *, seed, rates, mode, mesh=None):
+    t, e, r = rates
+    inj_v = ChaosInjector(seed=seed, timeout_rate=t, error_rate=e,
+                          rate_limit_rate=r, max_consecutive=3)
+    inj_e = ChaosInjector(seed=seed + 1, timeout_rate=t, error_rate=e,
+                          rate_limit_rate=r, max_consecutive=3)
+    pol = _policy(max_retries=3, breaker_threshold=100,
+                  jitter=seeded_jitter(seed))
+    ver = FaultTolerantVerifier(FlakyVerifier(MockVerifier(world), inj_v),
+                                pol)
+    emb = FaultTolerantEmbedder(FlakyEmbedder(_emb(), inj_e), pol)
+    engine = LazyVLMEngine(stores, emb, verifier=ver, search_mode=mode,
+                           mesh=mesh)
+    return engine, (inj_v, inj_e), (ver.guard, emb.guard)
+
+
+def _check_chaos_exactness(world, *, seed, rates, mode, layout, devices=1):
+    """Cold + batched + incremental-refresh results under a seeded fault
+    schedule (every transient retried to success) must be bitwise what the
+    fault-free run produces, with every injected fault accounted for."""
+    queries = _verify_queries(world)
+    base, append = _stores_for(world, layout)
+    mesh = (make_mesh((devices, 1), ("data", "model"))
+            if layout == "placed" else None)
+
+    clean = LazyVLMEngine(base, _emb(), verifier=MockVerifier(world),
+                          search_mode=mode,
+                          mesh=(make_mesh((devices, 1), ("data", "model"))
+                                if layout == "placed" else None))
+    clean_sess = Session(clean)
+    clean_sub = clean_sess.subscribe(example_2_1())
+    clean_cold = [clean.query(q) for q in queries]
+    clean_batch = clean.query_batch(queries)
+
+    engine, injectors, guards = _chaos_engine(world, base, seed=seed,
+                                              rates=rates, mode=mode,
+                                              mesh=mesh)
+    sess = Session(engine)
+    sub = sess.subscribe(example_2_1())
+    cold = [engine.query(q) for q in queries]
+    batch = engine.query_batch(queries)
+
+    for r, ref in zip(cold, clean_cold):
+        _assert_same(r, ref)
+        assert not r.degraded
+    for r, ref in zip(batch, clean_batch):
+        _assert_same(r, ref)
+
+    # incremental refresh across an append, same fault stream
+    grown = ingest_incremental(base, world, _emb(), append)
+    sess.update_stores(grown)
+    clean_grown = ingest_incremental(base, world, _emb(), append)
+    clean_sess.update_stores(clean_grown)
+    _assert_same(sub.result, clean_sub.result)
+    assert sub.version == clean_sub.version == grown.store_version
+
+    # counters account for every injected fault: nothing exhausted, nothing
+    # short-circuited, every injection absorbed by a retry
+    absorbed = sum(g.stats.faults_absorbed for g in guards)
+    injected = sum(i.total_injected for i in injectors)
+    assert absorbed == injected
+    assert all(g.stats.exhausted == 0 for g in guards)
+    assert all(g.stats.breaker_short_circuits == 0 for g in guards)
+    # the schedule actually exercised the retry path
+    if sum(rates) > 0.1:
+        assert injected > 0 and sum(g.stats.retries for g in guards) > 0
+
+
+def test_chaos_exactness_seeded(world):
+    """Seeded fallback for the fault-schedule property: timeouts, transient
+    errors, and rate-limit bursts across search modes and store layouts."""
+    import jax
+    cases = [
+        (11, (0.15, 0.1, 0.05), "fp32", "monolithic", 1),
+        (23, (0.05, 0.2, 0.1), "int8", "segmented", 1),
+        (37, (0.1, 0.1, 0.1), "fp32", "placed", min(2, jax.device_count())),
+    ]
+    for seed, rates, mode, layout, devices in cases:
+        _check_chaos_exactness(world, seed=seed, rates=rates, mode=mode,
+                               layout=layout, devices=devices)
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_fault_schedule_exactness_property(world, data):
+    """Hypothesis property: ANY seeded fault schedule whose transients are
+    retried to success yields bitwise fault-free results (cold, batched,
+    incremental) with full fault accounting."""
+    seed = data.draw(st.integers(0, 10**6))
+    rates = (data.draw(st.floats(0, 0.25)), data.draw(st.floats(0, 0.25)),
+             data.draw(st.floats(0, 0.2)))
+    mode = data.draw(st.sampled_from(["fp32", "int8"]))
+    layout = data.draw(st.sampled_from(["monolithic", "segmented"]))
+    _check_chaos_exactness(world, seed=seed, rates=rates, mode=mode,
+                           layout=layout)
+
+
+def test_engine_fault_policy_kwarg_wraps_services(world):
+    stores = ingest(world, _emb())
+    engine = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world),
+                           fault_policy=_policy(max_retries=2))
+    assert isinstance(engine.verifier, FaultTolerantVerifier)
+    assert set(engine.fault_guards) == {"verifier", "embedder"}
+    q = example_2_1()
+    ref = LazyVLMEngine(stores, _emb(),
+                        verifier=MockVerifier(world)).query(q)
+    r = engine.query(q)
+    _assert_same(r, ref)
+    # wrapper preserves the laziness accounting contract
+    assert r.stats.vlm_calls == engine.verifier.calls > 0
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: breaker open / retries exhausted mid-query
+# ---------------------------------------------------------------------------
+def _dead_verifier_engine(world, stores, **engine_kw):
+    inj = ChaosInjector(seed=0, error_rate=1.0)      # every call faults
+    ver = FaultTolerantVerifier(
+        FlakyVerifier(MockVerifier(world), inj),
+        _policy(max_retries=1, breaker_threshold=2))
+    return LazyVLMEngine(stores, _emb(), verifier=ver, **engine_kw)
+
+
+def _check_degraded_contract(r, ref):
+    """Never a silent wrong answer, never an exception: either exact, or
+    explicitly flagged with the unverified set attached."""
+    if r.degraded:
+        assert r.unverified is not None and len(r.unverified) > 0
+        assert r.unverified.shape[1] == 5            # (vid,fid,sid,rl,oid)
+        assert isinstance(r.stats.degraded_cause, ServiceUnavailable)
+        # confirmed-only output: matched segments never exceed the truth
+        assert set(r.segments) <= set(ref.segments)
+    else:
+        _assert_same(r, ref)
+
+
+def test_dead_verifier_full_path_degrades_never_raises(world):
+    stores = ingest(world, _emb())
+    engine = _dead_verifier_engine(world, stores)
+    clean = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    q = example_2_1()
+    r = engine.query(q)                              # must not raise
+    ref = clean.query(q)
+    assert r.degraded
+    _check_degraded_contract(r, ref)
+    # batched path: every full-verify plan with candidates flags degraded;
+    # queries needing no verification stay exact
+    vq = _verify_queries(world)[:2] + _queries(world)[:1]
+    batch = engine.query_batch(vq)
+    refs = clean.query_batch(vq)
+    for r, ref in zip(batch, refs):
+        _check_degraded_contract(r, ref)
+    assert any(r.degraded for r in batch)
+
+
+def test_dead_verifier_cascade_degrades_or_certificate_completes(world):
+    stores = ingest(world, _emb())
+    engine = _dead_verifier_engine(world, stores)
+    clean = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    for q in _verify_queries(world):
+        qb = dataclasses.replace(q, verify_budget=3)
+        r = engine.query(qb)                         # must not raise
+        _check_degraded_contract(r, clean.query(q))
+
+
+class _DiesAfter:
+    """Verifier that answers the first ``n`` rows then goes unavailable —
+    the mid-cascade death scenario (some verdicts already confirmed)."""
+
+    def __init__(self, inner, n):
+        self.inner = inner
+        self.n = n
+
+    @property
+    def calls(self):
+        return self.inner.calls
+
+    def verify(self, rows):
+        if self.inner.calls + len(rows) > self.n:
+            raise ServiceUnavailable("verifier lost mid-query", op="verify",
+                                     breaker_open=True)
+        return self.inner.verify(rows)
+
+
+def test_mid_cascade_death_monotone_recovery_sweep(world):
+    """As the verifier survives longer, the cascade's answer goes from
+    degraded (confirmed-only subset) to exact — and every intermediate
+    result obeys the degradation contract."""
+    stores = ingest(world, _emb())
+    clean = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    q = example_2_1()
+    ref = clean.query(q)
+    qb = dataclasses.replace(q, verify_budget=2)
+    seen_degraded = seen_exact = False
+    for n in (0, 2, 6, 10**9):
+        engine = LazyVLMEngine(stores, _emb(),
+                               verifier=_DiesAfter(MockVerifier(world), n))
+        r = engine.query(qb)
+        _check_degraded_contract(r, ref)
+        seen_degraded |= r.degraded
+        seen_exact |= not r.degraded
+    assert seen_degraded and seen_exact
+    # the full-survival run is exact by the cascade's certificate
+    assert not r.degraded
+    _assert_same(r, ref)
+
+
+# ---------------------------------------------------------------------------
+# device loss: sticky re-placement, bitwise-equal recovery
+# ---------------------------------------------------------------------------
+def test_place_segments_exclude_moves_only_lost_device(world):
+    from repro.core.physical.cost import place_segments, place_stores
+    base, _ = _stores_for(world, "segmented")
+    placed, placement = place_stores(base, 4)
+    before = {s.sid: s.device for s in placed.segments}
+    lost = placed.segments[0].device
+    re = place_segments(placed.segments, 4, exclude={lost})
+    after = {s.sid: re.assignment[i]
+             for i, s in enumerate(placed.segments)}
+    assert all(d != lost for d in after.values())
+    for sid, dev in before.items():
+        if dev != lost:
+            assert after[sid] == dev                 # survivors stay put
+    with pytest.raises(ValueError):
+        place_segments(placed.segments, 2, exclude={0, 1})
+
+
+def test_device_loss_replacement_bitwise_equal(world, multi_device):
+    """Losing a placed device re-places exactly its segments (sticky) and
+    the re-placed queries are bitwise identical to the pre-loss run — the
+    8-device CI topology exercises a real multi-device move."""
+    devices = min(4, multi_device)
+    base, append = _stores_for(world, "segmented")
+    mesh = make_mesh((devices, 1), ("data", "model"))
+    engine = LazyVLMEngine(base, _emb(), verifier=MockVerifier(world),
+                           mesh=mesh)
+    queries = _verify_queries(world)
+    before = [engine.query(q) for q in queries]
+    assign_before = {s.sid: s.device for s in engine.stores.segments}
+    assert len(set(assign_before.values())) > 1      # actually spread
+
+    engine.mark_device_lost(0)
+    after = [engine.query(q) for q in queries]
+    for r, ref in zip(after, before):
+        _assert_same(r, ref)
+    after_batch = engine.query_batch(queries)
+    for r, ref in zip(after_batch, before):
+        _assert_same(r, ref)
+    assign_after = {s.sid: s.device for s in engine.stores.segments}
+    assert all(d != 0 for d in assign_after.values())
+    for sid, dev in assign_before.items():
+        if dev != 0:
+            assert assign_after[sid] == dev          # only lost segs moved
+
+    # the store keeps growing after the loss; results stay exact
+    grown = ingest_incremental(engine.stores, world, _emb(), append)
+    engine.stores = grown
+    clean = LazyVLMEngine(
+        ingest_incremental(base, world, _emb(), append), _emb(),
+        verifier=MockVerifier(world))
+    for q in queries:
+        _assert_same(engine.query(q), clean.query(q))
+    assert all(s.device != 0 for s in engine.stores.segments)
+
+    # losing every device is refused loudly
+    with pytest.raises(RuntimeError, match="no surviving"):
+        for d in range(1, devices):
+            engine.mark_device_lost(d)
+
+
+# ---------------------------------------------------------------------------
+# ingest validation
+# ---------------------------------------------------------------------------
+def test_rejected_ingest_batch_leaves_store_untouched(world):
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, 4), **caps)
+    v0, segs0 = base.store_version, base.segments
+    stats0 = [s.stats for s in base.segments]
+    # overlapping range: violates append-only vid monotonicity
+    with pytest.raises(IngestError) as e:
+        ingest_incremental(base, world, _emb(), (2, 5))
+    assert e.value.column == "segment_range"
+    assert "monotone" in e.value.reason
+    assert base.store_version == v0 and base.segments == segs0
+    assert [s.stats for s in base.segments] == stats0
+    # a well-formed batch still appends fine afterwards
+    grown = ingest_incremental(base, world, _emb(), (4, 6))
+    assert grown.store_version == v0 + 1
+
+
+def test_validate_ingest_batch_names_offending_column(world):
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, 4), **caps)
+    dim = base.entities.text_emb.shape[1]
+
+    def ok():
+        return dict(vids=np.full(3, 4, np.int32),
+                    eids=np.arange(3, dtype=np.int32),
+                    text_emb=np.zeros((3, dim), np.float32),
+                    img_emb=np.zeros((3, dim), np.float32),
+                    rel_rows=np.array([[4, 0, 0, 0, 1]], np.int32),
+                    segment_range=(4, 5))
+
+    validate_ingest_batch(base, **ok())              # valid: no raise
+
+    def col_of(**bad):
+        kw = ok()
+        kw.update(bad)
+        with pytest.raises(IngestError) as e:
+            validate_ingest_batch(base, **kw)
+        return e.value.column
+
+    assert col_of(vids=np.zeros(3, np.float32)) == "vids"
+    assert col_of(vids=np.zeros((3, 1), np.int32)) == "vids"
+    assert col_of(eids=np.arange(2, dtype=np.int32)) == "eids"
+    assert col_of(text_emb=np.zeros((3, dim + 1), np.float32)) == "text_emb"
+    assert col_of(img_emb=np.zeros((3, dim), np.int32)) == "img_emb"
+    assert col_of(rel_rows=np.zeros((2, 4), np.int32)) == "rel_rows"
+    assert col_of(rel_rows=np.array([[9, 0, 0, 0, 1]],
+                                    np.int32)) == "rel_rows"
+    assert col_of(vids=np.full(3, 7, np.int32)) == "vids"
+    assert col_of(segment_range=(5, 5)) == "segment_range"

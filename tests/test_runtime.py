@@ -501,3 +501,172 @@ def test_async_runtime_end_to_end(world):
         assert core.metrics.completed == 4
 
     asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: deadlines, transient re-queue, quarantine, device loss
+# ---------------------------------------------------------------------------
+def test_expired_deadline_fails_structured_not_silently(world):
+    from repro.serving import QueryFailure
+    stores = ingest(world, _emb())
+    clock = FakeClock()
+    runtime = ServingRuntime(
+        LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world)),
+        clock=clock, enforce_deadlines=True)
+    queries = _queries(world)
+    t1 = runtime.submit(queries[4], deadline_s=0.5)
+    t2 = runtime.submit(queries[7], deadline_s=100.0)
+    clock.advance(1.0)                      # t1's deadline is now in the past
+    runtime.run_until_idle()
+    assert t1.done and t1.result is None
+    assert isinstance(t1.error, QueryFailure) and t1.error.kind == "deadline"
+    assert t1.error.deadline == pytest.approx(100.5)
+    assert t1.completed_at is not None
+    assert t2.done and t2.error is None     # the live ticket still executed
+    _assert_same(t2.result, _sequential_reference(world, stores,
+                                                  [queries[7]])[0])
+    assert runtime.metrics.deadline_failures == 1
+    assert runtime.metrics.failed == 1 and runtime.metrics.completed == 1
+
+
+def test_transient_failure_requeues_with_backoff_then_exact_result(world):
+    from repro.core.fault import TransientServiceError, seeded_jitter
+    stores = ingest(world, _emb())
+    clock = FakeClock()
+    engine = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    runtime = ServingRuntime(engine, clock=clock, retry_backoff_s=0.1,
+                             retry_jitter=seeded_jitter(0))
+    real = engine.query_batch
+    state = {"fails": 2}
+
+    def flaky(qs):
+        if state["fails"] > 0:
+            state["fails"] -= 1
+            raise TransientServiceError("verifier blip")
+        return real(qs)
+
+    engine.query_batch = flaky
+    q = _queries(world)[4]
+    t = runtime.submit(q)
+    runtime.tick()
+    assert not t.done and runtime.metrics.requeued == 1
+    assert runtime.tick() == 0              # inside the backoff gate: held
+    clock.advance(0.5)
+    runtime.tick()                          # second transient failure
+    assert not t.done and runtime.metrics.requeued == 2
+    clock.advance(1.0)
+    runtime.tick()                          # retries succeed
+    assert t.done and t.error is None
+    _assert_same(t.result, _sequential_reference(world, stores, [q])[0])
+    assert runtime.metrics.completed == 1 and runtime.metrics.failed == 0
+
+
+def test_retry_budget_exhaustion_chains_cause(world):
+    from repro.core.fault import TransientServiceError
+    from repro.serving import QueryFailure
+    stores = ingest(world, _emb())
+    clock = FakeClock()
+    engine = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    runtime = ServingRuntime(engine, clock=clock, max_ticket_retries=1,
+                             retry_backoff_s=0.1)
+    boom = TransientServiceError("service is down for good")
+    engine.query_batch = lambda qs: (_ for _ in ()).throw(boom)
+    t = runtime.submit(_queries(world)[4])
+    runtime.tick()
+    assert not t.done                       # first failure: re-queued
+    clock.advance(1.0)
+    runtime.tick()                          # retry budget exhausted
+    assert t.done and t.result is None
+    assert isinstance(t.error, QueryFailure)
+    assert t.error.kind == "retries_exhausted"
+    assert t.error.attempts == 2 and t.error.elapsed_s > 0
+    assert t.error.__cause__ is boom
+    assert runtime.metrics.retry_exhausted == 1
+    assert runtime.metrics.failed == 1
+
+
+def test_device_loss_marks_engine_and_retries_exactly(world):
+    from repro.core.fault import DeviceLossError
+    stores = ingest(world, _emb())
+    clock = FakeClock()
+    engine = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    runtime = ServingRuntime(engine, clock=clock, retry_backoff_s=0.1)
+    real = engine.query_batch
+    state = {"lost": False}
+
+    def lossy(qs):
+        if not state["lost"]:
+            state["lost"] = True
+            raise DeviceLossError(0)
+        return real(qs)
+
+    engine.query_batch = lossy
+    q = _queries(world)[4]
+    t = runtime.submit(q)
+    runtime.tick()
+    assert runtime.metrics.device_losses == 1
+    assert engine._lost_devices == {0}      # sticky re-placement armed
+    assert not t.done and runtime.metrics.requeued == 1
+    clock.advance(1.0)
+    runtime.tick()
+    assert t.done and t.error is None
+    _assert_same(t.result, _sequential_reference(world, stores, [q])[0])
+
+
+def test_poisoned_subscription_quarantined_then_released_exactly(world):
+    n = world.cfg.num_segments
+    caps = _caps(ingest(world, _emb()))
+    base = ingest(world, _emb(), segment_range=(0, 6), **caps)
+    clock = FakeClock()
+    engine = LazyVLMEngine(base, _emb(), verifier=MockVerifier(world))
+    runtime = ServingRuntime(engine, clock=clock, retry_backoff_s=0.1,
+                             max_refresh_failures=2)
+    poisoned = runtime.follow(example_2_1())
+    healthy = runtime.follow(_queries(world)[4])
+    poisoned.sub.refresh = lambda: (_ for _ in ()).throw(
+        RuntimeError("poisoned refresh"))
+
+    grown = ingest_incremental(base, world, _emb(), (6, 7))
+    assert runtime.update_stores(grown) == 2
+    runtime.run_until_idle()                # healthy refreshes; poisoned gated
+    assert healthy.sub.version == grown.store_version
+    assert runtime.metrics.refresh_failures == 1
+    clock.advance(1.0)
+    runtime.run_until_idle()                # second consecutive failure
+    assert runtime.metrics.quarantined == 1
+    assert runtime.quarantined_subscriptions == [poisoned.sub]
+
+    # further ingests no longer wedge the drain on the poisoned sub
+    grown2 = ingest_incremental(grown, world, _emb(), (7, n))
+    assert runtime.update_stores(grown2) == 1      # healthy only
+    runtime.run_until_idle()
+    assert healthy.sub.version == grown2.store_version
+    assert poisoned.sub.version == base.store_version
+
+    # recovery: quarantine release resumes exactly (state committed only on
+    # successful refreshes, so nothing partial leaked)
+    del poisoned.sub.refresh
+    assert runtime.release_quarantine(poisoned.sub) == 1
+    clock.advance(1.0)
+    runtime.run_until_idle()
+    assert poisoned.sub.version == grown2.store_version
+    _assert_same(poisoned.sub.result,
+                 _sequential_reference(world, grown2, [example_2_1()])[0])
+
+
+def test_frontend_batch_failure_chains_cause_and_stamps_timestamps(world):
+    from repro.serving import QueryFailure
+    from repro.serving.frontend import QueryFrontend
+    stores = ingest(world, _emb())
+    engine = LazyVLMEngine(stores, _emb(), verifier=MockVerifier(world))
+    frontend = QueryFrontend(engine)
+    boom = RuntimeError("device wedged")
+    frontend.session.query_batch = lambda qs: (_ for _ in ()).throw(boom)
+    t = frontend.submit(_queries(world)[4])
+    with pytest.raises(QueryFailure) as e:
+        frontend.step()
+    assert e.value.__cause__ is boom and e.value.kind == "engine"
+    assert t.done and isinstance(t.error, QueryFailure)
+    assert t.error.__cause__ is boom
+    assert t.completed_at is not None and t.latency >= 0
+    assert t.queue_seconds >= 0 and t.execute_seconds >= 0

@@ -137,3 +137,21 @@ def test_data_pipeline_deterministic_and_prefetches():
     p2.close()
     np.testing.assert_array_equal(np.asarray(a["tokens"]),
                                   np.asarray(b["tokens"]))
+
+
+def test_prefetch_queue_full_retries_without_skipping_batches():
+    """A blocked prefetch queue makes the producer re-offer the SAME batch
+    until a slot frees (no skipped index, no dead thread): a stalled
+    1-slot pipeline still yields the exact deterministic batch sequence."""
+    import time
+    cfg = get_config("qwen1.5-0.5b", reduced_size=True)
+    shape = ShapeConfig("t", 32, 4, "train")
+    p1 = TokenPipeline(cfg, shape, seed=3, prefetch=1)
+    time.sleep(0.5)          # producer hits queue.Full and keeps retrying
+    got = [np.asarray(next(p1)["tokens"]) for _ in range(4)]
+    p1.close()
+    p2 = TokenPipeline(cfg, shape, seed=3, prefetch=8)
+    want = [np.asarray(next(p2)["tokens"]) for _ in range(4)]
+    p2.close()
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
