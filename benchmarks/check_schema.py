@@ -68,6 +68,36 @@ def check(path: str, expect_modules=()) -> int:
     bad = [r for r in sratio if r["value"] >= 1.0]
     assert not bad, (f"incremental re-evaluation moved at least as many "
                      f"bytes as full re-execution: {bad}")
+    comp = [r for r in rows if r["name"] == "compaction/exact_vs_uncompacted"]
+    if comp:
+        assert comp[0]["value"] == 1, \
+            ("compacted-store execution diverged from the uncompacted/"
+             "monolithic reference")
+    coldx = [r for r in rows if r["name"] == "compaction/cold_tier_exact"]
+    if coldx:
+        assert coldx[0]["value"] == 1, \
+            "int4 cold-tier search diverged from the fp32 reference"
+    i4 = [r for r in rows
+          if r["name"] == "compaction/search_bytes_ratio_int4_vs_fp32"]
+    if i4:
+        assert i4[0]["value"] < 0.3, \
+            f"int4 cold-tier bytes-moved ratio above 0.3x fp32: {i4}"
+    sub = [r for r in rows
+           if r["name"] == "compaction/prune_growth_vs_linear"]
+    if sub:
+        assert sub[0]["value"] < 0.75, \
+            (f"zone-map verdict pass is no longer sub-linear vs the "
+             f"reference sweep: {sub}")
+    segs = {r["name"]: r["value"] for r in rows
+            if r["name"] in ("compaction/segment_count_pre",
+                             "compaction/segment_count_post",
+                             "compaction/segments_1024_compacted")}
+    if segs:
+        assert segs["compaction/segment_count_post"] \
+            < segs["compaction/segment_count_pre"], \
+            f"compaction did not reduce the segment population: {segs}"
+        assert segs.get("compaction/segments_1024_compacted", 0) < 1024, \
+            f"no segment-count drop at 1024 segments: {segs}"
     print(f"bench schema OK: {len(rows)} rows from {sorted(present)} "
           f"({len(ratios)} ratio checks, "
           f"exactness={'yes' if exact or casc or stream else 'n/a'})")

@@ -19,6 +19,9 @@
   robustness   — chaos-injected verifier/embedder faults: throughput/p99
                  at 0/5/20% fault rates, faulty-vs-clean exactness and
                  breaker-open degradation asserted
+  compaction   — tiered storage: zone-map pruning sub-linear in segment
+                 count (64→4096), compaction's segment/launch drop, int4
+                 cold-tier bytes ratio (exactness asserted)
   roofline     — printed separately: python -m benchmarks.roofline
 
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
@@ -52,11 +55,13 @@ def main(argv=None) -> None:
                     help="comma-separated subset of benchmark modules")
     args = ap.parse_args(argv)
 
-    from benchmarks import (accuracy, cascade, kernels, multi_query,
-                            parallelism, pruning, robustness, scaling,
-                            serving, streaming, topk_search, updates)
+    from benchmarks import (accuracy, cascade, compaction, kernels,
+                            multi_query, parallelism, pruning, robustness,
+                            scaling, serving, streaming, topk_search,
+                            updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
-               kernels, topk_search, cascade, streaming, serving, robustness]
+               kernels, topk_search, cascade, streaming, serving, robustness,
+               compaction]
     if args.modules:
         want = {m.strip() for m in args.modules.split(",")}
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}
@@ -90,6 +95,14 @@ def main(argv=None) -> None:
             "failed": failed,
             "rows": results,
         }
+        # tiered-storage trajectory metadata: segment population
+        # before/after the compaction pass, when that module ran
+        seg_counts = {r["name"].rsplit("_", 1)[-1]: r["value"]
+                      for r in results
+                      if r["name"] in ("compaction/segment_count_pre",
+                                       "compaction/segment_count_post")}
+        if seg_counts:
+            payload["segment_count"] = seg_counts
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json} ({len(results)} rows)", file=sys.stderr)

@@ -123,6 +123,11 @@ def run():
             (f"streaming/ingest_rows_per_s_{tag}",
              round(appended_rows / max(t_ingest, 1e-9), 1),
              f"{appended_rows} rel rows appended"),
+            # segment population the bytes/launches above were measured
+            # against — once background compaction changes it between
+            # runs, the incremental-vs-full ratio stays interpretable
+            (f"streaming/segments_{tag}", len(stores.segments),
+             f"store segments after the {tag} append schedule"),
             (f"streaming/incr_bytes_{tag}", incr_bytes,
              "delta windows + frontier"),
             (f"streaming/full_bytes_{tag}", full_bytes,

@@ -1,0 +1,178 @@
+"""Background compaction of sealed store segments (tiered storage, PR 9).
+
+Under unbounded ingest the append-only segmented layout accumulates
+thousands of small sealed segments; per-segment top-k launches and
+fragmented pruning stats then make query cost grow linearly in segment
+count. Compaction merges **adjacent** sealed segments back into larger
+ones — and because segment rows are contiguous slices of the global
+entity/relationship banks and :class:`~repro.core.stores.SegmentStats`
+combine **by addition**, a merge is pure metadata:
+
+  * the merged segment's row range is the concatenation of its
+    constituents' (already contiguous, append order is preserved);
+  * its stats are the exact ``+``-sum of theirs (histograms add, vid/fid
+    ranges min/max) — zero recompute, zero re-embedding, and totals still
+    equal a monolithic recompute exactly;
+  * no bank row moves, so every global row coordinate — and with it the
+    incremental subscriptions' bitmaps, watermarks and entity mirrors —
+    stays valid across compaction.
+
+**Victim selection** is size-tiered and deterministic
+(:func:`plan_compaction`): adjacent sealed segments in the same size
+tier (``bit_length`` of their row count) group into runs of at most
+``fanout``, capped by ``max_segment_rows``; only runs of at least
+``min_merge`` merge. Same-tier grouping bounds write amplification the
+way size-tiered LSM compaction does — a large merged segment is not
+re-merged with every small newcomer, it waits until enough peers reach
+its tier.
+
+**What a merge preserves.** vid/fid ordering (rows never move), the
+active tail (never touched), and sticky device placement: the merged
+segment inherits the majority device of its constituents (by entity
+rows, lowest ordinal on ties), so a placed engine re-places at most the
+merged ranges and never migrates untouched segments. ``tier`` stays
+cold only when every constituent was cold; ``sealed_at`` keeps the max
+(compaction does not reset the demotion clock — the rows are exactly as
+untouched as before). ``compact_stores`` bumps ``store_version`` so
+engines rebuild stats snapshots, zone maps and prune decisions against
+the merged table.
+
+The serving runtime drives this as background work from its ticks,
+priced in the same pipeline-cost currency as queries
+(:func:`compaction_cost_bytes`) so compaction never starves interactive
+work — see ``repro.serving.runtime``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core.stores import (StoreSegment, VideoStores,
+                               _bootstrap_segments)
+
+
+@dataclass(frozen=True)
+class CompactionPolicy:
+    """Size-tiered victim-selection knobs.
+
+    ``min_merge``: smallest run worth merging. ``fanout``: most segments
+    merged into one per pass. ``max_segment_rows``: entity+relationship
+    row cap for a merged segment (runs close early rather than exceed
+    it)."""
+
+    min_merge: int = 2
+    fanout: int = 8
+    max_segment_rows: int = 1 << 20
+
+
+def _size_tier(seg: StoreSegment) -> int:
+    return (seg.ent_rows + seg.rel_rows).bit_length()
+
+
+def plan_compaction(stores: VideoStores,
+                    policy: Optional[CompactionPolicy] = None
+                    ) -> Tuple[Tuple[int, int], ...]:
+    """Deterministic victim selection: ``(lo, hi)`` position runs (over
+    the segment table, half-open) of adjacent sealed same-size-tier
+    segments to merge. Empty when nothing qualifies."""
+    policy = policy or CompactionPolicy()
+    segments = _bootstrap_segments(stores)
+    runs = []
+    lo = None
+    rows = tier = 0
+    storage = "hot"
+    for i, seg in enumerate(segments):
+        seg_rows = seg.ent_rows + seg.rel_rows
+        if lo is not None:
+            # same size tier AND same storage tier: merging a cold
+            # segment into a hot run would silently re-promote its rows
+            # out of the compressed tier
+            fits = (seg.sealed and _size_tier(seg) == tier
+                    and seg.tier == storage
+                    and i - lo < policy.fanout
+                    and rows + seg_rows <= policy.max_segment_rows)
+            if fits:
+                rows += seg_rows
+                continue
+            if i - lo >= policy.min_merge:
+                runs.append((lo, i))
+            lo = None
+        if seg.sealed:
+            lo, rows, tier, storage = i, seg_rows, _size_tier(seg), seg.tier
+    if lo is not None and len(segments) - lo >= policy.min_merge:
+        runs.append((lo, len(segments)))
+    return tuple(runs)
+
+
+def _majority_device(group: Tuple[StoreSegment, ...]) -> Optional[int]:
+    """Device owning the most entity rows among the constituents (lowest
+    ordinal on ties); ``None`` when no constituent was placed."""
+    loads: dict = {}
+    for seg in group:
+        if seg.device is not None:
+            loads[seg.device] = loads.get(seg.device, 0) + max(1, seg.ent_rows)
+    if not loads:
+        return None
+    return min(loads, key=lambda d: (-loads[d], d))
+
+
+def merge_segments(group: Tuple[StoreSegment, ...], sid: int) -> StoreSegment:
+    """Merge adjacent sealed segments into one: ranges concatenate, stats
+    add, placement goes to the majority device."""
+    stats = group[0].stats
+    for seg in group[1:]:
+        stats = stats + seg.stats
+    return StoreSegment(
+        sid=sid,
+        ent_start=group[0].ent_start, ent_stop=group[-1].ent_stop,
+        rel_start=group[0].rel_start, rel_stop=group[-1].rel_stop,
+        sealed=True, stats=stats, device=_majority_device(group),
+        tier="cold" if all(s.tier == "cold" for s in group) else "hot",
+        sealed_at=max(s.sealed_at for s in group))
+
+
+def compact_stores(stores: VideoStores,
+                   policy: Optional[CompactionPolicy] = None, *,
+                   plan: Optional[Tuple[Tuple[int, int], ...]] = None
+                   ) -> VideoStores:
+    """Run one compaction pass (metadata-only, see module docstring).
+
+    Returns the same object when nothing merges; otherwise a store with
+    the merged segment table, sids renumbered contiguously, and
+    ``store_version + 1``. Banks, rows and the active tail are untouched.
+    """
+    segments = _bootstrap_segments(stores)
+    runs = plan if plan is not None else plan_compaction(stores, policy)
+    if not runs:
+        return stores
+    merged = []
+    pos = 0
+    for lo, hi in sorted(runs):
+        for i in range(pos, lo):
+            merged.append(segments[i])
+        merged.append(merge_segments(tuple(segments[lo:hi]), sid=0))
+        pos = hi
+    merged.extend(segments[pos:])
+    renumbered = tuple(dataclasses.replace(seg, sid=i) if seg.sid != i else seg
+                       for i, seg in enumerate(merged))
+    return dataclasses.replace(stores, segments=renumbered,
+                               store_version=stores.store_version + 1)
+
+
+def compaction_cost_bytes(stores: VideoStores,
+                          runs: Tuple[Tuple[int, int], ...]) -> int:
+    """Upper-bound device bytes a pass may move, in the same currency the
+    serving admission prices queries in: a placed engine re-stages at most
+    the merged ranges' entity banks (fp32 + int8 + packed int4 rows) and
+    relationship rows. The metadata merge itself is free."""
+    segments = _bootstrap_segments(stores)
+    ent_dim = int(stores.entities.text_emb.shape[1]) \
+        + int(stores.entities.image_emb.shape[1])
+    total = 0
+    for lo, hi in runs:
+        ent = segments[hi - 1].ent_stop - segments[lo].ent_start
+        rel = segments[hi - 1].rel_stop - segments[lo].rel_start
+        # fp32 (4 B) + int8 (1 B + scales) + packed int4 (0.5 B) per dim
+        total += ent * ent_dim * 6 + ent * 32 + rel * 5 * 4
+    return total

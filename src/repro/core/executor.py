@@ -88,6 +88,35 @@ def _is_append_descendant(old: VideoStores, new: VideoStores) -> bool:
                for a, b in zip(old_sealed, new_segs))
 
 
+def _is_compaction_descendant(old: VideoStores, new: VideoStores) -> bool:
+    """Whether ``new``'s sealed table is a boundary-coarsening of ``old``'s
+    — what ``compact_stores`` produces: every new sealed segment's row
+    ranges are the concatenation of one or more *consecutive* old sealed
+    segments', covering exactly the same rows. Compaction moves no bank
+    row, so placed slices of segments that kept their exact range remain
+    valid even though sids renumber."""
+    if getattr(new, "store_version", 0) <= getattr(old, "store_version", 0):
+        return False
+    old_sealed = [s for s in getattr(old, "segments", ()) if s.sealed]
+    new_sealed = [s for s in getattr(new, "segments", ()) if s.sealed]
+    if not old_sealed or len(new_sealed) > len(old_sealed):
+        return False
+    i = 0
+    for ns in new_sealed:
+        if (i >= len(old_sealed)
+                or old_sealed[i].ent_start != ns.ent_start
+                or old_sealed[i].rel_start != ns.rel_start):
+            return False
+        while i < len(old_sealed) and (
+                old_sealed[i].ent_stop != ns.ent_stop
+                or old_sealed[i].rel_stop != ns.rel_stop):
+            i += 1
+        if i >= len(old_sealed):
+            return False
+        i += 1
+    return i == len(old_sealed)
+
+
 def _to_device(x, device):
     """The single device→device funnel for placed segment execution.
 
@@ -197,6 +226,12 @@ class LazyVLMEngine:
         if search_mode not in SEARCH_MODES:
             raise ValueError(f"search_mode must be one of {SEARCH_MODES}, "
                              f"got {search_mode!r}")
+        if search_mode == "int4":
+            raise ValueError("search_mode='int4' is the cold-tier scan: "
+                             "engines select it per segment when the "
+                             "tiered-storage layer demotes one "
+                             "(demote_cold_segments) — configure 'fp32' "
+                             "or 'int8' for the hot tier")
         if search_mode == "int8" and (stores.entities.text_i8 is None
                                       or stores.entities.image_i8 is None):
             raise ValueError("search_mode='int8' needs int8 entity banks "
@@ -255,8 +290,10 @@ class LazyVLMEngine:
         freshness, but cost ordering, segment pruning, and admission
         pricing do. Placed segment banks survive **append-descendant**
         updates (sealed rows are immutable, so their placed slices stay
-        valid and an incremental refresh moves only new segments' rows);
-        any other store swap drops them."""
+        valid and an incremental refresh moves only new segments' rows)
+        and **compaction-descendant** updates (a merge moves no bank row,
+        so untouched segments' slices stay valid — only the merged ranges
+        re-place); any other store swap drops them."""
         if _is_append_descendant(self._stores, stores):
             if self._placement is not None:
                 # carry the old assignment by sid: the new store's segment
@@ -264,6 +301,13 @@ class LazyVLMEngine:
                 self._prior_assignment.update(
                     (s.sid, d) for s, d in zip(
                         self._stores.segments, self._placement.assignment))
+        elif _is_compaction_descendant(self._stores, stores):
+            # sids renumber under compaction, so the sid-keyed prior map
+            # is stale — stickiness rides on the StoreSegment.device
+            # metadata the compacted table carries (merge_segments keeps
+            # the majority device); the bank cache keys on row ranges,
+            # not sids, so untouched segments keep their placed slices
+            self._prior_assignment = {}
         else:
             self._seg_bank_cache.clear()
             self._prior_assignment = {}
@@ -415,35 +459,53 @@ class LazyVLMEngine:
         self._placement_version = None
         self._physical_cache.clear()     # pipelines embed the placement
 
+    def _segment_modes(self) -> Tuple[str, ...]:
+        """Effective per-range scan modes, aligned 1:1 with
+        ``entity_search_bounds``: cold-tier segments scan their packed
+        int4 banks, hot segments the engine's configured ``search_mode``.
+        The tier split never changes a result bit — every mode's
+        per-range top-k is exact — only the bytes each range reads."""
+        from repro.core.stores import entity_segment_tiers
+        return tuple("int4" if t == "cold" else self.search_mode
+                     for t in entity_segment_tiers(self.stores))
+
     def _segment_banks(self, role: str, emb, emb_i8, valid):
         """Per-segment bank slices committed to their assigned devices.
 
         Cached per segment: sealed segments key on their immutable row
-        range (their rows never change, so a placed slice survives store
-        updates — incremental refreshes move only NEW segments' rows); the
-        active/tail range keys on ``store_version`` and is re-placed after
-        every append. All moves go through the ``_to_device`` funnel."""
+        range (their rows never change and compaction only coarsens
+        boundaries, so a placed slice survives store updates — incremental
+        refreshes move only NEW or merged ranges' rows); the active/tail
+        range keys on ``store_version`` and is re-placed after every
+        append. Each range stages only the bank its tier's scan mode
+        reads (the mode is part of the key, so a hot→cold demotion
+        re-stages the int4 slice instead of resurfacing a mode-less
+        bank). All moves go through the ``_to_device`` funnel."""
         placement = self.segment_placement()
         table = self._mesh_device_table()
-        # fp32 mode never reads the int8 bank — don't place (move) it
-        emb_i8 = emb_i8 if self.search_mode == "int8" else None
+        modes = self._segment_modes()
+        ent = self.stores.entities
+        emb_i4 = ent.image_i4 if role == "image" else ent.text_i4
         bounds3 = entity_segment_bounds(self.stores)
         segs = {s.sid: s for s in self.stores.segments}
         fresh: Dict[Tuple, object] = {}
         banks = []
         last = bounds3[-1]
-        for start, stop, sid in bounds3:
+        for j, (start, stop, sid) in enumerate(bounds3):
+            m = modes[j]
             dev_ord = placement.device_of(sid)
             sealed = (segs[sid].sealed and (start, stop, sid) != last)
-            # search_mode is part of the key: fp32 banks carry no int8
-            # slice, so flipping modes must not resurface a mode-less bank
-            key = (role, self.search_mode, sid, start, stop, dev_ord) \
-                if sealed else (role, self.search_mode, sid, start, stop,
-                                dev_ord, self.store_version)
+            # the key carries the row range, NOT the sid (compaction
+            # renumbers sids without moving rows) and the range's scan
+            # mode (a mode only reads its own bank)
+            key = (role, m, start, stop, dev_ord) if sealed \
+                else (role, m, start, stop, dev_ord, self.store_version)
             bank = self._seg_bank_cache.get(key)
             if bank is None:
                 bank = place_segment_banks(
-                    emb, valid, ((start, stop),), (dev_ord,), i8=emb_i8,
+                    emb, valid, ((start, stop),), (dev_ord,),
+                    i8=emb_i8 if m == "int8" else None,
+                    i4=emb_i4 if m == "int4" else None, modes=(m,),
                     put=lambda x, d: _to_device(x, d),
                     device_table=table)[0]
             fresh[key] = bank
@@ -453,34 +515,42 @@ class LazyVLMEngine:
 
     # -- stage 1 search dispatch (used by TopKSearchOp) ----------------------
     def _search(self, q_emb, emb, emb_i8, valid, k):
+        ent = self.stores.entities
+        role = "image" if emb is ent.image_emb else "text"
+        modes = self._segment_modes()
+        cold = any(m == "int4" for m in modes)
+        emb_i4 = (ent.image_i4 if role == "image" else ent.text_i4) \
+            if cold else None
         if self.mesh is not None:
             bounds = entity_search_bounds(self.stores)
             if len(bounds) > 1:
                 # sharded segment execution: per-device segment-local
                 # top-k + one fused cross-device merge, bitwise equal to
                 # the monolithic sweep (see placed_topk_similarity)
-                role = "image" if emb is self.stores.entities.image_emb \
-                    else "text"
                 banks = self._segment_banks(role, emb, emb_i8, valid)
                 table = self._mesh_device_table()
                 merge_ord = next(i for i in range(len(table))
                                  if i not in self._lost_devices)
                 return placed_topk_similarity(
                     q_emb, banks, k, use_kernels=self.use_kernels,
-                    mode=self.search_mode,
+                    mode=self.search_mode, modes=modes,
                     merge_device=table[merge_ord],
                     to_device=lambda x, d: _to_device(x, d))
-            # unsegmented store on a mesh: shard rows over devices and
-            # keep the global shard_map sweep
-            return sharded_topk_similarity(q_emb, emb, valid, k, self.mesh,
-                                           use_kernels=self.use_kernels,
-                                           mode=self.search_mode, i8=emb_i8)
+            # unsegmented (or single-segment) store on a mesh: shard rows
+            # over devices and keep the global shard_map sweep, in the
+            # lone range's tier mode
+            return sharded_topk_similarity(
+                q_emb, emb, valid, k, self.mesh,
+                use_kernels=self.use_kernels, mode=modes[0],
+                i8=emb_i8 if modes[0] != "int4" else None, i4=emb_i4)
         bounds = entity_search_bounds(self.stores)
-        if len(bounds) > 1:
+        if len(bounds) > 1 or cold:
             from repro.core.physical.stages import _entity_match_segmented
             return _entity_match_segmented(q_emb, emb, emb_i8, valid, k,
                                            self.search_mode,
-                                           self.use_kernels, bounds)
+                                           self.use_kernels, bounds,
+                                           db_i4=emb_i4,
+                                           modes=modes if cold else None)
         return _entity_match(q_emb, emb, emb_i8, valid, k,
                              self.search_mode, self.use_kernels)
 

@@ -58,6 +58,9 @@ class PhysicalPipeline:
     cascade: bool               # VlmVerifyOp runs the budgeted cascade
     segment_plan: Tuple[SegmentDecision, ...] = ()
     store_version: int = 0
+    # per-segment storage tiers ("hot"/"cold"), parallel to segment_plan —
+    # EXPLAIN renders which segments scan packed int4 banks
+    segment_tiers: Tuple[str, ...] = ()
     # placed segment execution (mesh engines): the placement-aware pass
     # output + its predicted cross-device merge traffic. None on unplaced
     # engines — per-op estimates above NEVER depend on placement (results
@@ -118,10 +121,16 @@ class PhysicalPipeline:
             lines.append(row)
         if segments and self.segment_plan:
             scanned, n = scanned_count(self.segment_plan)
-            lines.append(f"  segments: {scanned} scanned, {n - scanned} "
-                         f"pruned of {n}")
-            for d in self.segment_plan:
-                lines.append(f"    {d.describe()}")
+            line = (f"  segments: {scanned} scanned, {n - scanned} "
+                    f"pruned of {n}")
+            cold = sum(t == "cold" for t in self.segment_tiers)
+            if cold:
+                line += f"; tiers: {n - cold} hot, {cold} cold (int4)"
+            lines.append(line)
+            for i, d in enumerate(self.segment_plan):
+                tier = (f"  tier={self.segment_tiers[i]}"
+                        if cold and i < len(self.segment_tiers) else "")
+                lines.append(f"    {d.describe()}{tier}")
         if self.placement is not None:
             lines.append(f"  placement: {self.placement.n_devices} devices"
                          f" — {self.placement.describe()}")
@@ -221,4 +230,6 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
         cascade=plan.verify.enabled and budget > 0,
         segment_plan=prune_segments(plan, stats, pred_candidates),
         store_version=store_version,
+        segment_tiers=tuple(getattr(s, "tier", "hot")
+                            for s in stats.segments),
         placement=placement, placement_comms=comms)

@@ -85,10 +85,15 @@ class StoreStats:
     # the store's StoreSegment table (empty on hand-built monolithic
     # stores); totals above are the elementwise sum of these when present
     segments: Tuple = ()
+    # hierarchical zone maps over the segment table (repro.core.stores
+    # .ZoneMaps), built once per store_version alongside this snapshot;
+    # the pruning pass reads them instead of sweeping all segments
+    zone_maps: object = None
 
     @classmethod
     def from_stores(cls, stores) -> "StoreStats":
         from repro.core.physical.stages import to_host
+        from repro.core.stores import ZoneMaps
         rel = stores.relationships.table
         labels = tuple(stores.predicates.labels)
         shape = dict(
@@ -109,7 +114,8 @@ class StoreStats:
                 labels=labels, pred_rows=tuple(hist),
                 rel_rows=sum(s.stats.rel_rows for s in segments),
                 entity_rows=sum(s.stats.ent_rows for s in segments),
-                segments=segments, **shape)
+                segments=segments, zone_maps=ZoneMaps.build(segments),
+                **shape)
         hist, rel_rows, ent_rows = _store_stats_device(
             rel["rl"], rel.valid, stores.entities.table.valid, len(labels))
         return cls(

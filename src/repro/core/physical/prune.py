@@ -51,7 +51,7 @@ segment between devices can never flip a verdict.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.physical.cost import StoreStats
 
@@ -86,19 +86,127 @@ def chain_min_span(plan) -> int:
     return 1 + sum(g[0] for g in plan.temporal.gaps[lo:hi])
 
 
+def _hist_hits(pred_rows: Tuple[int, ...],
+               cands: Tuple[int, ...]) -> bool:
+    """Does any candidate label have rows in this histogram?"""
+    return any(p < len(pred_rows) and pred_rows[p] for p in cands)
+
+
 def prune_segments(plan, stats: StoreStats,
                    pred_candidates: Optional[Tuple[Tuple[int, ...], ...]]
                    = None) -> Tuple[SegmentDecision, ...]:
-    """The pruning pass. ``pred_candidates[r]`` is the runtime candidate
-    label-id set for predicate-text row ``r`` (``PredicateMatch.texts``
-    order); ``None`` disables the predicate rule (direct
-    ``compile_physical`` callers without an engine), leaving only the two
-    store-shape rules — still sound, just less sharp."""
+    """The pruning pass — zone-map-backed since the tiered-storage PR.
+
+    ``pred_candidates[r]`` is the runtime candidate label-id set for
+    predicate-text row ``r`` (``PredicateMatch.texts`` order); ``None``
+    disables the predicate rule (direct ``compile_physical`` callers
+    without an engine), leaving only the two store-shape rules — still
+    sound, just less sharp.
+
+    Verdicts come from the store's **hierarchical zone maps**
+    (:class:`repro.core.stores.ZoneMaps`, built once per
+    ``store_version``) instead of a per-segment sweep: the
+    exclusive-vid-ownership precondition reads the precomputed O(1)
+    verdict (replacing the O(n²) pairwise overlap loop), and uniform
+    subtrees — all-empty, all-overlapping, all-below-chain-span,
+    all-failing-triple-0, or provably all-scannable via the min-histogram
+    — resolve at their aggregate node without visiting leaves. The
+    verdicts are **pinned identical** to the linear reference
+    (:func:`_prune_segments_reference`, kept for the test suite): every
+    wholesale rule is the exact per-leaf rule lifted through the
+    aggregate, never a relaxation.
+    """
     span_needed = chain_min_span(plan)
-    ts = plan.triple_select
+    segs = tuple(stats.segments)
     if span_needed == 0:
         # no frame selects rows: reach is all-True regardless of the store,
         # so nothing is provably prunable
+        return tuple(SegmentDecision(seg.sid, True) for seg in segs)
+    zm = stats.zone_maps
+    if zm is None or zm.segments != segs:
+        from repro.core.stores import ZoneMaps
+        zm = ZoneMaps.build(segs)
+    ts = plan.triple_select
+    cand_sets = None
+    if pred_candidates is not None:
+        cand_sets = tuple(tuple(pred_candidates[ts.pred_row[i]])
+                          for i in range(len(ts.triples)))
+
+    out: List[Optional[SegmentDecision]] = [None] * len(segs)
+
+    def emit(node, scanned: bool, reason: str = "") -> None:
+        for i in range(node.lo, node.hi):
+            out[i] = SegmentDecision(segs[i].sid, scanned, reason)
+
+    def leaf_decision(i: int) -> SegmentDecision:
+        seg = segs[i]
+        st = seg.stats
+        if st.rel_rows == 0:
+            return SegmentDecision(seg.sid, False, "empty")
+        # The row-based rules reason per *video* segment: they prove "no
+        # chain can complete inside any vid whose rows live here". That
+        # proof needs exclusive ownership — if any other store segment
+        # also holds rows in this vid range, a vid's rows straddle
+        # segments and the segment-local fid span / histogram says nothing
+        # about the vid's full row set. Range overlap is the
+        # (conservative, sound) witness; disjoint appends — the streaming
+        # common case — keep ownership exclusive.
+        if not zm.exclusive[i]:
+            return SegmentDecision(seg.sid, True)
+        if st.fid_span < span_needed:
+            return SegmentDecision(seg.sid, False, "chain-span")
+        if cand_sets is not None:
+            for t, cands in enumerate(cand_sets):
+                if not _hist_hits(st.pred_rows, cands):
+                    return SegmentDecision(seg.sid, False, f"predicate(t{t})")
+        return SegmentDecision(seg.sid, True)
+
+    def visit(node) -> None:
+        if node.stats.rel_rows == 0:        # every leaf below is empty
+            emit(node, False, "empty")
+            return
+        if not node.any_rel_empty:
+            if node.none_exclusive:         # every leaf overlaps: all scan
+                emit(node, True)
+                return
+            if node.all_exclusive:
+                if node.max_fid_span < span_needed:
+                    emit(node, False, "chain-span")
+                    return
+                if node.min_fid_span >= span_needed:
+                    if cand_sets is None:
+                        emit(node, True)
+                        return
+                    # aggregate zero for triple 0's candidates ⇒ every
+                    # leaf fails t0 first (counts are nonnegative)
+                    if not _hist_hits(node.stats.pred_rows, cand_sets[0]):
+                        emit(node, False, "predicate(t0)")
+                        return
+                    # a nonzero *min* histogram entry for some candidate
+                    # of every triple ⇒ every leaf passes every triple
+                    if all(_hist_hits(node.min_pred_rows, cands)
+                           for cands in cand_sets):
+                        emit(node, True)
+                        return
+        if node.children:
+            for child in node.children:
+                visit(child)
+        else:
+            out[node.lo] = leaf_decision(node.lo)
+
+    if zm.root is not None:
+        visit(zm.root)
+    return tuple(out)
+
+
+def _prune_segments_reference(plan, stats: StoreStats,
+                              pred_candidates=None
+                              ) -> Tuple[SegmentDecision, ...]:
+    """The original linear sweep (O(n²) ownership check), kept verbatim as
+    the oracle the zone-map pass is pinned against in the test suite."""
+    span_needed = chain_min_span(plan)
+    ts = plan.triple_select
+    if span_needed == 0:
         return tuple(SegmentDecision(seg.sid, True)
                      for seg in stats.segments)
     out = []
@@ -107,14 +215,6 @@ def prune_segments(plan, stats: StoreStats,
         if st.rel_rows == 0:
             out.append(SegmentDecision(seg.sid, False, "empty"))
             continue
-        # The row-based rules below reason per *video* segment: they prove
-        # "no chain can complete inside any vid whose rows live here". That
-        # proof needs exclusive ownership — if any other store segment also
-        # holds rows in this vid range, a vid's rows straddle segments and
-        # the segment-local fid span / histogram says nothing about the
-        # vid's full row set. Range overlap is the (conservative, sound)
-        # witness; disjoint appends — the streaming common case — keep
-        # ownership exclusive.
         if any(o is not seg and o.stats.rel_rows > 0
                and not (st.vid_hi < o.stats.vid_lo
                         or o.stats.vid_hi < st.vid_lo)

@@ -46,16 +46,20 @@ def _entity_match(queries, db, db_i8, db_valid, k: int, mode: str,
                            mode=mode, i8=db_i8)
 
 
-@partial(jax.jit, static_argnames=("k", "mode", "use_kernels", "bounds"))
+@partial(jax.jit,
+         static_argnames=("k", "mode", "use_kernels", "bounds", "modes"))
 def _entity_match_segmented(queries, db, db_i8, db_valid, k: int, mode: str,
-                            use_kernels: bool, bounds):
+                            use_kernels: bool, bounds, db_i4=None, modes=None):
     """Segment-aware search launch: per-segment top-k + fused cross-segment
-    merge in ONE jitted program (``bounds`` is static, so the program
-    recompiles only when the store's segmentation layout changes). Results
-    are bit-identical to :func:`_entity_match` over the whole bank."""
+    merge in ONE jitted program (``bounds``/``modes`` are static, so the
+    program recompiles only when the store's segmentation layout or tier
+    assignment changes). ``modes[j]`` overrides the scan mode per range —
+    the tiered store passes ``"int4"`` for cold segments, backed by
+    ``db_i4`` — and results stay bit-identical to :func:`_entity_match`
+    over the whole bank."""
     return topk_similarity_segmented(queries, db, db_valid, k, bounds,
                                      use_kernels=use_kernels, mode=mode,
-                                     i8=db_i8)
+                                     i8=db_i8, i4=db_i4, modes=modes)
 
 
 @partial(jax.jit, static_argnames=("k", "mode", "use_kernels", "bucket"))

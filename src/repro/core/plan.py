@@ -58,7 +58,9 @@ def predicted_search_bytes(mode: str, capacity: int, dim: int,
     fp32 brute force reads the whole fp32 bank; the int8 two-phase path
     reads the int8 codes + per-row scale/err and gathers only k′ candidate
     fp32 rows per query for the exact rescore (k′ = min(4k, 128), the
-    kernel's overfetch — see ``repro.kernels.topk_similarity_i8``).
+    kernel's overfetch — see ``repro.kernels.topk_similarity_i8``); the
+    int4 cold-tier path reads nibble-packed codes (dim/2 bytes per row,
+    ~0.125× the fp32 scan) with a wider k′ = min(8k, 128) overfetch.
     """
     out = n_texts * k * 8                        # (scores, idx) results
     if mode == "int8":
@@ -66,7 +68,45 @@ def predicted_search_bytes(mode: str, capacity: int, dim: int,
         return (capacity * (dim + 8)             # int8 codes + scale + err
                 + n_texts * kprime * dim * 4     # phase-2 fp32 gather
                 + out)
+    if mode == "int4":
+        kprime = min(8 * k, 128)
+        return (capacity * ((dim + 1) // 2 + 8)  # packed nibbles + scale/err
+                + n_texts * kprime * dim * 4     # phase-2 fp32 gather
+                + out)
     return capacity * dim * 4 + out
+
+
+def predicted_search_bytes_tiered(mode: str, stores, dim: int,
+                                  n_texts: int, k: int) -> int:
+    """Tier-aware variant of :func:`predicted_search_bytes` for segmented
+    stores: each segment range contributes its own tier's scan bytes —
+    cold ranges read packed int4 (~0.125× the fp32 rows) and pay their
+    own phase-2 gather — so the model prices exactly what the per-range
+    dispatch will launch. Stores without a cold segment fall back to the
+    uniform model (one launch, one gather), keeping estimates bit-stable
+    for everything that existed before tiering."""
+    segs = tuple(getattr(stores, "segments", ()))
+    tiers = ()
+    if segs:
+        from repro.core.stores import entity_segment_tiers
+        tiers = entity_segment_tiers(stores)
+    if "cold" not in tiers:
+        return predicted_search_bytes(mode, stores.entities.capacity, dim,
+                                      n_texts, k)
+    from repro.core.stores import entity_search_bounds
+    total = n_texts * k * 8                      # (scores, idx) results
+    for (start, stop), tier in zip(entity_search_bounds(stores), tiers):
+        m = "int4" if tier == "cold" else mode
+        cap = stop - start
+        if m == "int8":
+            total += (cap * (dim + 8)
+                      + n_texts * min(4 * k, 128) * dim * 4)
+        elif m == "int4":
+            total += (cap * ((dim + 1) // 2 + 8)
+                      + n_texts * min(8 * k, 128) * dim * 4)
+        else:
+            total += cap * dim * 4
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -329,11 +369,12 @@ def compile_plan(query: VMRQuery, stores, *, verify: bool,
     k_ent = min(query.top_k, cap)
     dims = (int(stores.entities.text_emb.shape[1]),
             int(stores.entities.image_emb.shape[1]))
-    pred_bytes = predicted_search_bytes(search_mode, cap, dims[0],
-                                        len(ent_texts), k_ent)
+    pred_bytes = predicted_search_bytes_tiered(search_mode, stores, dims[0],
+                                               len(ent_texts), k_ent)
     if query.image_search:
-        pred_bytes += predicted_search_bytes(search_mode, cap, dims[1],
-                                             len(ent_texts), k_ent)
+        pred_bytes += predicted_search_bytes_tiered(search_mode, stores,
+                                                    dims[1], len(ent_texts),
+                                                    k_ent)
     em = EntityMatch(
         names=tuple(e.name for e in query.entities),
         texts=ent_texts, rows=ent_rows,

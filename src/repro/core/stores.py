@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.topk_similarity_i4 import Int4Rows, quantize_rows_i4
 from repro.kernels.topk_similarity_i8 import Int8Rows, quantize_rows
 from repro.symbolic.ops import PAIR_FIRST_LIMIT, PAIR_RADIX
 from repro.symbolic.table import Table
@@ -111,7 +112,9 @@ class EntityStore:
     def __init__(self, table: Table, text_emb: jax.Array,
                  image_emb: jax.Array,
                  text_i8: Optional[Int8Rows] = None,
-                 image_i8: Optional[Int8Rows] = None):
+                 image_i8: Optional[Int8Rows] = None,
+                 text_i4: Optional[Int4Rows] = None,
+                 image_i4: Optional[Int4Rows] = None):
         self.table = table          # columns vid, eid; capacity N
         self.text_emb = text_emb    # (N, Dt) L2-normalized
         self.image_emb = image_emb  # (N, Di) L2-normalized
@@ -119,10 +122,16 @@ class EntityStore:
         # hand-built stores (fp32 search only)
         self.text_i8 = text_i8
         self.image_i8 = image_i8
+        # per-row packed int4 codes for the cold tier (two codes/byte);
+        # None until the tiered-storage layer needs them — then built once
+        # from the fp32 bank (row-independent, so lazily building them is
+        # bit-identical to having built them at ingest)
+        self.text_i4 = text_i4
+        self.image_i4 = image_i4
 
     def tree_flatten(self):
         return (self.table, self.text_emb, self.image_emb, self.text_i8,
-                self.image_i8), None
+                self.image_i8, self.text_i4, self.image_i4), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -243,6 +252,14 @@ class StoreSegment:
     ``None`` until a placed engine assigns one. Placement is sticky — a
     sealed segment never migrates — and is pure metadata: results are
     bitwise independent of it.
+
+    ``tier`` is the storage tier ("hot" | "cold"): cold segments' entity
+    rows are searched through the packed-int4 two-phase path (~8× less
+    HBM traffic; still bitwise exact — certificate or fp32 fallback).
+    ``sealed_at`` records the ``store_version`` at which the segment's
+    rows last changed; :func:`demote_cold_segments` demotes sealed
+    segments untouched for ``demote_after`` versions. Both are pure
+    metadata — results are bitwise independent of the tier.
     """
 
     sid: int
@@ -253,6 +270,8 @@ class StoreSegment:
     sealed: bool
     stats: SegmentStats
     device: Optional[int] = None
+    tier: str = "hot"
+    sealed_at: int = 0
 
     @property
     def ent_rows(self) -> int:
@@ -305,7 +324,9 @@ def build_entity_store(vids: np.ndarray, eids: np.ndarray,
     image = jnp.asarray(_pad_rows(image_emb.astype(np.float32), capacity))
     return EntityStore(table, text, image,
                        text_i8=quantize_rows(text),
-                       image_i8=quantize_rows(image))
+                       image_i8=quantize_rows(image),
+                       text_i4=quantize_rows_i4(text),
+                       image_i4=quantize_rows_i4(image))
 
 
 def build_relationship_store(rows: np.ndarray, capacity: int
@@ -347,6 +368,19 @@ def _insert_i8(bank: Optional[Int8Rows], new_emb: jax.Array, s) -> \
                     _insert(bank.err, new.err, s))
 
 
+def _insert_i4(bank: Optional[Int4Rows], new_emb: jax.Array, s) -> \
+        Optional[Int4Rows]:
+    """Cold-tier analogue of :func:`_insert_i8`: quantization *and* nibble
+    packing are row-independent, so the appended packed bank is
+    bit-identical to requantizing + repacking from scratch."""
+    if bank is None:
+        return None
+    new = quantize_rows_i4(new_emb)
+    return Int4Rows(_insert(bank.packed, new.packed, s),
+                    _insert(bank.scale, new.scale, s),
+                    _insert(bank.err, new.err, s))
+
+
 def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
                     ) -> EntityStore:
     """Incremental ingest: write new rows into spare capacity.
@@ -373,7 +407,22 @@ def append_entities(store: EntityStore, vids, eids, text_emb, image_emb
                        _insert(store.text_emb, text_emb, s),
                        _insert(store.image_emb, image_emb, s),
                        text_i8=_insert_i8(store.text_i8, text_emb, s),
-                       image_i8=_insert_i8(store.image_i8, image_emb, s))
+                       image_i8=_insert_i8(store.image_i8, image_emb, s),
+                       text_i4=_insert_i4(store.text_i4, text_emb, s),
+                       image_i4=_insert_i4(store.image_i4, image_emb, s))
+
+
+def ensure_int4_banks(store: EntityStore) -> EntityStore:
+    """Build the packed int4 cold-tier banks if the store lacks them
+    (hand-built stores). Per-row quantization makes the late build
+    bit-identical to having quantized at ingest."""
+    if store.text_i4 is not None and store.image_i4 is not None:
+        return store
+    return EntityStore(store.table, store.text_emb, store.image_emb,
+                       text_i8=store.text_i8, image_i8=store.image_i8,
+                       text_i4=store.text_i4 or quantize_rows_i4(store.text_emb),
+                       image_i4=store.image_i4
+                       or quantize_rows_i4(store.image_emb))
 
 
 # ---------------------------------------------------------------------------
@@ -433,12 +482,14 @@ def append_stores(stores: "VideoStores", vids, eids, text_emb, image_emb,
         segments[-1] = dataclasses.replace(
             active, ent_stop=active.ent_stop + len(vids),
             rel_stop=active.rel_stop + len(rel_rows),
-            stats=active.stats + batch, sealed=seal)
+            stats=active.stats + batch, sealed=seal,
+            sealed_at=stores.store_version + 1)
     else:
         segments.append(StoreSegment(
             sid=len(segments), ent_start=ent_start,
             ent_stop=ent_start + len(vids), rel_start=rel_start,
-            rel_stop=rel_start + len(rel_rows), sealed=seal, stats=batch))
+            rel_stop=rel_start + len(rel_rows), sealed=seal, stats=batch,
+            sealed_at=stores.store_version + 1))
 
     desc = dict(stores.entity_desc)
     if entity_desc:
@@ -457,14 +508,23 @@ def append_stores(stores: "VideoStores", vids, eids, text_emb, image_emb,
 def seal_stores(stores: "VideoStores") -> "VideoStores":
     """Seal the active segment (no-op if every segment is already sealed).
     Sealing recomputes nothing — the segment's stats were accumulated by
-    addition as its batches arrived."""
+    addition as its batches arrived.
+
+    Sealing is **idempotent over empty tails**: a zero-row active segment
+    (opened by an empty append) is left unsealed and the store returned
+    unchanged — emitting a zero-row sealed segment would fragment the
+    segment table under seal-heavy ingest loops for no information.
+    """
     segments = _bootstrap_segments(stores)
     if not segments or segments[-1].sealed:
         if segments is not stores.segments:
             return dataclasses.replace(stores, segments=segments,
                                        store_version=stores.store_version + 1)
         return stores
-    sealed = segments[:-1] + (dataclasses.replace(segments[-1], sealed=True),)
+    active = segments[-1]
+    if active.ent_rows == 0 and active.rel_rows == 0:
+        return stores
+    sealed = segments[:-1] + (dataclasses.replace(active, sealed=True),)
     return dataclasses.replace(stores, segments=sealed,
                                store_version=stores.store_version + 1)
 
@@ -503,6 +563,173 @@ def entity_segment_bounds(stores: "VideoStores"
     starts = [s.ent_start for s in segs] + [cap]
     return tuple((a, b, seg.sid)
                  for a, b, seg in zip(starts, starts[1:], segs) if b > a)
+
+
+def entity_segment_tiers(stores: "VideoStores") -> Tuple[str, ...]:
+    """Per-range storage tiers, aligned 1:1 with
+    :func:`entity_search_bounds` (same range construction, same empty-range
+    drops — zipping the two outputs is safe). The single-range monolithic
+    case reports the lone segment's tier ("hot" when unsegmented)."""
+    segs = stores.segments
+    if len(segs) <= 1:
+        return (segs[0].tier if segs else "hot",)
+    cap = stores.entities.capacity
+    starts = [s.ent_start for s in segs] + [cap]
+    return tuple(seg.tier for a, b, seg in
+                 zip(starts, starts[1:], segs) if b > a)
+
+
+def demote_cold_segments(stores: "VideoStores", *, demote_after: int = 4
+                         ) -> "VideoStores":
+    """Demote sealed segments untouched for ``demote_after`` store versions
+    to the **cold tier** (packed int4 entity search, ~8× less HBM traffic,
+    still bitwise exact). Pure metadata: the int4 banks are global per-row
+    banks (built at ingest, or here for hand-built stores), so demotion
+    moves no rows and recomputes nothing. No-op (same object) when nothing
+    qualifies; otherwise bumps ``store_version``."""
+    segments = _bootstrap_segments(stores)
+    out, changed = [], False
+    for seg in segments:
+        if (seg.sealed and seg.tier == "hot"
+                and stores.store_version - seg.sealed_at >= demote_after):
+            seg = dataclasses.replace(seg, tier="cold")
+            changed = True
+        out.append(seg)
+    if not changed and segments is stores.segments:
+        return stores
+    entities = ensure_int4_banks(stores.entities) if changed \
+        else stores.entities
+    return dataclasses.replace(stores, entities=entities,
+                               segments=tuple(out),
+                               store_version=stores.store_version + 1)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical zone maps
+# ---------------------------------------------------------------------------
+ZONE_FANOUT = 8     # children per zone-map tree node
+
+
+@dataclass(frozen=True)
+class ZoneMapNode:
+    """One node of the zone-map tree over segment-table positions
+    ``[lo, hi)``. ``stats`` is the exact :class:`SegmentStats` sum of the
+    subtree (histograms add, ranges min/max); the remaining fields are
+    the subtree aggregates the pruning pass needs to resolve a whole
+    subtree without visiting its leaves:
+
+      * ``min_fid_span``/``max_fid_span`` — leaf fid-span extremes (the
+        chain-span rule resolves wholesale when the max is below the
+        needed span, and can only be *passed* wholesale when the min
+        clears it).
+      * ``min_pred_rows[p]`` — minimum leaf histogram count for predicate
+        ``p``: a nonzero entry proves **every** leaf holds rows for ``p``.
+      * ``any_rel_empty`` / ``all_exclusive`` / ``none_exclusive`` —
+        uniformity flags for the empty rule and the exclusive-vid-
+        ownership precondition.
+    """
+
+    lo: int
+    hi: int
+    stats: SegmentStats
+    min_fid_span: int
+    max_fid_span: int
+    min_pred_rows: Tuple[int, ...]
+    any_rel_empty: bool
+    all_exclusive: bool
+    none_exclusive: bool
+    children: Tuple["ZoneMapNode", ...] = ()
+
+
+def _exclusive_vid_ownership(segs: Tuple[StoreSegment, ...]
+                             ) -> Tuple[bool, ...]:
+    """Per-position exclusive-vid-ownership verdicts, identical to the
+    pairwise overlap sweep but O(n log n): sort the rel-nonempty segments
+    by ``vid_lo``; a segment overlaps some other iff the prefix max of
+    earlier ``vid_hi`` reaches its ``vid_lo`` (the earlier side) or the
+    next sorted ``vid_lo`` is within its ``vid_hi`` (the later side).
+    Rel-empty positions report ``True`` vacuously (the rule never reads
+    them)."""
+    out = [True] * len(segs)
+    idx = [i for i, s in enumerate(segs) if s.stats.rel_rows > 0]
+    if len(idx) <= 1:
+        return tuple(out)
+    order = sorted(idx, key=lambda i: (segs[i].stats.vid_lo,
+                                       segs[i].stats.vid_hi))
+    los = [segs[i].stats.vid_lo for i in order]
+    his = [segs[i].stats.vid_hi for i in order]
+    prefix_hi = his[:]
+    for r in range(1, len(order)):
+        prefix_hi[r] = max(prefix_hi[r - 1], his[r])
+    last = len(order) - 1
+    for r, i in enumerate(order):
+        overlap = ((r > 0 and prefix_hi[r - 1] >= los[r])
+                   or (r < last and los[r + 1] <= his[r]))
+        out[i] = not overlap
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class ZoneMaps:
+    """Hierarchical zone maps over a segment table: per-segment vid/fid
+    min-max ranges and predicate histograms (the leaves — each segment's
+    own :class:`SegmentStats`), aggregated up a ``ZONE_FANOUT``-ary tree
+    whose nodes carry exact stat sums plus the uniformity flags of
+    :class:`ZoneMapNode`. Built once per ``store_version`` (O(n log n),
+    cached on the engine's ``StoreStats`` snapshot); the pruning pass then
+    resolves uniform subtrees at their root instead of sweeping every
+    segment, and answers the exclusive-ownership question in O(1) from the
+    precomputed sweep — replacing the O(n²) pairwise overlap loop with
+    identical verdicts."""
+
+    segments: Tuple[StoreSegment, ...]
+    exclusive: Tuple[bool, ...]         # per-position ownership verdicts
+    root: Optional[ZoneMapNode]
+
+    @classmethod
+    def build(cls, segments) -> "ZoneMaps":
+        segs = tuple(segments)
+        exclusive = _exclusive_vid_ownership(segs)
+        if not segs:
+            return cls(segs, exclusive, None)
+        nodes: List[ZoneMapNode] = []
+        for i, seg in enumerate(segs):
+            st = seg.stats
+            empty = st.rel_rows == 0
+            nodes.append(ZoneMapNode(
+                i, i + 1, st, st.fid_span, st.fid_span, st.pred_rows,
+                any_rel_empty=empty,
+                all_exclusive=empty or exclusive[i],
+                none_exclusive=empty or not exclusive[i]))
+        while len(nodes) > 1:
+            nxt: List[ZoneMapNode] = []
+            for j in range(0, len(nodes), ZONE_FANOUT):
+                group = nodes[j:j + ZONE_FANOUT]
+                if len(group) == 1:
+                    nxt.append(group[0])
+                    continue
+                stats = group[0].stats
+                for g in group[1:]:
+                    stats = stats + g.stats
+                width = len(stats.pred_rows)
+
+                def _pad(t: Tuple[int, ...]) -> Tuple[int, ...]:
+                    return t + (0,) * (width - len(t))
+
+                min_pred = tuple(
+                    min(_pad(g.min_pred_rows)[p] for g in group)
+                    for p in range(width))
+                nxt.append(ZoneMapNode(
+                    group[0].lo, group[-1].hi, stats,
+                    min(g.min_fid_span for g in group),
+                    max(g.max_fid_span for g in group),
+                    min_pred,
+                    any_rel_empty=any(g.any_rel_empty for g in group),
+                    all_exclusive=all(g.all_exclusive for g in group),
+                    none_exclusive=all(g.none_exclusive for g in group),
+                    children=tuple(group)))
+            nodes = nxt
+        return cls(segs, exclusive, nodes[0])
 
 
 def append_relationships(store: RelationshipStore, rows: np.ndarray

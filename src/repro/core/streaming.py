@@ -161,6 +161,34 @@ def _merge_topk(old: _Bank, s_new: np.ndarray, i_new: np.ndarray,
                  np.take_along_axis(i, order, axis=1))
 
 
+def _remap_pruned_ranges(pruned: Dict[int, List[Tuple[int, int]]],
+                         segs) -> Dict[int, List[Tuple[int, int]]]:
+    """Re-key skipped row ranges to the current segment table.
+
+    The ranges themselves are **global** relationship-row coordinates and
+    stay valid forever (compaction never moves a bank row), but the sid
+    keys go stale when compaction renumbers the table — each range is
+    re-attached to the segment now covering it (the merged segment is a
+    superset of the old one, so containment always resolves on
+    append/compaction lineages). A pruned merged segment keeps the range
+    skipped soundly: its verdict proves reach-emptiness for every vid it
+    owns, which includes the constituent's rows. Unchanged tables re-key
+    to identical sids, so the remap is a no-op outside compaction."""
+    out: Dict[int, List[Tuple[int, int]]] = {}
+    for rs in pruned.values():
+        for lo, hi in rs:
+            owner = next((seg for seg in segs
+                          if seg.rel_start <= lo and hi <= seg.rel_stop),
+                         None)
+            if owner is None:
+                # defensive: a range no segment covers (foreign store
+                # swap) attaches to the closest segment so it is never
+                # silently dropped — the flip-to-scan path still sees it
+                owner = min(segs, key=lambda s: abs(s.rel_start - lo))
+            out.setdefault(owner.sid, []).append((lo, hi))
+    return out
+
+
 class Subscription:
     """A standing query, incrementally re-evaluated on store appends.
 
@@ -291,8 +319,7 @@ class Subscription:
             refine_candidates = st_prev.refine_candidates
             refine_passed = st_prev.refine_passed
             seen_keys = st_prev.seen_keys
-            pruned_ranges = {sid: list(rs)
-                            for sid, rs in st_prev.pruned_ranges.items()}
+            pruned_ranges = _remap_pruned_ranges(st_prev.pruned_ranges, segs)
 
         # candidate arrays for the fused delta selection, rows in
         # declaration order padded to the plan's static bucket; the host

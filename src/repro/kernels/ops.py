@@ -17,6 +17,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import topk_similarity as _topk
+from repro.kernels import topk_similarity_i4 as _topk_i4
 from repro.kernels import topk_similarity_i8 as _topk_i8
 
 
@@ -71,6 +72,21 @@ def topk_similarity_i8(queries, db_i8, db, db_valid, k: int):
         return _ref.naive_topk(queries, db, db_valid, k)
     return _topk_i8.topk_similarity_i8(
         queries, db_i8, db, db_valid, k, interpret=_interpret(),
+        use_kernel_phase1=not _force_ref())
+
+
+def topk_similarity_i4(queries, db_i4, db, db_valid, k: int):
+    """Exact two-phase int4 cold-tier top-k (``topk_similarity_i4.py``).
+
+    Same dispatch contract as the int8 entry: under ``REPRO_FORCE_REF``
+    phase 1 runs as plain jnp, and the result stays exact either way —
+    the margin certificate (or fp32 fallback) covers the candidate set
+    however it was produced.
+    """
+    if k > _topk.K_PAD:
+        return _ref.naive_topk(queries, db, db_valid, k)
+    return _topk_i4.topk_similarity_i4(
+        queries, db_i4, db, db_valid, k, interpret=_interpret(),
         use_kernel_phase1=not _force_ref())
 
 

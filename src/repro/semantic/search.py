@@ -26,7 +26,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
-SEARCH_MODES = ("fp32", "int8")
+# "int4" is the cold-tier scan: engines select it *per segment* (via the
+# ``modes`` arguments below) when the tiered-storage layer has demoted a
+# segment, never as a whole-engine mode — hot segments keep the engine's
+# configured mode.
+SEARCH_MODES = ("fp32", "int8", "int4")
 
 
 def topk_similarity_ref(queries: jax.Array, db: jax.Array, db_valid: jax.Array,
@@ -42,9 +46,9 @@ def topk_similarity_ref(queries: jax.Array, db: jax.Array, db_valid: jax.Array,
 
 
 def topk_similarity(queries, db, db_valid, k: int, *, use_kernels: bool = False,
-                    mode: str = "fp32", i8=None):
-    """Mode/kernel dispatch for one device. ``i8`` is the store's
-    ``Int8Rows`` bank backing ``db`` (required for ``mode="int8"``)."""
+                    mode: str = "fp32", i8=None, i4=None):
+    """Mode/kernel dispatch for one device. ``i8``/``i4`` are the store's
+    quantized banks backing ``db`` (required for the matching mode)."""
     if mode not in SEARCH_MODES:
         raise ValueError(f"unknown search mode {mode!r}; one of {SEARCH_MODES}")
     if mode == "int8":
@@ -53,46 +57,68 @@ def topk_similarity(queries, db, db_valid, k: int, *, use_kernels: bool = False,
                              "(build_entity_store creates it)")
         from repro.kernels import ops as kops
         return kops.topk_similarity_i8(queries, i8, db, db_valid, k)
+    if mode == "int4":
+        if i4 is None:
+            raise ValueError("mode='int4' needs the store's Int4Rows bank "
+                             "(ensure_int4_banks builds it on demotion)")
+        from repro.kernels import ops as kops
+        return kops.topk_similarity_i4(queries, i4, db, db_valid, k)
     if use_kernels:
         from repro.kernels import ops as kops
         return kops.topk_similarity(queries, db, db_valid, k)
     return topk_similarity_ref(queries, db, db_valid, k)
 
 
+def _slice_rows(bank, start, stop):
+    """Row-slice a quantized bank pytree (Int8Rows/Int4Rows) — per-row
+    quantization makes the slice *be* the range's own bank."""
+    if bank is None:
+        return None
+    return type(bank)(*(jax.lax.slice_in_dim(f, start, stop) for f in bank))
+
+
 def topk_similarity_segmented(queries, db, db_valid, k: int, bounds,
                               *, use_kernels: bool = False,
-                              mode: str = "fp32", i8=None):
+                              mode: str = "fp32", i8=None, i4=None,
+                              modes=None):
     """Per-segment top-k with a fused cross-segment merge — bit-identical
     to one monolithic ``topk_similarity`` sweep.
 
     ``bounds`` is the store's ``entity_search_bounds``: contiguous
     ``(start, stop)`` row ranges covering the whole bank. Each range runs
-    its own top-``min(k, size)`` (either mode; the int8 banks slice
+    its own top-``min(k, size)`` (any mode; the quantized banks slice
     row-wise, exactly like the fp32 rows — per-row quantization makes the
     slice *be* the segment's bank), local indices are remapped to global
     rows by adding the range start, and one final ``lax.top_k`` merges the
-    partials. Exactness: any global top-k row is inside its own segment's
+    partials. ``modes`` optionally overrides the scan mode per range
+    (``modes[j]`` for ``bounds[j]`` — the tiered store passes ``"int4"``
+    for cold segments); ranges without an override use ``mode``.
+    Exactness: any global top-k row is inside its own segment's
     top-k; partials concatenate in ascending-global-index order and
     ``lax.top_k`` breaks ties by position, so the merged (scores, idx)
-    reproduce the monolithic scan's lowest-index-first tie order bitwise.
-    Intended to be called under jit with static ``bounds`` (see
+    reproduce the monolithic scan's lowest-index-first tie order bitwise —
+    every mode's per-range result is itself bitwise equal to the fp32
+    scan of that range (two-phase certificate/fallback), so mixing modes
+    across ranges cannot change a single merged bit.
+    Intended to be called under jit with static ``bounds``/``modes`` (see
     ``repro.core.physical.stages._entity_match_segmented``).
     """
     if len(bounds) <= 1:
+        only = modes[0] if modes else mode
         return topk_similarity(queries, db, db_valid, k,
-                               use_kernels=use_kernels, mode=mode, i8=i8)
+                               use_kernels=use_kernels, mode=only,
+                               i8=i8, i4=i4)
     parts_s, parts_i = [], []
-    for start, stop in bounds:
+    for j, (start, stop) in enumerate(bounds):
         size = stop - start
+        m = modes[j] if modes else mode
         dbs = jax.lax.slice_in_dim(db, start, stop)
         dvs = jax.lax.slice_in_dim(db_valid, start, stop)
-        i8s = None
-        if i8 is not None:
-            i8s = type(i8)(jax.lax.slice_in_dim(i8.codes, start, stop),
-                           jax.lax.slice_in_dim(i8.scale, start, stop),
-                           jax.lax.slice_in_dim(i8.err, start, stop))
+        i8s = _slice_rows(i8, start, stop) if m == "int8" else None
+        i4s = _slice_rows(i4, start, stop) if m == "int4" else None
         s, i = topk_similarity(queries, dbs, dvs, min(k, size),
-                               use_kernels=use_kernels, mode=mode, i8=i8s)
+                               use_kernels=use_kernels, mode=m,
+                               i8=i8s, i4=i4s)
         parts_s.append(s)
         parts_i.append(i + start)
     cat_s = jnp.concatenate(parts_s, axis=1)
@@ -103,7 +129,7 @@ def topk_similarity_segmented(queries, db, db_valid, k: int, bounds,
 
 def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
                             shard_axes=("data",), *, use_kernels: bool = False,
-                            mode: str = "fp32", i8=None):
+                            mode: str = "fp32", i8=None, i4=None):
     """Distributed exact top-k. db rows sharded over ``shard_axes``.
 
     Returns (scores, global_idx): (Q, k) — indices are into the logical
@@ -129,12 +155,16 @@ def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
             i8 = type(i8)(jnp.pad(i8.codes, ((0, pad), (0, 0))),
                           jnp.pad(i8.scale, (0, pad)),
                           jnp.pad(i8.err, (0, pad)))
+        if i4 is not None:
+            i4 = type(i4)(jnp.pad(i4.packed, ((0, pad), (0, 0))),
+                          jnp.pad(i4.scale, (0, pad)),
+                          jnp.pad(i4.err, (0, pad)))
     n_local = (n + pad) // n_shards
     k_local = min(k, n_local)
 
-    def local(q, dbs, dvs, i8s):
+    def local(q, dbs, dvs, i8s, i4s):
         s, i = topk_similarity(q, dbs, dvs, k_local, use_kernels=use_kernels,
-                               mode=mode, i8=i8s)
+                               mode=mode, i8=i8s, i4=i4s)
         # global index = shard offset + local index
         ax_index = jax.lax.axis_index(shard_axes)
         offset = ax_index * n_local
@@ -147,30 +177,31 @@ def sharded_topk_similarity(queries, db, db_valid, k: int, mesh,
         return sm, final_i
 
     spec_db = P(shard_axes)
-    # the int8 bank shards row-wise alongside the fp32 rows; None (fp32
-    # mode) is an empty pytree and needs no spec entries
+    # the quantized banks shard row-wise alongside the fp32 rows; None
+    # (unused mode) is an empty pytree and needs no spec entries
     i8_spec = jax.tree_util.tree_map(lambda _: spec_db, i8)
+    i4_spec = jax.tree_util.tree_map(lambda _: spec_db, i4)
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(), spec_db, spec_db, i8_spec),
+                   in_specs=(P(), spec_db, spec_db, i8_spec, i4_spec),
                    out_specs=(P(), P()),
                    check_replication=False)  # holds post all-gather+merge
-    return fn(queries, db, db_valid, i8)
+    return fn(queries, db, db_valid, i8, i4)
 
 
 # ---------------------------------------------------------------------------
 # placed segment execution: per-device segment-local top-k + fused merge
 # ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("k", "mode", "use_kernels"))
-def _segment_local_topk(queries, db, db_valid, i8, k: int, mode: str,
+def _segment_local_topk(queries, db, db_valid, i8, i4, k: int, mode: str,
                         use_kernels: bool):
     """One segment's local top-k, jitted per (shape, k, mode) — runs on
     whichever device its inputs are committed to."""
     return topk_similarity(queries, db, db_valid, k,
-                           use_kernels=use_kernels, mode=mode, i8=i8)
+                           use_kernels=use_kernels, mode=mode, i8=i8, i4=i4)
 
 
-def place_segment_banks(db, db_valid, bounds, devices, *, i8=None,
-                        put=None, device_table=None):
+def place_segment_banks(db, db_valid, bounds, devices, *, i8=None, i4=None,
+                        modes=None, put=None, device_table=None):
     """Slice the global banks into per-segment row ranges and commit each
     slice to its assigned device.
 
@@ -178,31 +209,36 @@ def place_segment_banks(db, db_valid, bounds, devices, *, i8=None,
     ``(start, stop)`` entity-row range (``entity_search_bounds`` order —
     ascending, the last range extended to capacity) and ``devices[j]`` the
     owning device ordinal from the placement pass. Sealed rows are
-    append-only and per-row quantization makes an int8 row slice *be* the
-    segment's own bank, so a placed slice stays valid for the segment's
-    lifetime. Returns per-segment tuples
-    ``(start, size, device, db_seg, valid_seg, i8_seg)``.
+    append-only and per-row quantization makes a quantized row slice *be*
+    the segment's own bank, so a placed slice stays valid for the
+    segment's lifetime. ``modes[j]`` (when given) names the scan mode the
+    segment will run, so only the bank that mode reads is staged — a cold
+    segment ships its packed int4 rows, never an unused int8 copy.
+    Returns per-segment tuples
+    ``(start, size, device, db_seg, valid_seg, i8_seg, i4_seg)``.
     """
     put = put or jax.device_put
     devs = device_table if device_table is not None else jax.devices()
     banks = []
-    for (start, stop), d in zip(bounds, devices):
+    for j, ((start, stop), d) in enumerate(zip(bounds, devices)):
         dev = devs[d % len(devs)]
+        m = modes[j] if modes else None
         dbs = put(jax.lax.slice_in_dim(db, start, stop), dev)
         dvs = put(jax.lax.slice_in_dim(db_valid, start, stop), dev)
-        i8s = None
-        if i8 is not None:
+        i8s = i4s = None
+        if i8 is not None and (m is None or m == "int8"):
             i8s = type(i8)(
-                put(jax.lax.slice_in_dim(i8.codes, start, stop), dev),
-                put(jax.lax.slice_in_dim(i8.scale, start, stop), dev),
-                put(jax.lax.slice_in_dim(i8.err, start, stop), dev))
-        banks.append((start, stop - start, dev, dbs, dvs, i8s))
+                *(put(jax.lax.slice_in_dim(f, start, stop), dev) for f in i8))
+        if i4 is not None and (m is None or m == "int4"):
+            i4s = type(i4)(
+                *(put(jax.lax.slice_in_dim(f, start, stop), dev) for f in i4))
+        banks.append((start, stop - start, dev, dbs, dvs, i8s, i4s))
     return tuple(banks)
 
 
 def placed_topk_similarity(queries, banks, k: int, *,
                            use_kernels: bool = False, mode: str = "fp32",
-                           merge_device=None, to_device=None):
+                           modes=None, merge_device=None, to_device=None):
     """Sharded segment execution: per-device segment-local top-k + ONE
     fused cross-device merge — bitwise equal to the monolithic sweep.
 
@@ -216,15 +252,19 @@ def placed_topk_similarity(queries, banks, k: int, *,
     final ``lax.top_k`` reproduces the monolithic scan's lowest-index-first
     tie order; per-segment dots hit the same kernels on identical slices as
     the segmented single-device path, so scores are bitwise identical too.
+    ``modes[j]`` (when given) overrides the scan mode per bank — the
+    tiered store runs cold segments in ``"int4"`` — without changing a bit
+    of the merged result (every mode is exact per range).
     """
     to_device = to_device or jax.device_put
     merge_device = merge_device or jax.devices()[0]
     parts_s, parts_i = [], []
-    for start, size, dev, dbs, dvs, i8s in banks:
+    for j, (start, size, dev, dbs, dvs, i8s, i4s) in enumerate(banks):
+        m = modes[j] if modes else mode
         # broadcast the (small) query block to the segment's device
         q_local = jax.device_put(queries, dev)
-        s, i = _segment_local_topk(q_local, dbs, dvs, i8s, min(k, size),
-                                   mode, use_kernels)
+        s, i = _segment_local_topk(q_local, dbs, dvs, i8s, i4s, min(k, size),
+                                   m, use_kernels)
         parts_s.append(to_device(s, merge_device))
         parts_i.append(to_device(i + start, merge_device))
     cat_s = jnp.concatenate(parts_s, axis=1)

@@ -146,6 +146,11 @@ class RuntimeMetrics:
     retry_exhausted: int = 0         # tickets that outlived their retry budget
     quarantined: int = 0             # subscriptions quarantined as poisoned
     device_losses: int = 0           # DeviceLossError batches observed
+    # -- tiered-storage maintenance (idle-tick background work) ------------
+    compactions: int = 0             # background compaction passes applied
+    compacted_segments: int = 0      # segments merged away by those passes
+    compaction_bytes: int = 0        # modeled bytes the passes were priced at
+    demotions: int = 0               # segments demoted to the cold tier
 
 
 @dataclass
@@ -236,7 +241,9 @@ class ServingRuntime:
                  max_ticket_retries: int = 3,
                  retry_backoff_s: float = 0.05,
                  retry_jitter: Optional[Callable[[int], float]] = None,
-                 max_refresh_failures: int = 3):
+                 max_refresh_failures: int = 3,
+                 compaction: Optional["CompactionPolicy"] = None,
+                 demote_after: Optional[int] = None):
         if isinstance(sessions, SessionRegistry):
             self.registry = sessions
         elif isinstance(sessions, Session):
@@ -266,6 +273,14 @@ class ServingRuntime:
         # attempt -> fraction in [0, 1) (fault.seeded_jitter for tests)
         self.retry_jitter = retry_jitter
         self.max_refresh_failures = max_refresh_failures
+        # -- tiered-storage maintenance knobs --------------------------------
+        # compaction: merge adjacent sealed segments on idle ticks, priced
+        # in the admission budget's device-bytes currency so maintenance
+        # never preempts interactive work. demote_after: sealed segments
+        # untouched this many store versions drop to the int4 cold tier.
+        # Both default off — existing runtimes behave exactly as before.
+        self.compaction = compaction
+        self.demote_after = demote_after
         self.metrics = RuntimeMetrics()
         self.last_refresh_error: Optional[Exception] = None
         self._queue: List[_Entry] = []
@@ -405,6 +420,62 @@ class ServingRuntime:
                 queued += 1
         return queued
 
+    # -- background storage maintenance ------------------------------------
+    def run_maintenance(self, now: Optional[float] = None) -> int:
+        """One budgeted tiered-storage maintenance pass — idle ticks only
+        (``tick`` calls this when the queue is empty, so interactive work
+        always wins the round).
+
+        Demotion (``demote_after``) drops long-untouched sealed segments
+        to the int4 cold tier; compaction (``compaction``, a
+        :class:`~repro.core.compact.CompactionPolicy`) merges adjacent
+        sealed segments, admitting runs under the admission budget's
+        ``max_device_bytes`` in the same currency queries are priced in
+        (:func:`~repro.core.compact.compaction_cost_bytes`; the head run
+        is always admitted, so a large backlog still drains one run per
+        idle tick). Either action re-points every session through
+        :meth:`update_stores`, queueing refreshes for stale
+        subscriptions — which stay bit-identical: both passes are
+        metadata-only and every scan mode is exact. Returns the number of
+        maintenance actions applied (0 = idle and nothing to do)."""
+        if self.compaction is None and self.demote_after is None:
+            return 0
+        from repro.core.compact import (compact_stores,
+                                        compaction_cost_bytes,
+                                        plan_compaction)
+        from repro.core.stores import demote_cold_segments
+        stores = self.engine.stores
+        actions = 0
+        if self.demote_after is not None:
+            demoted = demote_cold_segments(stores,
+                                           demote_after=self.demote_after)
+            if demoted is not stores:
+                self.metrics.demotions += sum(
+                    1 for a, b in zip(stores.segments, demoted.segments)
+                    if a.tier != b.tier)
+                stores = demoted
+                actions += 1
+        if self.compaction is not None:
+            runs = plan_compaction(stores, self.compaction)
+            if runs:
+                cap = self.admission.budget.max_device_bytes
+                picked, total = [], 0
+                for run in runs:
+                    cost = compaction_cost_bytes(stores, (run,))
+                    if picked and cap is not None and total + cost > cap:
+                        break
+                    picked.append(run)
+                    total += cost
+                merged_away = sum(hi - lo - 1 for lo, hi in picked)
+                stores = compact_stores(stores, plan=tuple(picked))
+                self.metrics.compactions += 1
+                self.metrics.compacted_segments += merged_away
+                self.metrics.compaction_bytes += total
+                actions += 1
+        if actions:
+            self.update_stores(stores)
+        return actions
+
     def release_quarantine(self, sub: Optional[Subscription] = None) -> int:
         """Lift the quarantine (one subscription, or all of them) and
         re-derive staleness through :meth:`notify_ingest` — a released
@@ -489,9 +560,15 @@ class ServingRuntime:
         with the raw error attached. A refresh that keeps failing is
         retried with the same backoff and **quarantined** after
         ``max_refresh_failures`` consecutive failures instead of wedging
-        the drain (see :meth:`release_quarantine`)."""
+        the drain (see :meth:`release_quarantine`).
+
+        **Idle ticks do storage maintenance**: with a
+        :class:`~repro.core.compact.CompactionPolicy` configured, an empty
+        queue runs one budgeted compaction/demotion pass instead of
+        returning immediately (see :meth:`run_maintenance`) — interactive
+        work always wins the tick."""
         if not self._queue:
-            return 0
+            return self.run_maintenance(now)
         if now is None:
             now = self.clock()
         self._expire_deadlines(now)

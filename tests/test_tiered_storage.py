@@ -1,0 +1,600 @@
+"""Tiered storage (compaction + zone maps + int4 cold tier), pinned.
+
+The load-bearing invariants of the tiered-storage layer:
+
+  * **compaction is metadata-only and exact** — merged segment tables
+    keep the same global rows, stats combine by addition into the
+    monolithic totals, and query results stay bitwise identical across
+    compacted/uncompacted stores, fp32+int8 modes, cold/batched queries,
+    incremental subscription refreshes, and the engine's stores setter;
+  * **`SegmentStats.__add__` is the algebra compaction relies on** —
+    associative, commutative, and equal to ``of_batch`` on the
+    concatenated batch (hypothesis property);
+  * **zone-map prune verdicts are pinned to the linear reference** across
+    randomized append/seal/compact schedules, and the compacted scanned
+    row set is a sound superset of the uncompacted one;
+  * **the int4 cold tier is bitwise fp32-exact** — kernel phase-1 parity,
+    certificate-or-fallback exactness vs the naive oracle, and
+    engine-level hot/cold tier mixes;
+  * **the serving runtime's idle-tick maintenance** demotes/compacts to a
+    fixpoint under the admission budget without changing any result.
+
+Plus the satellite regressions: ``seal_stores`` idempotence over empty
+active segments, ``_is_compaction_descendant`` lineage detection, and
+``_remap_pruned_ranges`` re-keying pruned global row ranges by
+containment after sids are renumbered.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.compat import make_mesh
+from repro.core import LazyVLMEngine
+from repro.core.compact import (CompactionPolicy, compact_stores,
+                                compaction_cost_bytes, merge_segments,
+                                plan_compaction)
+from repro.core.executor import _is_compaction_descendant
+from repro.core.physical import StoreStats, prune_segments
+from repro.core.physical.prune import _prune_segments_reference
+from repro.core.query import Entity, FrameSpec, Relationship, Triple, VMRQuery
+from repro.core.stores import (SegmentStats, StoreSegment, append_stores,
+                               demote_cold_segments, entity_segment_tiers,
+                               seal_stores)
+from repro.core.streaming import _remap_pruned_ranges
+from repro.kernels.ref import naive_topk
+from repro.kernels.topk_similarity_i4 import (dequantize_rows_i4,
+                                              pack_nibbles, quantize_rows_i4,
+                                              topk_i4_phase1,
+                                              topk_i4_phase1_ref,
+                                              topk_similarity_i4,
+                                              unpack_nibbles)
+from repro.semantic import OracleEmbedder
+from repro.session import open_video_store
+from repro.video import SyntheticWorld, WorldConfig, ingest, ingest_incremental
+
+SEGMENTS = 8
+
+
+# ---------------------------------------------------------------------------
+# fixtures + helpers
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def world():
+    # spurious_prob=0 keeps rows independent of the ingest schedule (the
+    # noise rng is threaded differently through monolithic vs incremental
+    # ingest), so the monolithic twin is a bitwise reference
+    w = SyntheticWorld(WorldConfig(num_segments=SEGMENTS,
+                                   frames_per_segment=32,
+                                   objects_per_segment=6, seed=11))
+    w.stage_event_2_1(vid=5)
+    return w
+
+
+def _emb():
+    return OracleEmbedder(dim=64)
+
+
+@pytest.fixture(scope="module")
+def frag(world):
+    """(monolithic, fragmented) twin stores: same rows, the fragmented one
+    sealed one segment per appended video segment — compaction's input."""
+    mono = ingest(world, _emb())
+    caps = dict(entity_capacity=mono.entities.capacity,
+                rel_capacity=mono.relationships.capacity)
+    seg = ingest(world, _emb(), segment_range=(0, 2), **caps)
+    for s in range(2, SEGMENTS):
+        seg = ingest_incremental(seg, world, _emb(), (s, s + 1))
+    return mono, seg
+
+
+def _query(world):
+    descs = sorted({o.description for seg in world.segments for o in seg})
+    return VMRQuery(entities=(Entity("a", descs[0]), Entity("b", descs[1])),
+                    relationships=(Relationship("r", "near"),),
+                    frames=(FrameSpec((Triple("a", "r", "b"),)),),
+                    top_k=16, text_threshold=0.9)
+
+
+def _assert_same(a, b):
+    assert a.segments == b.segments
+    assert a.scores == b.scores
+    assert (a.end_frames == b.end_frames).all()
+    assert a.sql == b.sql
+
+
+def _seg(sid, lo, hi, device=None, tier="hot", sealed_at=0):
+    n = hi - lo
+    return StoreSegment(sid, lo, hi, lo, hi, sealed=True,
+                        stats=SegmentStats(ent_rows=n, rel_rows=n,
+                                           pred_rows=(n,)),
+                        device=device, tier=tier, sealed_at=sealed_at)
+
+
+# ---------------------------------------------------------------------------
+# SegmentStats algebra (the fact metadata-only merging relies on)
+# ---------------------------------------------------------------------------
+N_PRED = 5
+_batch = st.tuples(
+    st.lists(st.integers(0, 7), min_size=0, max_size=6),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 31),
+                       st.integers(0, 3), st.integers(0, N_PRED - 1),
+                       st.integers(0, 9)),
+             min_size=0, max_size=8))
+
+
+def _stats(b):
+    vids, rels = b
+    rel = np.array(rels, np.int64).reshape(-1, 5)
+    return SegmentStats.of_batch(np.array(vids, np.int64), rel, N_PRED)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=_batch, b=_batch, c=_batch)
+def test_segment_stats_add_algebra(a, b, c):
+    sa, sb, sc = _stats(a), _stats(b), _stats(c)
+    assert sa + sb == sb + sa
+    assert (sa + sb) + sc == sa + (sb + sc)
+    # addition == one of_batch over the concatenated batch: counts,
+    # histograms and vid/fid ranges all agree with a from-scratch scan
+    assert sa + sb == _stats((a[0] + b[0], a[1] + b[1]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: seal_stores idempotence over empty active segments
+# ---------------------------------------------------------------------------
+def test_seal_all_sealed_is_identity(frag):
+    _, seg = frag
+    assert seal_stores(seg) is seg
+
+
+def test_seal_empty_active_segment_returns_same_lineage(frag):
+    _, seg = frag
+    dim = int(seg.entities.text_emb.shape[1])
+    none = np.zeros((0,), np.int32)
+    empty = np.zeros((0, dim), np.float32)
+    opened = append_stores(seg, none, none, empty, empty,
+                           np.zeros((0, 5), np.int32))
+    tail = opened.segments[-1]
+    assert not tail.sealed and tail.ent_rows == 0 and tail.rel_rows == 0
+    # sealing must not emit a zero-row sealed segment
+    assert seal_stores(opened) is opened
+    assert sum(s.sealed for s in opened.segments) == len(seg.segments)
+
+
+# ---------------------------------------------------------------------------
+# compaction: plan + merge are deterministic, metadata-only, exact
+# ---------------------------------------------------------------------------
+def test_compact_is_metadata_only_and_stats_exact(frag):
+    mono, seg = frag
+    post = compact_stores(seg, CompactionPolicy(min_merge=2, fanout=8))
+    assert len(post.segments) < len(seg.segments)
+    assert post.store_version == seg.store_version + 1
+    # rows never move: the banks are the very same objects
+    assert post.entities is seg.entities
+    assert post.relationships is seg.relationships
+    # merged table still covers the row space contiguously, in order,
+    # with contiguously renumbered sids
+    assert post.segments[0].ent_start == 0
+    for a, b in zip(post.segments, post.segments[1:]):
+        assert (a.ent_stop, a.rel_stop) == (b.ent_start, b.rel_start)
+    assert post.segments[-1].ent_stop == seg.segments[-1].ent_stop
+    assert [s.sid for s in post.segments] == list(range(len(post.segments)))
+    # totals equal the monolithic recompute exactly (integer accounting)
+    st_m, st_p = StoreStats.from_stores(mono), StoreStats.from_stores(post)
+    assert st_m.pred_rows == st_p.pred_rows
+    assert (st_m.rel_rows, st_m.entity_rows) == \
+        (st_p.rel_rows, st_p.entity_rows)
+
+
+def test_compact_nothing_to_merge_is_identity(frag):
+    _, seg = frag
+    post = compact_stores(seg, CompactionPolicy(min_merge=2))
+    assert compact_stores(post, CompactionPolicy(
+        min_merge=2, max_segment_rows=1)) is post
+
+
+def test_merge_segments_majority_device_tier_and_clock():
+    group = (_seg(0, 0, 5, device=1, sealed_at=3),
+             _seg(1, 5, 7, device=0, sealed_at=7),
+             _seg(2, 7, 9, device=0, sealed_at=5))
+    m = merge_segments(group, sid=0)
+    assert m.device == 1                       # 5 ent rows beats 2 + 2
+    assert m.tier == "hot"                     # any hot constituent -> hot
+    assert m.sealed_at == 7                    # demotion clock keeps max
+    assert m.stats.ent_rows == 9 and m.stats.pred_rows == (9,)
+    # device ties break to the lowest ordinal, deterministically
+    tie = merge_segments((_seg(0, 0, 2, device=3), _seg(1, 2, 4, device=1)),
+                         sid=0)
+    assert tie.device == 1
+    cold = merge_segments((_seg(0, 0, 2, tier="cold"),
+                           _seg(1, 2, 4, tier="cold")), sid=0)
+    assert cold.tier == "cold"
+
+
+def test_plan_compaction_never_mixes_storage_tiers(frag):
+    _, seg = frag
+    mixed = dataclasses.replace(
+        seg, segments=tuple(
+            dataclasses.replace(s, tier="cold" if i % 2 else "hot")
+            for i, s in enumerate(seg.segments)),
+        store_version=seg.store_version + 1)
+    runs = plan_compaction(mixed, CompactionPolicy(min_merge=2))
+    for lo, hi in runs:
+        tiers = {s.tier for s in mixed.segments[lo:hi]}
+        assert len(tiers) == 1, \
+            "a run spanning hot+cold would re-promote compressed rows"
+
+
+def test_compaction_cost_prices_merged_ranges(frag):
+    _, seg = frag
+    runs = plan_compaction(seg, CompactionPolicy(min_merge=2))
+    assert runs
+    total = compaction_cost_bytes(seg, runs)
+    assert total > 0
+    assert total == sum(compaction_cost_bytes(seg, (r,)) for r in runs)
+
+
+# ---------------------------------------------------------------------------
+# engine exactness across compaction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["fp32", "int8"])
+def test_query_bitwise_across_compaction(world, frag, mode):
+    mono, seg = frag
+    q = _query(world)
+    ref = LazyVLMEngine(mono, _emb(), search_mode=mode).query(q)
+    post = compact_stores(seg, CompactionPolicy(min_merge=2))
+    for stores in (seg, post):
+        e = LazyVLMEngine(stores, _emb(), search_mode=mode)
+        _assert_same(e.query(q), ref)
+        for r in e.query_batch([q, q]):
+            _assert_same(r, ref)
+
+
+def test_stores_setter_compaction_descendant_path(world, frag):
+    """Compaction pushed through the live engine's stores setter: bank
+    cache survives (keys are row ranges, not sids), the sid-keyed prior
+    placement map is dropped, results stay bitwise identical."""
+    _, seg = frag
+    q = _query(world)
+    engine = LazyVLMEngine(seg, _emb())
+    r_pre = engine.query(q)
+    engine.stores = compact_stores(seg, CompactionPolicy(min_merge=2))
+    assert engine._prior_assignment == {}
+    _assert_same(engine.query(q), r_pre)
+
+
+def test_is_compaction_descendant(frag):
+    _, seg = frag
+    post = compact_stores(seg, CompactionPolicy(min_merge=2))
+    assert _is_compaction_descendant(seg, post)
+    assert not _is_compaction_descendant(post, seg)     # version regressed
+    assert not _is_compaction_descendant(seg, seg)      # version must bump
+    # an ordinary append is NOT a compaction (boundaries are not coarsened
+    # from the same sealed row space)
+    shifted = dataclasses.replace(
+        post, segments=(dataclasses.replace(
+            post.segments[0], ent_start=1),) + post.segments[1:])
+    assert not _is_compaction_descendant(seg, shifted)
+
+
+# ---------------------------------------------------------------------------
+# zone-map prune verdicts: pinned across randomized schedules
+# ---------------------------------------------------------------------------
+def _scanned_rows(stores, decisions):
+    rows = set()
+    by_sid = {s.sid: s for s in stores.segments}
+    for d in decisions:
+        if d.scanned:
+            s = by_sid[d.sid]
+            rows.update(range(s.rel_start, s.rel_stop))
+    return rows
+
+
+def _check_schedule(world, seed):
+    """One randomized append/seal/compact schedule: zone-map verdicts equal
+    the linear reference at every step, and the compacted scanned row set
+    is a superset of the uncompacted one (merging only coarsens stats, so
+    pruning can only get more conservative — never unsound)."""
+    rng = np.random.default_rng(seed)
+    mono = ingest(world, _emb())
+    caps = dict(entity_capacity=mono.entities.capacity,
+                rel_capacity=mono.relationships.capacity)
+    engine = LazyVLMEngine(mono, _emb())
+    plan = engine.plan_for(_query(world))
+    cands = engine._pred_candidates(plan)
+
+    lo = int(rng.integers(1, 3))
+    stores = ingest(world, _emb(), segment_range=(0, lo), **caps)
+    while lo < SEGMENTS:
+        hi = int(min(SEGMENTS, lo + rng.integers(1, 3)))
+        stores = ingest_incremental(stores, world, _emb(), (lo, hi),
+                                    seal=bool(rng.integers(0, 2)))
+        lo = hi
+    stores = seal_stores(stores)
+    stats = StoreStats.from_stores(stores)
+    base = prune_segments(plan, stats, cands)
+    assert base == _prune_segments_reference(plan, stats, cands)
+    base_rows = _scanned_rows(stores, base)
+
+    for _ in range(int(rng.integers(1, 3))):
+        policy = CompactionPolicy(min_merge=2,
+                                  fanout=int(rng.integers(2, 6)))
+        stores = compact_stores(stores, policy)
+        stats = StoreStats.from_stores(stores)
+        got = prune_segments(plan, stats, cands)
+        assert got == _prune_segments_reference(plan, stats, cands)
+        assert _scanned_rows(stores, got) >= base_rows
+
+
+def test_prune_verdicts_stable_fixed_seeds(world):
+    # always-on deterministic slice of the property below
+    for seed in (0, 7, 2026):
+        _check_schedule(world, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_prune_verdicts_stable_across_schedules(world, seed):
+    _check_schedule(world, seed)
+
+
+def test_prune_verdicts_pinned_on_cold_stores(world, frag):
+    _, seg = frag
+    cold = demote_cold_segments(compact_stores(
+        seg, CompactionPolicy(min_merge=2)), demote_after=0)
+    engine = LazyVLMEngine(cold, _emb())
+    plan = engine.plan_for(_query(world))
+    stats = StoreStats.from_stores(cold)
+    cands = engine._pred_candidates(plan)
+    assert prune_segments(plan, stats, cands) == \
+        _prune_segments_reference(plan, stats, cands)
+
+
+# ---------------------------------------------------------------------------
+# subscriptions: refreshes stay bit-identical across compaction
+# ---------------------------------------------------------------------------
+def test_subscription_survives_compaction(world, frag):
+    mono, _ = frag
+    q = _query(world)
+    caps = dict(entity_capacity=mono.entities.capacity,
+                rel_capacity=mono.relationships.capacity)
+    stores = ingest(world, _emb(), segment_range=(0, 2), **caps)
+    session = open_video_store(stores, _emb())
+    sub = session.subscribe(q)
+    for s in range(2, SEGMENTS):
+        stores = ingest_incremental(stores, world, _emb(), (s, s + 1))
+        session.update_stores(stores)
+        cold = LazyVLMEngine(stores, _emb()).query(q)
+        _assert_same(sub.result, cold)
+        if s % 3 == 0:
+            compacted = compact_stores(stores, CompactionPolicy(min_merge=2))
+            if compacted is not stores:
+                stores = compacted
+                session.update_stores(stores)
+                _assert_same(sub.result,
+                             LazyVLMEngine(stores, _emb()).query(q))
+    stores = compact_stores(stores, CompactionPolicy(min_merge=2, fanout=8))
+    session.update_stores(stores)
+    _assert_same(sub.result, LazyVLMEngine(stores, _emb()).query(q))
+
+
+def test_remap_pruned_ranges_by_containment():
+    segs = (_seg(0, 0, 10), _seg(1, 10, 30), _seg(2, 30, 40))
+    # stale sids from a 5-segment pre-compaction table; ranges are global
+    # rel-row coordinates and therefore stable
+    pruned = {1: [(2, 8)], 3: [(12, 20), (25, 30)], 4: [(33, 40)]}
+    out = _remap_pruned_ranges(pruned, segs)
+    assert out == {0: [(2, 8)], 1: [(12, 20), (25, 30)], 2: [(33, 40)]}
+    assert _remap_pruned_ranges({}, segs) == {}
+    # identity when the table already owns the ranges
+    assert _remap_pruned_ranges(out, segs) == out
+
+
+# ---------------------------------------------------------------------------
+# int4 kernel: pack/quantize invariants + phase-1 parity + exactness
+# ---------------------------------------------------------------------------
+def _normal(key, shape):
+    x = jax.random.normal(key, shape)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+@pytest.mark.parametrize("d", [16, 17])
+def test_pack_unpack_roundtrip(d):
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(6, d)), jnp.int8)
+    packed = pack_nibbles(codes)
+    assert packed.shape == (6, (d + 1) // 2)
+    out = unpack_nibbles(packed)
+    np.testing.assert_array_equal(np.asarray(out)[:, :d], np.asarray(codes))
+    if d % 2:                                  # phantom high nibble is zero
+        assert (np.asarray(out)[:, d:] == 0).all()
+
+
+def test_quantize_rows_i4_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 24)) * 2.0
+    rows = quantize_rows_i4(x)
+    np.testing.assert_allclose(np.asarray(rows.scale),
+                               np.abs(np.asarray(x)).max(axis=1) / 7.0,
+                               rtol=1e-6)
+    codes = np.asarray(unpack_nibbles(rows.packed))
+    assert codes.min() >= -8 and codes.max() <= 7
+    err = np.abs(np.asarray(dequantize_rows_i4(rows, 24)) - np.asarray(x))
+    assert (err <= np.asarray(rows.err)[:, None] * (1 + 1e-6)).all()
+
+
+@pytest.mark.parametrize("d", [32, 33])
+def test_i4_phase1_kernel_matches_ref(d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    db = _normal(k1, (300, d))
+    q = _normal(k2, (9, d))
+    valid = jnp.arange(300) < 280
+    db_i4 = quantize_rows_i4(db)
+    from repro.kernels.topk_similarity_i8 import quantize_rows
+    q_rows = quantize_rows(q)
+    s_k, i_k = topk_i4_phase1(q_rows.codes, q_rows.scale, db_i4, valid, 64,
+                              interpret=True)
+    s_r, i_r = topk_i4_phase1_ref(q_rows.codes, q_rows.scale, db_i4, valid,
+                                  64)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+    # candidate sets agree where scores are distinct; compare as sets to
+    # stay robust to tie ordering between implementations
+    for a, b in zip(np.asarray(i_k), np.asarray(i_r)):
+        assert set(a.tolist()) == set(b.tolist())
+
+
+@pytest.mark.parametrize("d", [32, 33])
+@pytest.mark.parametrize("k", [1, 8, 16])
+def test_topk_i4_bitwise_equals_oracle(d, k):
+    key = jax.random.PRNGKey(3)
+    for seed in range(3):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, seed))
+        db = _normal(k1, (257, d))
+        q = _normal(k2, (5, d))
+        valid = jnp.arange(257) < 250
+        got = topk_similarity_i4(q, quantize_rows_i4(db), db, valid, k,
+                                 interpret=True)
+        want = naive_topk(q, db, valid, k)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1]))
+
+
+def test_topk_i4_k_beyond_pad_falls_back_exact():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    db = _normal(k1, (300, 16))
+    q = _normal(k2, (3, 16))
+    valid = jnp.ones((300,), bool)
+    got = topk_similarity_i4(q, quantize_rows_i4(db), db, valid, 200,
+                             interpret=True)
+    want = naive_topk(q, db, valid, 200)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+# ---------------------------------------------------------------------------
+# cold tier at the engine level
+# ---------------------------------------------------------------------------
+def test_engine_rejects_int4_search_mode(frag):
+    with pytest.raises(ValueError, match="cold-tier"):
+        LazyVLMEngine(frag[1], _emb(), search_mode="int4")
+
+
+@pytest.mark.parametrize("mode", ["fp32", "int8"])
+def test_cold_tier_bitwise_exact(world, frag, mode):
+    mono, seg = frag
+    q = _query(world)
+    ref = LazyVLMEngine(mono, _emb(), search_mode=mode).query(q)
+    cold = demote_cold_segments(
+        compact_stores(seg, CompactionPolicy(min_merge=2)), demote_after=0)
+    assert cold.entities.text_i4 is not None
+    assert set(entity_segment_tiers(cold)) == {"cold"}
+    e = LazyVLMEngine(cold, _emb(), search_mode=mode)
+    _assert_same(e.query(q), ref)
+    for r in e.query_batch([q, q]):
+        _assert_same(r, ref)
+
+
+def test_mixed_hot_cold_tiers_bitwise_exact(world, frag):
+    mono, seg = frag
+    q = _query(world)
+    # flip only some segments cold: both tiers present, one query
+    mixed = dataclasses.replace(
+        seg, segments=tuple(
+            dataclasses.replace(s, tier="cold" if i % 2 else "hot")
+            for i, s in enumerate(seg.segments)),
+        entities=demote_cold_segments(seg, demote_after=0).entities,
+        store_version=seg.store_version + 1)
+    tiers = set(entity_segment_tiers(mixed))
+    assert tiers == {"hot", "cold"}
+    ref = LazyVLMEngine(mono, _emb()).query(q)
+    _assert_same(LazyVLMEngine(mixed, _emb()).query(q), ref)
+
+
+def test_demotion_through_stores_setter(world, frag):
+    """Demotion (tier flips only) rides the append-descendant path: the
+    live engine accepts it and results stay bitwise identical."""
+    _, seg = frag
+    q = _query(world)
+    engine = LazyVLMEngine(seg, _emb())
+    r_hot = engine.query(q)
+    engine.stores = demote_cold_segments(seg, demote_after=0)
+    _assert_same(engine.query(q), r_hot)
+
+
+def test_placed_cold_tier_exact(world, frag, multi_device):
+    mono, seg = frag
+    q = _query(world)
+    ref = LazyVLMEngine(mono, _emb()).query(q)
+    cold = demote_cold_segments(
+        compact_stores(seg, CompactionPolicy(min_merge=2)), demote_after=0)
+    mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+    _assert_same(LazyVLMEngine(cold, _emb(), mesh=mesh).query(q), ref)
+
+
+def test_explain_renders_tiers(world, frag):
+    _, seg = frag
+    cold = demote_cold_segments(seg, demote_after=0)
+    engine = LazyVLMEngine(cold, _emb())
+    pipe = engine.physical_for(engine.plan_for(_query(world)))
+    text = pipe.render(segments=True)
+    assert "cold (int4)" in text and "tier=cold" in text
+
+
+# ---------------------------------------------------------------------------
+# serving runtime: idle-tick background maintenance
+# ---------------------------------------------------------------------------
+def test_runtime_idle_maintenance_to_fixpoint(world, frag):
+    from repro.serving.runtime import ServingRuntime
+    _, seg = frag
+    q = _query(world)
+    rt = ServingRuntime(LazyVLMEngine(seg, _emb()),
+                        compaction=CompactionPolicy(min_merge=2),
+                        demote_after=1)
+    t1 = rt.submit(q)
+    rt.run_until_idle()
+    assert t1.done and t1.error is None
+    assert rt.metrics.compactions >= 1
+    assert rt.metrics.demotions >= 1
+    assert rt.metrics.compaction_bytes > 0
+    assert len(rt.engine.stores.segments) < len(seg.segments)
+    # maintenance reached a fixpoint and changed nothing observable
+    assert rt.tick() == 0
+    t2 = rt.submit(q)
+    rt.run_until_idle()
+    _assert_same(t2.result, t1.result)
+
+
+def test_runtime_maintenance_defaults_off(frag):
+    from repro.serving.runtime import ServingRuntime
+    _, seg = frag
+    rt = ServingRuntime(LazyVLMEngine(seg, _emb()))
+    assert rt.tick() == 0
+    assert rt.engine.stores is seg
+    assert rt.metrics.compactions == rt.metrics.demotions == 0
+
+
+def test_runtime_maintenance_respects_byte_budget(frag):
+    """A tiny admission budget still drains the backlog — one run per
+    idle tick (the head run is always admitted, mirroring query
+    admission's no-livelock rule) — and terminates."""
+    from repro.serving import BatchBudget
+    from repro.serving.runtime import ServingRuntime
+    _, seg = frag
+    runs = plan_compaction(seg, CompactionPolicy(min_merge=2))
+    assert len(runs) >= 1
+    rt = ServingRuntime(LazyVLMEngine(seg, _emb()),
+                        budget=BatchBudget(max_device_bytes=1),
+                        compaction=CompactionPolicy(min_merge=2))
+    ticks = rt.run_until_idle()
+    assert ticks >= len(runs)        # budget admitted one run per pass
+    assert not plan_compaction(rt.engine.stores,
+                               CompactionPolicy(min_merge=2))
+    assert rt.metrics.compacted_segments == \
+        len(seg.segments) - len(rt.engine.stores.segments)
