@@ -88,6 +88,24 @@ def check(path: str, expect_modules=()) -> int:
         assert sub[0]["value"] < 0.75, \
             (f"zone-map verdict pass is no longer sub-linear vs the "
              f"reference sweep: {sub}")
+    adapted = [r for r in rows
+               if r["name"] == "adaptivity/adapted_vs_static_exact"]
+    if adapted:
+        assert adapted[0]["value"] == 1, \
+            ("adaptive (feedback re-optimized) execution diverged from the "
+             "static reference")
+    aerr = {r["name"]: r["value"] for r in rows
+            if r["name"].startswith("adaptivity/est_rows_abs_err")}
+    if aerr:
+        assert aerr["adaptivity/est_rows_abs_err_adapted"] \
+            <= aerr["adaptivity/est_rows_abs_err_static"], \
+            f"correction memo worsened cost-model accuracy: {aerr}"
+    launches = {r["name"]: r["value"] for r in rows
+                if r["name"].startswith("adaptivity/certificate_launches")}
+    if launches:
+        assert launches["adaptivity/certificate_launches_adapted"] \
+            <= launches["adaptivity/certificate_launches_warmup"], \
+            f"budget auto-tuning increased cascade launches: {launches}"
     segs = {r["name"]: r["value"] for r in rows
             if r["name"] in ("compaction/segment_count_pre",
                              "compaction/segment_count_post",

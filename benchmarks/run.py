@@ -22,6 +22,10 @@
   compaction   — tiered storage: zone-map pruning sub-linear in segment
                  count (64→4096), compaction's segment/launch drop, int4
                  cold-tier bytes ratio (exactness asserted)
+  adaptivity   — feedback-driven re-optimization: cost-model error drop,
+                 corrected filter ordering, cascade budget auto-tuning's
+                 launch collapse, poisoned-prior recovery (exactness
+                 asserted)
   roofline     — printed separately: python -m benchmarks.roofline
 
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
@@ -55,13 +59,13 @@ def main(argv=None) -> None:
                     help="comma-separated subset of benchmark modules")
     args = ap.parse_args(argv)
 
-    from benchmarks import (accuracy, cascade, compaction, kernels,
-                            multi_query, parallelism, pruning, robustness,
-                            scaling, serving, streaming, topk_search,
-                            updates)
+    from benchmarks import (accuracy, adaptivity, cascade, compaction,
+                            kernels, multi_query, parallelism, pruning,
+                            robustness, scaling, serving, streaming,
+                            topk_search, updates)
     modules = [pruning, scaling, updates, parallelism, multi_query, accuracy,
                kernels, topk_search, cascade, streaming, serving, robustness,
-               compaction]
+               compaction, adaptivity]
     if args.modules:
         want = {m.strip() for m in args.modules.split(",")}
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}

@@ -199,8 +199,20 @@ class LazyVLMEngine:
                  reorder_filters: bool = True,
                  embed_cache_entries: int = 4096,
                  plan_cache_entries: int = 256,
-                 fault_policy: Optional[FaultPolicy] = None):
+                 fault_policy: Optional[FaultPolicy] = None,
+                 adapt=None):
         self._stores = stores
+        # adaptive runtime re-optimization (physical/adapt.py): True or an
+        # AdaptPolicy enables the correction memo + budget tuner; default
+        # off keeps the engine purely statically costed
+        from repro.core.physical.adapt import AdaptPolicy, AdaptiveStats
+        if adapt is True:
+            adapt = AdaptiveStats()
+        elif isinstance(adapt, AdaptPolicy):
+            adapt = AdaptiveStats(adapt)
+        elif adapt is False:
+            adapt = None
+        self.adapt: Optional[AdaptiveStats] = adapt
         # retry/backoff/breaker envelope around the remote-shaped services
         # (verifier + embedder); guards are exposed for counter accounting
         self.fault_policy = fault_policy
@@ -255,6 +267,12 @@ class LazyVLMEngine:
         # (texts, m, threshold) -> runtime predicate candidate label ids
         # (store-independent: query text x the static vocab)
         self._pred_cand_cache: Dict[Tuple, Tuple] = {}
+        # (Plan, store_version, adapt_epoch) -> total CostEstimate, with
+        # hit/miss counters — serving submits price plans far more often
+        # than they compile them
+        self._cost_cache: Dict[Tuple, object] = {}
+        self.cost_cache_hits = 0
+        self.cost_cache_misses = 0
         # -- placed segment execution state (mesh engines) -------------------
         # sids a subscription's chain frontier touches; the placement pass
         # co-locates them (Subscription.refresh keeps this current)
@@ -353,6 +371,7 @@ class LazyVLMEngine:
         self._store_stats = None
         self._store_stats_version = None
         self._physical_cache.clear()
+        self._cost_cache.clear()
 
     def _pred_candidates(self, plan: Plan) -> Tuple[Tuple[int, ...], ...]:
         """Runtime predicate candidate label ids per predicate-text row —
@@ -377,9 +396,13 @@ class LazyVLMEngine:
 
     def physical_for(self, plan: Plan):
         """Lower ``plan`` to a :class:`PhysicalPipeline` (cached per
-        ``(plan, store_version)`` — see the cache comment above)."""
+        ``(plan, store_version, adapt_epoch)`` — see the cache comment
+        above; the epoch key means new runtime observations recompile
+        against the corrected estimates instead of mutating a cached
+        pipeline)."""
         version = self.store_version
-        key = (plan, version)
+        epoch = self.adapt.epoch if self.adapt is not None else 0
+        key = (plan, version, epoch)
         pipe = self._physical_cache.get(key)
         if pipe is None:
             # predicate candidates sharpen the segment-pruning pass; on a
@@ -391,7 +414,8 @@ class LazyVLMEngine:
                                     reorder=self.reorder_filters,
                                     pred_candidates=cands,
                                     store_version=version,
-                                    placement=self.segment_placement())
+                                    placement=self.segment_placement(),
+                                    adapt=self.adapt)
             self._physical_cache[key] = pipe
             while len(self._physical_cache) > self._physical_cache_entries:
                 self._physical_cache.pop(next(iter(self._physical_cache)))
@@ -399,8 +423,24 @@ class LazyVLMEngine:
 
     def estimate_cost(self, query: VMRQuery):
         """Total pipeline :class:`CostEstimate` for one query (the serving
-        scheduler's admission currency)."""
-        return self.physical_for(self.plan_for(query)).total_estimate()
+        scheduler's admission currency). Memoized per
+        ``(plan, store_version, adapt_epoch)`` — submits price plans far
+        more often than they compile, and with adaptation on the price
+        tracks *corrected* estimates, so admission sees what execution
+        actually costs."""
+        plan = self.plan_for(query)
+        epoch = self.adapt.epoch if self.adapt is not None else 0
+        key = (plan, self.store_version, epoch)
+        cost = self._cost_cache.get(key)
+        if cost is not None:
+            self.cost_cache_hits += 1
+            return cost
+        self.cost_cache_misses += 1
+        cost = self.physical_for(plan).total_estimate()
+        self._cost_cache[key] = cost
+        while len(self._cost_cache) > self._physical_cache_entries:
+            self._cost_cache.pop(next(iter(self._cost_cache)))
+        return cost
 
     # -- placed segment execution (mesh engines over segmented stores) -------
     def _mesh_device_table(self):
@@ -768,6 +808,15 @@ class LazyVLMEngine:
             renderers.append(make_sql_renderer(
                 [lo + pos_of[j] for j in range(counts[qi])],
                 sv, se, so, ov, oe, oo, pi, po, st.predicates.labels))
+        if self.adapt is not None:
+            # feed every query's estimated-vs-actual rows into the memo —
+            # the batch keeps its one fused launch (no mid-batch probing;
+            # the next compile of a drifted plan picks up the corrections)
+            from repro.core.physical.adapt import observe_filters
+            for qi, p in enumerate(plans):
+                observe_filters(self.adapt, p, pipes[qi], row_counts,
+                                pipes[qi].store_version,
+                                offset=int(row_offs[qi]))
         t_symbolic = time.perf_counter() - t0
 
         # -- stage 3b: ONE deduped VLM pass across the whole batch ------------

@@ -25,7 +25,17 @@ Two optimizer passes live here:
     (see ``prune.py``); ``Session.explain`` surfaces scanned-vs-pruned
     counts per operator for subscribed queries and the incremental
     subscription path skips pruned new segments on every refresh.
+  * **adaptive re-optimization** — with an :class:`AdaptiveStats` overlay
+    on the engine (``adapt.py``), every execution feeds per-filter
+    estimated-vs-actual rows and cascade exit points back into the cost
+    pass: filter order and admission prices follow *observed*
+    selectivities, a cold plan's probe launch re-sorts the remaining
+    filters mid-pipeline when estimates diverge, and ``verify_budget``
+    auto-tunes per plan — all bit-identical to static execution by the
+    same ``pos_of`` remap and certificate arguments.
 """
+from repro.core.physical.adapt import (AdaptPolicy,  # noqa: F401
+                                       AdaptiveStats)
 from repro.core.physical.cost import CostEstimate, StoreStats  # noqa: F401
 from repro.core.physical.compile import (PhysicalPipeline,  # noqa: F401
                                          compile_physical)

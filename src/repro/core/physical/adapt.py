@@ -1,0 +1,223 @@
+"""Adaptive runtime re-optimization: the feedback half of the cost pass.
+
+The static half already exists — ``compile_physical`` orders triple
+filters from :class:`~repro.core.physical.cost.StoreStats` priors and
+``verify_budget`` is a hand-set constant. This module closes the loop:
+
+  * **Correction memo.** Every execution (single, batched, and EXPLAIN
+    ANALYZE) feeds per-filter estimated-vs-actual rows into
+    :class:`AdaptiveStats`, keyed by ``(plan, predicate label)``. The memo
+    is an *overlay* on ``StoreStats``: the cost pass reads
+    :meth:`AdaptiveStats.corrected_rows` before falling back to the static
+    model, so repeat plans are ordered and priced by what actually
+    happened. Every read and write is gated on ``store_version`` — an
+    append, seal, or compaction bump drops the whole memo (the observations
+    described a store that no longer exists).
+  * **Mid-pipeline re-ordering.** On a plan's first (cold) execution the
+    fused selection probes its leading filter alone; if the observed
+    selectivity diverges from the estimate by ``AdaptPolicy.drift_ratio``,
+    the remaining independent filters re-sort by the corrected estimates
+    before their launch. Result-invariant by the same ``pos_of`` remap
+    argument as the compile-time pass: rows of the fused selection are
+    independent and every consumer of triple identity follows the runtime
+    remap (pinned by a hypothesis property over adversarial stat drift).
+  * **Cascade budget auto-tuning.** Observed early-exit behavior from
+    ``run_cascade`` (and the subscription delta path's equivalent
+    workload) tunes each plan's effective ``verify_budget`` toward the
+    smallest budget that historically exits in ``target_rounds`` rounds.
+    Exactness is free: the certificate makes *any* budget >= 1 exact, so
+    tuning only moves VLM calls and certificate launches.
+
+``epoch`` increments whenever an observation changes what the cost pass
+would compile (a new/shifted correction or a tuned-budget change); the
+engine keys its pipeline and cost-estimate caches on it, so adaptation
+propagates through recompilation instead of mutation — compiled pipelines
+stay immutable and EXPLAIN provenance is exact.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, Optional
+
+# bound the per-plan memo population like the engine's other caches
+_MAX_PLANS = 256
+
+
+@dataclass(frozen=True)
+class AdaptPolicy:
+    """Knobs for the adaptation loop (all defaults are conservative).
+
+    ``drift_ratio`` — a correction (or a probe observation) counts as
+    *diverged* when estimate and actual differ by at least this factor in
+    either direction; divergence is what triggers mid-pipeline re-ordering
+    and correction-driven recompiles. ``budget_floor``/``budget_ceiling``
+    clamp the tuned cascade budget (ceiling ``None`` = unclamped).
+    ``target_rounds`` is the early-exit round count the tuner aims the
+    budget at. ``probe=False`` disables the cold-plan probe launch
+    (corrections then come only from full executions and analyze runs).
+    """
+
+    drift_ratio: float = 2.0
+    budget_floor: int = 1
+    budget_ceiling: Optional[int] = None
+    target_rounds: int = 2
+    probe: bool = True
+
+    def __post_init__(self):
+        if self.drift_ratio < 1.0:
+            raise ValueError(f"drift_ratio must be >= 1.0, "
+                             f"got {self.drift_ratio}")
+        if self.budget_floor < 1:
+            raise ValueError(f"budget_floor must be >= 1 (the cascade needs "
+                             f"at least one row per round), "
+                             f"got {self.budget_floor}")
+        if (self.budget_ceiling is not None
+                and self.budget_ceiling < self.budget_floor):
+            raise ValueError(f"budget_ceiling {self.budget_ceiling} below "
+                             f"budget_floor {self.budget_floor}")
+        if self.target_rounds < 1:
+            raise ValueError(f"target_rounds must be >= 1, "
+                             f"got {self.target_rounds}")
+
+
+class AdaptiveStats:
+    """The correction memo + budget tuner one engine carries.
+
+    All state is version-gated: any observation or lookup at a
+    ``store_version`` other than the recorded one clears everything first
+    (counted in ``invalidations``) — corrections never outlive the store
+    snapshot they were measured on, which covers append, seal, and
+    compaction bumps uniformly. ``epoch`` keys the engine's compiled-
+    pipeline and cost caches; it moves only when the compile output would.
+    """
+
+    def __init__(self, policy: Optional[AdaptPolicy] = None):
+        self.policy = policy or AdaptPolicy()
+        self.epoch = 0
+        # -- lifetime counters (RuntimeMetrics mirrors these) ---------------
+        self.records = 0          # observations fed in
+        self.adaptations = 0      # corrections that changed compile output
+        self.reorders = 0         # mid-pipeline (probe) filter re-sorts
+        self.budget_changes = 0   # tuned-budget moves
+        self.invalidations = 0    # version bumps that dropped the memo
+        self._version: Optional[int] = None
+        # plan -> {predicate label -> observed actual rows}
+        self._corrections: Dict[object, Dict[str, int]] = {}
+        # plan -> recent `verified`-at-exit observations / current tuned budget
+        self._cascade_hist: Dict[object, Deque[int]] = {}
+        self._tuned: Dict[object, int] = {}
+
+    # -- version gate --------------------------------------------------------
+    def _sync(self, version: int) -> None:
+        if self._version == version:
+            return
+        if self._corrections or self._tuned or self._cascade_hist:
+            self.invalidations += 1
+            self.epoch += 1          # cached pipelines priced on corrections
+        self._corrections.clear()
+        self._cascade_hist.clear()
+        self._tuned.clear()
+        self._version = version
+
+    def _bound(self, table: Dict) -> None:
+        while len(table) > _MAX_PLANS:
+            table.pop(next(iter(table)))
+
+    # -- correction memo -----------------------------------------------------
+    def diverged(self, est: int, actual: int) -> bool:
+        """Whether estimate and actual differ by >= ``drift_ratio``."""
+        a, b = max(1.0, float(est)), max(1.0, float(actual))
+        r = self.policy.drift_ratio
+        return a >= b * r or b >= a * r
+
+    def observe_filter(self, plan, label: str, est_rows: int,
+                       actual_rows: int, version: int) -> None:
+        """Record one filter's estimated-vs-actual rows.
+
+        A new correction — or one whose observed value itself drifted by
+        ``drift_ratio`` since last recorded — bumps ``epoch`` so the cost
+        pass recompiles against it; small wobbles update in place (the
+        ordering they'd produce is unchanged, so no recompile churn)."""
+        self._sync(version)
+        self.records += 1
+        per_plan = self._corrections.setdefault(plan, {})
+        prev = per_plan.get(label)
+        per_plan[label] = int(actual_rows)
+        if prev is None or self.diverged(prev, actual_rows):
+            self.adaptations += 1
+            self.epoch += 1
+        self._bound(self._corrections)
+
+    def corrected_rows(self, plan, label: str,
+                       version: int) -> Optional[int]:
+        """Observed actual rows for ``(plan, label)``, or None."""
+        self._sync(version)
+        per_plan = self._corrections.get(plan)
+        return None if per_plan is None else per_plan.get(label)
+
+    def has_corrections(self, plan, version: int) -> bool:
+        """Whether this plan has any recorded correction at ``version`` —
+        the cold-probe gate (a warm plan's corrections already drive the
+        compile-time order, so probing again would only add a launch)."""
+        self._sync(version)
+        return bool(self._corrections.get(plan))
+
+    # -- cascade budget tuner ------------------------------------------------
+    def observe_cascade(self, plan, budget: int, rounds: int,
+                        verified: int, version: int) -> None:
+        """Record one cascade's exit point and re-tune the plan's budget.
+
+        ``verified`` rows were resolved before the certificate fired, so
+        ``ceil(verified / target_rounds)`` is the smallest budget that
+        would have covered this workload in the target round count — the
+        same formula shrinks an over-verifying budget and grows one that
+        needed too many rounds. The tuned value only commits when it
+        diverges from the current one by ``drift_ratio`` (damping), and
+        never from a degraded run (partial verdicts say nothing about the
+        true workload — callers guard, see ``cascade_for_plan``)."""
+        self._sync(version)
+        self.records += 1
+        hist = self._cascade_hist.setdefault(plan, deque(maxlen=8))
+        hist.append(max(1, int(verified)))
+        p = self.policy
+        tuned = max(p.budget_floor,
+                    -(-hist[-1] // p.target_rounds))       # ceil division
+        if p.budget_ceiling is not None:
+            tuned = min(tuned, p.budget_ceiling)
+        prev = self._tuned.get(plan)
+        if prev == tuned or (prev is not None
+                             and not self.diverged(prev, tuned)):
+            return
+        self._tuned[plan] = tuned
+        self.budget_changes += 1
+        self.epoch += 1
+        self._bound(self._cascade_hist)
+        self._bound(self._tuned)
+
+    def tuned_budget(self, plan, static_budget: int, version: int) -> int:
+        """Effective cascade budget for ``plan`` (the static one until the
+        tuner has observations). Pure read — observation is where tuning
+        commits, so compiling never moves ``epoch``."""
+        self._sync(version)
+        if static_budget <= 0:
+            return static_budget       # no cascade: nothing to tune
+        return self._tuned.get(plan, static_budget)
+
+
+def observe_filters(adapt: AdaptiveStats, plan, pipeline, row_counts,
+                    version: int, *, pos_of=None, offset: int = 0) -> None:
+    """Feed one execution's per-filter estimated-vs-actual rows into the
+    memo. ``row_counts`` is indexed by execution position; ``pos_of`` maps
+    declaration index -> position (defaults to the pipeline's compile-time
+    remap; the probe path passes its runtime remap, and the batched path
+    passes its query's row ``offset`` into the fused layout)."""
+    if pos_of is None:
+        pos_of = pipeline.pos_of
+    for op, est in zip(pipeline.ops, pipeline.estimates):
+        label = getattr(op, "predicate_text", None)
+        if label is None:
+            continue
+        adapt.observe_filter(plan, label, est.rows,
+                             int(row_counts[offset + pos_of[op.index]]),
+                             version)

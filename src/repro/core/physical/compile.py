@@ -13,6 +13,13 @@ evaluates rows independently, and every consumer that cares about triple
 identity (row counts, SQL rendering, frame-spec conjunction, EXPLAIN) is
 remapped through ``pos_of`` at compile time. A hypothesis property pins
 ``reorder=True`` ≡ ``reorder=False`` end to end.
+
+With an :class:`~repro.core.physical.adapt.AdaptiveStats` overlay
+(``adapt=``), the pass prefers *observed* per-filter row counts from the
+correction memo over the static model, and the verify budget becomes the
+auto-tuned one — same ordering algorithm, same remap argument, better
+inputs. The engine keys its pipeline cache on ``adapt.epoch`` so new
+observations recompile rather than mutate.
 """
 from __future__ import annotations
 
@@ -69,6 +76,19 @@ class PhysicalPipeline:
     # prediction is carried separately and rendered only when placed.
     placement: Optional[object] = None
     placement_comms: CostEstimate = CostEstimate(0, 0, 0)
+    # adaptation provenance: declaration indices of triple filters whose
+    # est_rows came from the correction memo instead of the static model,
+    # and the plan's static verify budget (the VlmVerifyOp carries the
+    # effective — possibly auto-tuned — one)
+    corrected: Tuple[int, ...] = ()
+    static_budget: int = 0
+
+    def verify_budget(self) -> int:
+        """The effective cascade budget this pipeline executes with."""
+        for op in self.ops:
+            if isinstance(op, VlmVerifyOp):
+                return op.budget
+        return self.static_budget
 
     def total_estimate(self) -> CostEstimate:
         total = CostEstimate(0, 0, 0)
@@ -119,6 +139,17 @@ class PhysicalPipeline:
             if segments:
                 row += self._segments_column(op.label)
             lines.append(row)
+        notes = []
+        if self.corrected:
+            notes.append("corrected est_rows for "
+                         + " ".join(f"t{i}" for i in self.corrected)
+                         + " (observed)")
+        tuned = self.verify_budget()
+        if self.static_budget > 0 and tuned != self.static_budget:
+            notes.append(f"cascade budget {self.static_budget}→{tuned} "
+                         f"(auto-tuned)")
+        if notes:
+            lines.append("  adaptation: " + "; ".join(notes))
         if segments and self.segment_plan:
             scanned, n = scanned_count(self.segment_plan)
             line = (f"  segments: {scanned} scanned, {n - scanned} "
@@ -142,18 +173,22 @@ class PhysicalPipeline:
 
 
 def order_triple_filters(filters, stats: StoreStats,
+                         corrections: Optional[Dict[int, int]] = None,
                          ) -> Tuple[int, ...]:
     """The cost-based pass: execution order of independent triple filters,
     ascending estimated rows (most selective first), declaration order on
-    ties."""
-    est = [f.estimate(stats).rows for f in filters]
+    ties. ``corrections`` (declaration index → observed actual rows, from
+    the adaptation memo) overrides the static estimate where present."""
+    corrections = corrections or {}
+    est = [corrections.get(i, f.estimate(stats).rows)
+           for i, f in enumerate(filters)]
     return tuple(sorted(range(len(filters)), key=lambda i: (est[i], i)))
 
 
 def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
                      pred_candidates=None,
                      store_version: int = 0,
-                     placement=None) -> PhysicalPipeline:
+                     placement=None, adapt=None) -> PhysicalPipeline:
     """Lower ``plan`` to a :class:`PhysicalPipeline` against ``stats``.
 
     ``pred_candidates`` (per predicate-text row, the runtime candidate
@@ -162,7 +197,10 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
     stamps the pipeline with the store snapshot it was costed against.
     ``placement`` (a :class:`~repro.core.physical.cost.SegmentPlacement`,
     placed mesh engines only) is carried for EXPLAIN — per-op estimates
-    and the prune verdicts stay placement-independent by construction."""
+    and the prune verdicts stay placement-independent by construction.
+    ``adapt`` (an :class:`~repro.core.physical.adapt.AdaptiveStats`)
+    overlays observed per-filter row counts and the auto-tuned verify
+    budget onto the cost pass."""
     em, pm, ts = plan.entity_match, plan.predicate_match, plan.triple_select
     n_triples = len(ts.triples)
 
@@ -174,7 +212,14 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
             predicate_text=pm.texts[ts.pred_row[i]],
             width=em.width, rel_capacity=stats.rel_capacity,
             carries_launch=False))
-    order = (order_triple_filters(filters, stats) if reorder and n_triples > 1
+    corrections: Dict[int, int] = {}
+    if adapt is not None:
+        for i, f in enumerate(filters):
+            got = adapt.corrected_rows(plan, f.predicate_text, store_version)
+            if got is not None:
+                corrections[i] = got
+    order = (order_triple_filters(filters, stats, corrections)
+             if reorder and n_triples > 1
              else tuple(range(n_triples)))
     pos_of = tuple(order.index(i) for i in range(n_triples))
     conjoin_idx = tuple(tuple(pos_of[i] for i in row)
@@ -190,8 +235,14 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
             carries_launch=pos == 0))
 
     budget = getattr(plan.verify, "budget", 0)
+    # tuning never flips the cascade on or off — only resizes a budget the
+    # plan already asked for (any budget >= 1 is exact by the certificate)
+    effective_budget = (adapt.tuned_budget(plan, budget, store_version)
+                        if adapt is not None and plan.verify.enabled
+                        and budget > 0 else budget)
     est_candidates = min(
-        sum(f.estimate(stats).rows for f in ordered_filters),
+        sum(corrections.get(f.index, f.estimate(stats).rows)
+            for f in ordered_filters),
         stats.rel_rows) if plan.verify.enabled else 0
 
     ops = [EmbedOp(role="entity_text", texts=em.texts, dim=stats.text_dim)]
@@ -208,7 +259,8 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
         predicted_bytes=(len(stats.labels) * stats.text_dim * 4
                          + len(pm.texts) * pm.m * 8)))
     ops.extend(ordered_filters)
-    ops.append(VlmVerifyOp(enabled=plan.verify.enabled, budget=budget,
+    ops.append(VlmVerifyOp(enabled=plan.verify.enabled,
+                           budget=effective_budget,
                            est_candidates=est_candidates))
     ops.append(BitmapConjoinOp(
         n_frames=len(plan.conjoin.frames), n_triples=n_triples,
@@ -222,9 +274,16 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
 
     comms = (placement.comms_estimate(em.k, len(em.texts))
              if placement is not None else CostEstimate(0, 0, 0))
+    estimates = []
+    for op in ops:
+        est = op.estimate(stats)
+        if isinstance(op, TripleFilterOp) and op.index in corrections:
+            est = CostEstimate(corrections[op.index], est.device_bytes,
+                               est.launches, est.comms_bytes)
+        estimates.append(est)
     return PhysicalPipeline(
         ops=tuple(ops),
-        estimates=tuple(op.estimate(stats) for op in ops),
+        estimates=tuple(estimates),
         order=order, pos_of=pos_of, conjoin_idx=conjoin_idx,
         reordered=order != tuple(range(n_triples)),
         cascade=plan.verify.enabled and budget > 0,
@@ -232,4 +291,6 @@ def compile_physical(plan, stats: StoreStats, *, reorder: bool = True,
         store_version=store_version,
         segment_tiers=tuple(getattr(s, "tier", "hot")
                             for s in stats.segments),
-        placement=placement, placement_comms=comms)
+        placement=placement, placement_comms=comms,
+        corrected=tuple(sorted(corrections)),
+        static_budget=budget)

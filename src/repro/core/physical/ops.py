@@ -218,51 +218,124 @@ class TripleFilterOp(PhysicalOp):
         if "masks" not in ctx.vals:
             _run_fused_selection(ctx)
         if ctx.analyze:
-            pos = ctx.pipeline.pos_of[self.index]
+            # the probe path may have re-sorted rows at runtime — follow
+            # the runtime remap, falling back to the compile-time one
+            pos = ctx.vals.get("rt_pos_of", ctx.pipeline.pos_of)[self.index]
             ctx.actual_rows[self.label] = int(ctx.vals["row_counts"][pos])
 
 
+def _filter_estimate(pipe, index: int):
+    """(predicate label, estimated rows) for the filter at declaration
+    ``index``, read off the compiled pipeline (already correction-priced
+    on warm plans)."""
+    for op, est in zip(pipe.ops, pipe.estimates):
+        if isinstance(op, TripleFilterOp) and op.index == index:
+            return op.predicate_text, est.rows
+    raise KeyError(index)
+
+
 def _run_fused_selection(ctx: ExecContext) -> None:
-    """Execute ALL of the pipeline's triple filters in one fused launch,
+    """Execute the pipeline's triple filters — normally ONE fused launch,
     rows in cost order; host bookkeeping (row counts, SQL renderer) is
-    remapped back to declaration order via ``pipeline.pos_of``."""
+    remapped back to declaration order via the runtime position map.
+
+    With adaptation on and a *cold* plan (no corrections yet), the leading
+    filter runs first as a one-row probe launch: if its observed row count
+    diverges from the estimate, the remaining filters re-sort by the
+    corrected estimates before their launch. Rows of the fused selection
+    are independent, so the concatenation of the two launches equals the
+    single launch row-for-row — exactness is the same ``pos_of`` remap
+    argument as the compile-time pass, applied to the runtime order via
+    ``ctx.vals["rt_pos_of"]``/``["rt_conjoin_idx"]``. Warm plans skip the
+    probe (their corrections already drove the compile-time order), so the
+    steady state stays a single launch."""
     engine, plan, pipe = ctx.engine, ctx.plan, ctx.pipeline
     rel = engine.stores.relationships.table
     ts = plan.triple_select
     n_triples = len(ts.triples)
-    order = pipe.order
-    srow = np.asarray([ts.subj_row[o] for o in order], np.int32)
-    orow = np.asarray([ts.obj_row[o] for o in order], np.int32)
-    prow = np.asarray([ts.pred_row[o] for o in order], np.int32)
-    pad = ts.bucket - n_triples      # static bucket: programs re-used
-                                     # across queries of different sizes
-
-    def gather_pad(arr, rows):
-        g = arr[jnp.asarray(rows)]
-        return jnp.pad(g, ((0, pad), (0, 0))) if pad else g
-
+    adapt = getattr(engine, "adapt", None)
+    version = pipe.store_version
     vids, eids, ent_ok = ctx.vals["ent_cands"]
     pred_ids, pred_ok = ctx.vals["pred_cands"]
-    sv, se, so = (gather_pad(a, srow) for a in (vids, eids, ent_ok))
-    ov, oe, oo = (gather_pad(a, orow) for a in (vids, eids, ent_ok))
-    pi, po = gather_pad(pred_ids, prow), gather_pad(pred_ok, prow)
-    masks = stages._triple_selections(
-        rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
-        rel.valid, sv, se, so, ov, oe, oo, pi, po)    # (bucket, cap)
+
+    def gather(row_order, pad):
+        srow = np.asarray([ts.subj_row[o] for o in row_order], np.int32)
+        orow = np.asarray([ts.obj_row[o] for o in row_order], np.int32)
+        prow = np.asarray([ts.pred_row[o] for o in row_order], np.int32)
+
+        def gather_pad(arr, rows):
+            g = arr[jnp.asarray(rows)]
+            return jnp.pad(g, ((0, pad), (0, 0))) if pad else g
+
+        sv, se, so = (gather_pad(a, srow) for a in (vids, eids, ent_ok))
+        ov, oe, oo = (gather_pad(a, orow) for a in (vids, eids, ent_ok))
+        return (sv, se, so, ov, oe, oo,
+                gather_pad(pred_ids, prow), gather_pad(pred_ok, prow))
+
+    pad = ts.bucket - n_triples      # static bucket: programs re-used
+                                     # across queries of different sizes
+    order = list(pipe.order)
+    probe = (adapt is not None and adapt.policy.probe and n_triples > 1
+             and not adapt.has_corrections(plan, version))
+    masks0 = None
+    if probe:
+        lead = order[0]
+        masks0 = stages._triple_selections(
+            rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
+            rel.valid, *gather([lead], 0))                  # (1, cap)
+        count0 = int(stages.to_host(masks0.sum(axis=1))[0])
+        label0, est0 = _filter_estimate(pipe, lead)
+        adapt.observe_filter(plan, label0, est0, count0, version)
+        if adapt.diverged(est0, count0):
+            # re-sort the remaining filters by corrected-or-static rows —
+            # the probe's correction propagates to same-label filters,
+            # which is exactly where the drift it measured repeats
+            def est_of(i):
+                label, est = _filter_estimate(pipe, i)
+                got = adapt.corrected_rows(plan, label, version)
+                return est if got is None else got
+            rest = sorted(order[1:], key=lambda i: (est_of(i), i))
+            if rest != order[1:]:
+                adapt.reorders += 1
+            order = [lead] + rest
+
+    args = gather(order, pad)
+    if masks0 is not None:
+        rest_masks = stages._triple_selections(
+            rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
+            rel.valid, *(a[1:] for a in args))
+        masks = jnp.concatenate([masks0, rest_masks], axis=0)
+    else:
+        masks = stages._triple_selections(
+            rel["vid"], rel["fid"], rel["sid"], rel["rl"], rel["oid"],
+            rel.valid, *args)                               # (bucket, cap)
+    sv, se, so, ov, oe, oo, pi, po = args
+
+    # runtime remaps: identical to the pipeline's unless the probe re-sorted
+    pos_of = tuple(order.index(i) for i in range(n_triples))
+    ctx.vals["rt_order"] = tuple(order)
+    ctx.vals["rt_pos_of"] = pos_of
+    ctx.vals["rt_conjoin_idx"] = tuple(
+        tuple(pos_of[i] for i in row) for row in plan.conjoin.idx)
+
     # per-triple row counts: fused device reduction, ONE (bucket,)
     # transfer — the (bucket, cap) mask itself never leaves the device
     # unless the verifier below needs row identities
     row_counts = stages.to_host(masks.sum(axis=1))
     ctx.stats.sql_rows_per_triple = [
-        int(row_counts[pipe.pos_of[i]]) for i in range(n_triples)]
+        int(row_counts[pos_of[i]]) for i in range(n_triples)]
     ctx.vals["sql_renderer"] = stages.make_sql_renderer(
-        [pipe.pos_of[i] for i in range(n_triples)],
+        [pos_of[i] for i in range(n_triples)],
         stages.to_host(sv), stages.to_host(se), stages.to_host(so),
         stages.to_host(ov), stages.to_host(oe), stages.to_host(oo),
         stages.to_host(pi), stages.to_host(po),
         engine.stores.predicates.labels)
     ctx.vals["masks"] = masks
     ctx.vals["row_counts"] = row_counts
+    if adapt is not None:
+        from repro.core.physical.adapt import observe_filters
+        observe_filters(adapt, plan, pipe, row_counts, version,
+                        pos_of=pos_of)
 
 
 # ---------------------------------------------------------------------------
@@ -324,7 +397,9 @@ class VlmVerifyOp(PhysicalOp):
             keep = cascade_for_plan(
                 engine=engine, plan=ctx.plan, pipeline=ctx.pipeline,
                 masks=masks, masks_np=masks_np,
-                pred_scores=ctx.vals.get("pred_scores_host"), stats=stats)
+                pred_scores=ctx.vals.get("pred_scores_host"), stats=stats,
+                order=ctx.vals.get("rt_order"),
+                conjoin_idx=ctx.vals.get("rt_conjoin_idx"))
             if keep is not None:
                 ctx.vals["masks"] = stages._apply_keep(masks,
                                                        jnp.asarray(keep))
@@ -352,24 +427,34 @@ def _degrade_full(ctx, rel, masks, masks_np, exc) -> None:
 
 
 def cascade_for_plan(*, engine, plan, pipeline, masks, masks_np,
-                     pred_scores, stats, memo=None, cols=None):
+                     pred_scores, stats, memo=None, cols=None,
+                     order=None, conjoin_idx=None):
     """Run one plan's budgeted cascade and record its stats — the single
     shared entry for the single-query operator and the batched path (where
     ``masks``/``masks_np`` are the plan's row slice), so the two can't
     drift. Returns the (capacity,) keep vector, or ``None`` when the plan
-    had no candidates."""
+    had no candidates. ``order``/``conjoin_idx`` override the pipeline's
+    compile-time remaps when the probe re-sorted rows at runtime. The
+    budget is the pipeline's effective (possibly auto-tuned) one; a clean
+    finish feeds its exit point back into the engine's budget tuner —
+    degraded runs never do (partial verdicts say nothing about the true
+    workload)."""
+    budget = pipeline.verify_budget()
     keep, info = run_cascade(
         verifier=engine.verifier,
         rel=engine.stores.relationships.table, masks=masks,
         masks_np=masks_np,
         pred_row_of_pos=[plan.triple_select.pred_row[o]
-                         for o in pipeline.order],
+                         for o in (pipeline.order if order is None
+                                   else order)],
         pred_scores=pred_scores,
         num_labels=len(engine.stores.predicates.labels),
-        conjoin_idx=pipeline.conjoin_idx, conjoin_pad=plan.conjoin.pad,
+        conjoin_idx=(pipeline.conjoin_idx if conjoin_idx is None
+                     else conjoin_idx),
+        conjoin_pad=plan.conjoin.pad,
         gaps=plan.temporal.gaps, num_segments=plan.num_segments,
         frames_per_segment=plan.frames_per_segment,
-        budget=plan.verify.budget, memo=memo, cols=cols)
+        budget=budget, memo=memo, cols=cols)
     stats.vlm_calls = getattr(engine.verifier, "calls", 0)
     if keep is not None:
         stats.refine_candidates = info["candidates"]
@@ -380,6 +465,12 @@ def cascade_for_plan(*, engine, plan, pipeline, masks, masks_np,
             stats.degraded = True
             stats.unverified_rows = info["unverified"]
             stats.degraded_cause = info["failure"]
+        else:
+            adapt = getattr(engine, "adapt", None)
+            if adapt is not None:
+                adapt.observe_cascade(plan, budget, info["rounds"],
+                                      info["verified"],
+                                      pipeline.store_version)
     return keep
 
 
@@ -525,11 +616,12 @@ class BitmapConjoinOp(PhysicalOp):
     def run(self, ctx: ExecContext) -> None:
         rel = ctx.engine.stores.relationships.table
         pipe = ctx.pipeline
+        conjoin_idx = ctx.vals.get("rt_conjoin_idx", pipe.conjoin_idx)
         bitmaps = stages._masks_to_bitmaps(
             rel["vid"], rel["fid"], ctx.vals["masks"],
             self.num_segments, self.frames_per_segment)
         fmaps = stages._conjoin_bitmaps(
-            bitmaps, jnp.asarray(np.asarray(pipe.conjoin_idx, np.int32)),
+            bitmaps, jnp.asarray(np.asarray(conjoin_idx, np.int32)),
             jnp.asarray(np.asarray(ctx.plan.conjoin.pad)))
         ctx.vals["fmaps"] = fmaps            # (n_frames, V, F)
         if ctx.analyze:

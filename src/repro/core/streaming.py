@@ -207,6 +207,11 @@ class Subscription:
         self._version: Optional[int] = None
         self._memo: Dict[tuple, bool] = {}
         self._state: Optional[_State] = None
+        # feed observed per-refresh verification workloads into the
+        # engine's budget tuner (physical/adapt.py); the serving runtime
+        # clears this while a subscription is quarantined — a failing
+        # subscription must not keep steering the shared tuner
+        self.tuning = True
         # memoized runtime predicate candidate arrays (store-independent)
         self._pred_arrays = None
         # delta listeners: called with a RefreshDelta after every refresh
@@ -393,6 +398,7 @@ class Subscription:
         runs = merged
 
         verify = plan.verify.enabled and engine.verifier is not None
+        fresh_refresh = 0
         for lo, hi in runs:
             while lo < hi:
                 b = min(pow2_bucket(hi - lo, minimum=8),
@@ -412,10 +418,22 @@ class Subscription:
                         rel, masks, lo, b, seen_keys)
                     refine_candidates += n_cand
                     refine_passed += n_pass
+                    fresh_refresh += n_cand
                 bitmaps = stages._or_bitmaps(
                     bitmaps, stages._delta_bitmaps(rel["vid"], rel["fid"],
                                                    masks, lo, b, V, F))
                 lo += span
+        adapt = getattr(engine, "adapt", None)
+        budget = pipe.verify_budget()
+        if (adapt is not None and self.tuning and verify and budget > 0
+                and fresh_refresh > 0):
+            # the delta path verifies fresh rows in one memoized pass, so
+            # synthesize the rounds a cascade at this budget would have
+            # used for the same workload — the tuner then sizes the budget
+            # to the subscription's actual per-refresh verification load
+            rounds = -(-fresh_refresh // max(1, budget))
+            adapt.observe_cascade(plan, budget, rounds, fresh_refresh,
+                                  pipe.store_version)
 
         # temporal-chain frontier: recompute reach only for the vid suffix
         # whose bitmaps changed (chain DP is per-vid independent)

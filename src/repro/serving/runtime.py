@@ -151,6 +151,10 @@ class RuntimeMetrics:
     compacted_segments: int = 0      # segments merged away by those passes
     compaction_bytes: int = 0        # modeled bytes the passes were priced at
     demotions: int = 0               # segments demoted to the cold tier
+    # -- adaptive re-optimization (mirrors engine.adapt; zero when off) -----
+    adaptations: int = 0             # corrections that changed compile output
+    reorders: int = 0                # mid-pipeline (probe) filter re-sorts
+    budget_changes: int = 0          # auto-tuned verify-budget moves
 
 
 @dataclass
@@ -483,9 +487,12 @@ class ServingRuntime:
         queue immediately; an up-to-date one simply resumes on the next
         ingest. Returns how many refresh entries were enqueued."""
         if sub is None:
+            for s in self._quarantined.values():
+                s.tuning = True
             self._quarantined.clear()
             self._refresh_failures.clear()
         else:
+            sub.tuning = True
             self._quarantined.pop(id(sub), None)
             self._refresh_failures.pop(id(sub), None)
         return self.notify_ingest()
@@ -568,7 +575,9 @@ class ServingRuntime:
         returning immediately (see :meth:`run_maintenance`) — interactive
         work always wins the tick."""
         if not self._queue:
-            return self.run_maintenance(now)
+            n = self.run_maintenance(now)
+            self._sync_adapt_metrics()
+            return n
         if now is None:
             now = self.clock()
         self._expire_deadlines(now)
@@ -591,7 +600,19 @@ class ServingRuntime:
                 self._refresh_failed(e, exc, now)
         self.metrics.batches += 1
         self.admission.batches_admitted += 1
+        self._sync_adapt_metrics()
         return len(batch)
+
+    def _sync_adapt_metrics(self) -> None:
+        """Mirror the engine's adaptation counters into the runtime's
+        lifetime metrics (absolute copies: the engine's AdaptiveStats is
+        the source of truth; with adaptation off they stay zero)."""
+        adapt = getattr(self.engine, "adapt", None)
+        if adapt is None:
+            return
+        self.metrics.adaptations = adapt.adaptations
+        self.metrics.reorders = adapt.reorders
+        self.metrics.budget_changes = adapt.budget_changes
 
     def _expire_deadlines(self, now: float) -> None:
         """Fail query entries whose EDF deadline already passed (opt-in via
@@ -641,8 +662,11 @@ class ServingRuntime:
         if n >= self.max_refresh_failures:
             # poisoned: stop retrying so it cannot wedge the drain; the
             # subscription's state is untouched (refresh commits only on
-            # success) and release_quarantine resumes it exactly
+            # success) and release_quarantine resumes it exactly. Its
+            # budget-tuner feed stops with it — a failing subscription
+            # must not keep steering the engine's shared tuner
             self._quarantined[id(e.sub)] = e.sub
+            e.sub.tuning = False
             self.metrics.quarantined += 1
             return
         e.attempts += 1

@@ -177,6 +177,50 @@ class Session:
                            cached=cached, physical=physical,
                            analyzed=analyze, result=result)
 
+    def explain_batch(self, queries: List[QueryLike], *,
+                      analyze: bool = False) -> List["Explanation"]:
+        """:meth:`explain` over the batched execution path — one
+        :class:`Explanation` per query.
+
+        With ``analyze=True`` the queries execute through ONE coalesced
+        ``query_batch`` call (fused stage launches, deduped VLM pass), so
+        analyzing a batch observes the path serving actually runs — and
+        feeds the engine's adaptation memo exactly like a real batch.
+        Limitation, by construction: the batch fuses the embed/search/
+        conjoin/chain stages across queries, so only per-query attributable
+        rows (each triple filter's selection count, the verify stage's
+        candidates) get an actual-rows column; the fused shared stages
+        render ``-`` rather than a misleading batch-wide number."""
+        from repro.core.physical.ops import TripleFilterOp, VlmVerifyOp
+        qs = [self.resolve(q) for q in queries]
+        compiled = [self.engine.plan_cache.lookup(
+            q, self.engine.stores, verify=self.engine.verifier is not None,
+            search_mode=self.engine.search_mode) for q in qs]
+        pipes = [self.engine.physical_for(plan) for plan, _ in compiled]
+        results = (self.engine.query_batch(qs) if analyze
+                   else [None] * len(qs))
+        out = []
+        for q, (plan, cached), pipe, res in zip(qs, compiled, pipes,
+                                                results):
+            if analyze:
+                actual: Dict[str, int] = {}
+                for op in pipe.ops:
+                    if isinstance(op, TripleFilterOp):
+                        actual[op.label] = (
+                            res.stats.sql_rows_per_triple[op.index])
+                    elif isinstance(op, VlmVerifyOp) and op.enabled:
+                        actual[op.label] = res.stats.refine_candidates
+                physical = pipe.render(actual=actual, segments=q.follow)
+            else:
+                physical = pipe.render(segments=q.follow)
+            out.append(Explanation(
+                plan=plan, tree=plan.render_tree(),
+                sql=plan.sql_templates(),
+                launches=plan.predicted_launches(),
+                cached=cached, physical=physical,
+                analyzed=analyze, result=res))
+        return out
+
     # -- introspection -----------------------------------------------------
     @property
     def plan_cache(self) -> PlanCache:

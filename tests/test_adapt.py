@@ -1,0 +1,453 @@
+"""Adaptive runtime re-optimization (physical/adapt.py).
+
+The tentpole invariant, pinned property-style: whatever the engine's
+statistical priors claim — including *adversarially corrupted* ones — an
+adaptation-enabled engine returns results bitwise-equal to a static engine
+with clean priors, cold and warm, single and batched. Adaptation only
+moves op orders, launch counts, and VLM calls.
+
+Plus the satellite edges: corrections dropped on every ``store_version``
+bump flavor (append, seal, compaction), degraded cascades never feeding
+the budget tuner, quarantined subscriptions losing their tuner feed,
+``estimate_cost`` memoization, and EXPLAIN (single + batch) provenance.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import LazyVLMEngine, example_2_1
+from repro.core.compact import CompactionPolicy, compact_stores
+from repro.core.fault import ServiceUnavailable
+from repro.core.physical import AdaptPolicy, AdaptiveStats
+from repro.core.query import (Entity, FrameSpec, Relationship,
+                              TemporalConstraint, Triple, VMRQuery)
+from repro.core.refine import MockVerifier
+from repro.core.stores import seal_stores
+from repro.semantic import OracleEmbedder
+from repro.session import Session
+from repro.video import (PREDICATES, SyntheticWorld, WorldConfig, ingest,
+                         ingest_incremental)
+
+SEGMENTS = 8
+
+
+@pytest.fixture(scope="module")
+def world():
+    # spurious_prob=0 keeps rows independent of the ingest schedule, so
+    # incrementally grown stores are bitwise twins of monolithic ones
+    w = SyntheticWorld(WorldConfig(num_segments=SEGMENTS,
+                                   frames_per_segment=32,
+                                   objects_per_segment=6, seed=11))
+    w.stage_event_2_1(vid=5)
+    return w
+
+
+@pytest.fixture(scope="module")
+def stores(world):
+    return ingest(world, _emb())
+
+
+def _emb():
+    return OracleEmbedder(dim=64)
+
+
+def _descs(world):
+    return sorted({o.description for seg in world.segments for o in seg})
+
+
+def _assert_same(r1, r2):
+    assert r1.segments == r2.segments
+    assert r1.scores == r2.scores
+    assert (r1.end_frames == r2.end_frames).all()
+    assert r1.sql == r2.sql
+    assert r1.stats.sql_rows_per_triple == r2.stats.sql_rows_per_triple
+
+
+def _chain_query(descs, preds, min_gap=2, **kw):
+    base = dict(top_k=16, text_threshold=0.9)
+    base.update(kw)
+    return VMRQuery(
+        entities=(Entity("a", descs[0]), Entity("b", descs[1])),
+        relationships=tuple(Relationship(f"r{i}", PREDICATES[p])
+                            for i, p in enumerate(preds)),
+        frames=(FrameSpec(tuple(Triple("a", f"r{i}", "b")
+                                for i in range(len(preds)))),
+                FrameSpec((Triple("a", "r0", "b"),))),
+        constraints=(TemporalConstraint(0, 1, min_gap=min_gap),), **base)
+
+
+def _corrupt_priors(engine, rng):
+    """Adversarial stat drift: scramble the predicate histogram the cost
+    pass orders by. Top-level ``pred_rows`` feeds ONLY estimates (segment
+    pruning reads per-segment stats), so results must not move."""
+    stats = engine.store_stats
+    fake = tuple(int(x) for x in rng.integers(0, 10_000, len(stats.labels)))
+    engine._store_stats = dataclasses.replace(stats, pred_rows=fake)
+    engine._store_stats_version = engine.store_version
+    engine._physical_cache.clear()
+    engine._cost_cache.clear()
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveStats unit behavior
+# ---------------------------------------------------------------------------
+def test_policy_validation():
+    with pytest.raises(ValueError, match="drift_ratio"):
+        AdaptPolicy(drift_ratio=0.5)
+    with pytest.raises(ValueError, match="budget_floor"):
+        AdaptPolicy(budget_floor=0)
+    with pytest.raises(ValueError, match="budget_ceiling"):
+        AdaptPolicy(budget_floor=4, budget_ceiling=2)
+    with pytest.raises(ValueError, match="target_rounds"):
+        AdaptPolicy(target_rounds=0)
+
+
+def test_correction_memo_epoch_and_drift():
+    a = AdaptiveStats(AdaptPolicy(drift_ratio=2.0))
+    assert a.diverged(10, 20) and a.diverged(20, 10)
+    assert not a.diverged(10, 19) and not a.diverged(0, 1)
+    a.observe_filter("p", "near", est_rows=100, actual_rows=10, version=0)
+    e1 = a.epoch
+    assert a.corrected_rows("p", "near", 0) == 10
+    assert a.has_corrections("p", 0) and a.adaptations == 1
+    # small wobble: value updates, epoch (and hence compiled pipelines) don't
+    a.observe_filter("p", "near", est_rows=100, actual_rows=12, version=0)
+    assert a.corrected_rows("p", "near", 0) == 12 and a.epoch == e1
+    # drifted observation: epoch moves, pipelines recompile
+    a.observe_filter("p", "near", est_rows=100, actual_rows=99, version=0)
+    assert a.epoch > e1 and a.adaptations == 2
+
+
+def test_version_bump_drops_everything():
+    a = AdaptiveStats()
+    a.observe_filter("p", "near", 5, 50, version=3)
+    a.observe_cascade("p", budget=8, rounds=1, verified=8, version=3)
+    assert a.has_corrections("p", 3) and a.tuned_budget("p", 8, 3) != 8
+    e = a.epoch
+    assert not a.has_corrections("p", 4)          # bump clears the memo
+    assert a.tuned_budget("p", 8, 4) == 8
+    assert a.invalidations == 1 and a.epoch > e
+    # an empty memo syncing to yet another version is not an invalidation
+    assert a.corrected_rows("p", "near", 5) is None
+    assert a.invalidations == 1
+
+
+def test_budget_tuner_floor_ceiling_and_damping():
+    a = AdaptiveStats(AdaptPolicy(target_rounds=2, budget_floor=2,
+                                  budget_ceiling=16))
+    a.observe_cascade("p", budget=64, rounds=1, verified=100, version=0)
+    assert a.tuned_budget("p", 64, 0) == 16       # ceiling clamps ceil(50)
+    a.observe_cascade("p", budget=16, rounds=1, verified=1, version=0)
+    assert a.tuned_budget("p", 64, 0) == 2        # floor clamps ceil(1/2)
+    changes = a.budget_changes
+    # damping: a same-magnitude observation re-deriving tuned=2 is a no-op,
+    # and one within drift_ratio of the committed value doesn't commit
+    a.observe_cascade("p", budget=2, rounds=1, verified=2, version=0)
+    a.observe_cascade("p", budget=2, rounds=2, verified=6, version=0)
+    assert a.budget_changes == changes and a.tuned_budget("p", 64, 0) == 2
+    # a budget the plan never asked for stays off (tuning can't enable it)
+    assert a.tuned_budget("p", 0, 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: adapted execution is bitwise-identical to static
+# ---------------------------------------------------------------------------
+def test_adaptive_matches_static_seeded(world, stores):
+    descs = _descs(world)
+    queries = [example_2_1(),
+               dataclasses.replace(example_2_1(), verify_budget=8),
+               _chain_query(descs, (0, 1, 2)),
+               dataclasses.replace(_chain_query(descs, (2, 0)),
+                                   verify_budget=3)]
+    static = LazyVLMEngine(stores, _emb(), MockVerifier(world))
+    adaptive = LazyVLMEngine(stores, _emb(), MockVerifier(world),
+                             adapt=True)
+    for q in queries:
+        ref = static.query(q)
+        _assert_same(ref, adaptive.query(q))      # cold: probe path
+        _assert_same(ref, adaptive.query(q))      # warm: corrected compile
+    for r1, r2 in zip(static.query_batch(queries),
+                      adaptive.query_batch(queries)):
+        _assert_same(r1, r2)
+    assert adaptive.adapt.records > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_triples=st.integers(1, 3),
+       budget=st.sampled_from([0, 1, 3, 64]))
+def test_adversarial_drift_property(world, stores, seed, n_triples, budget):
+    """Hypothesis property: random true selectivities vs arbitrary
+    corrupted priors — the adapting engine must return bitwise-identical
+    results to a clean static engine, cold and warm; only op orders and
+    launch counts may differ."""
+    rng = np.random.default_rng(seed)
+    descs = _descs(world)
+    names = [f"e{i}" for i in range(3)]
+    ents = tuple(Entity(n, descs[int(rng.integers(len(descs)))])
+                 for n in names)
+    rels = tuple(Relationship(f"r{i}",
+                              PREDICATES[int(rng.integers(len(PREDICATES)))])
+                 for i in range(n_triples))
+    pool = [Triple(names[int(rng.integers(3))], f"r{i}",
+                   names[int(rng.integers(3))]) for i in range(n_triples)]
+    frames = tuple(
+        FrameSpec(tuple(pool[int(rng.integers(len(pool)))]
+                        for _ in range(int(rng.integers(1, 3)))))
+        for _ in range(int(rng.integers(1, 3))))
+    q = VMRQuery(entities=ents, relationships=rels, frames=frames,
+                 top_k=8, text_threshold=0.9, verify_budget=budget)
+    static = LazyVLMEngine(stores, _emb(), MockVerifier(world))
+    adaptive = LazyVLMEngine(stores, _emb(), MockVerifier(world),
+                             adapt=AdaptPolicy(drift_ratio=1.5))
+    _corrupt_priors(adaptive, rng)
+    ref = static.query(q)
+    _assert_same(ref, adaptive.query(q))          # cold against lying priors
+    _assert_same(ref, adaptive.query(q))          # warm against corrections
+    _assert_same(ref, adaptive.query_batch([q])[0])
+
+
+def test_probe_reorders_midpipeline_without_changing_results(world, stores):
+    """Force the probe to actually re-sort: two filters share the lead's
+    label (whose prior claims ~nothing), a third uses a label whose
+    corrupted estimate sits between the lie and the observed truth — after
+    the probe observes the lead, the corrected same-label filter must sink
+    below it."""
+    descs = _descs(world)
+    static = LazyVLMEngine(stores, _emb(), MockVerifier(world))
+    # actual per-triple row counts, declaration order, from a clean run
+    probe_q = _chain_query(descs, (0, 0, 1))
+    actual = static.query(probe_q).stats.sql_rows_per_triple
+    n0 = actual[0]
+    assert n0 >= 2, "world must give the shared label some rows"
+
+    adaptive = LazyVLMEngine(stores, _emb(), MockVerifier(world),
+                             adapt=True)
+    stats = adaptive.store_stats
+    la = stats.labels.index(PREDICATES[0])
+    lb = stats.labels.index(PREDICATES[1])
+    # lie: label A (t0, t1) has no rows; search for a label-B count whose
+    # estimate lands strictly between 1 and the observed truth, so the
+    # re-sort moves t2 ahead of the corrected t1
+    from repro.core.physical.cost import estimate_triple_rows
+    width = adaptive.physical_for(
+        adaptive.plan_for(probe_q)).filter_ops()[0].width
+    for fake_b in range(1, 200_000):
+        rows = list(stats.pred_rows)
+        rows[la], rows[lb] = 0, fake_b
+        fake = dataclasses.replace(stats, pred_rows=tuple(rows))
+        est_b = estimate_triple_rows(fake, PREDICATES[1], width)
+        if 2 <= est_b < n0:
+            break
+    else:
+        pytest.skip("no corrupted count puts B's estimate inside (1, n0)")
+    adaptive._store_stats = fake
+    adaptive._store_stats_version = adaptive.store_version
+    adaptive._physical_cache.clear()
+    adaptive._cost_cache.clear()
+
+    ref = static.query(probe_q)
+    r = adaptive.query(probe_q)                   # cold: probe + re-sort
+    _assert_same(ref, r)
+    assert adaptive.adapt.reorders >= 1
+    _assert_same(ref, adaptive.query(probe_q))    # warm: compile-time order
+
+
+# ---------------------------------------------------------------------------
+# invalidation edges
+# ---------------------------------------------------------------------------
+def test_corrections_dropped_on_append_seal_and_compaction(world):
+    mono = ingest(world, _emb())
+    caps = dict(entity_capacity=mono.entities.capacity,
+                rel_capacity=mono.relationships.capacity)
+    # grow one-world-segment store segments so adjacent sealed segments
+    # share a size tier and compaction actually has victims to merge
+    base = ingest(world, _emb(), segment_range=(0, 1), **caps)
+    for s in range(1, SEGMENTS - 2):
+        base = ingest_incremental(base, world, _emb(), (s, s + 1))
+    engine = LazyVLMEngine(base, _emb(), MockVerifier(world), adapt=True)
+    q = example_2_1()
+    plan = engine.plan_for(q)
+
+    def warmed():
+        engine.query(q)
+        assert engine.adapt.has_corrections(plan, engine.store_version)
+
+    warmed()
+    inv = engine.adapt.invalidations
+    # append bump (unsealed tail growing)
+    engine.stores = ingest_incremental(base, world, _emb(),
+                                       (SEGMENTS - 2, SEGMENTS - 1),
+                                       seal=False)
+    assert not engine.adapt.has_corrections(plan, engine.store_version)
+    assert engine.adapt.invalidations == inv + 1
+    warmed()
+    # seal bump
+    engine.stores = seal_stores(engine.stores)
+    assert not engine.adapt.has_corrections(plan, engine.store_version)
+    assert engine.adapt.invalidations == inv + 2
+    warmed()
+    # compaction-descendant bump (metadata-only merge of sealed segments)
+    compacted = compact_stores(engine.stores, CompactionPolicy(min_merge=2))
+    assert compacted.store_version != engine.store_version
+    engine.stores = compacted
+    assert not engine.adapt.has_corrections(plan, engine.store_version)
+    assert engine.adapt.invalidations == inv + 3
+    warmed()
+
+
+class _DeadVerifier:
+    calls = 0
+
+    def verify(self, rows):
+        raise ServiceUnavailable("verifier down", op="verify",
+                                 breaker_open=True)
+
+
+def test_degraded_cascade_never_feeds_the_budget_tuner(world, stores):
+    q = dataclasses.replace(example_2_1(), verify_budget=4)
+    engine = LazyVLMEngine(stores, _emb(), verifier=_DeadVerifier(),
+                           adapt=True)
+    r = engine.query(q)
+    assert r.degraded                 # partial verdicts, explicit contract
+    assert engine.adapt.budget_changes == 0
+    assert engine.adapt.tuned_budget(engine.plan_for(q), 4,
+                                     engine.store_version) == 4
+    # filter corrections still record — the symbolic stage completed
+    assert engine.adapt.has_corrections(engine.plan_for(q),
+                                        engine.store_version)
+
+
+def test_quarantined_subscription_stops_tuning(world):
+    from repro.serving import ServingRuntime
+    mono = ingest(world, _emb())
+    caps = dict(entity_capacity=mono.entities.capacity,
+                rel_capacity=mono.relationships.capacity)
+    base = ingest(world, _emb(), segment_range=(0, SEGMENTS - 1), **caps)
+
+    class Clock:
+        t = 100.0
+
+        def __call__(self):
+            return self.t
+
+    clock = Clock()
+    engine = LazyVLMEngine(base, _emb(), MockVerifier(world), adapt=True)
+    runtime = ServingRuntime(engine, clock=clock, retry_backoff_s=0.1,
+                             max_refresh_failures=1)
+    handle = runtime.follow(example_2_1())
+    assert handle.sub.tuning
+    handle.sub.refresh = lambda: (_ for _ in ()).throw(
+        RuntimeError("poisoned refresh"))
+    runtime.update_stores(
+        ingest_incremental(base, world, _emb(), (SEGMENTS - 1, SEGMENTS)))
+    runtime.run_until_idle()
+    assert runtime.metrics.quarantined == 1
+    assert handle.sub.tuning is False             # tuner feed severed
+    del handle.sub.refresh
+    runtime.release_quarantine(handle.sub)
+    assert handle.sub.tuning is True              # restored on release
+    runtime.run_until_idle()
+    assert handle.sub.version == engine.store_version
+
+
+# ---------------------------------------------------------------------------
+# cost memoization + steady-state savings
+# ---------------------------------------------------------------------------
+def test_estimate_cost_memoized_per_plan_version_epoch(world, stores):
+    engine = LazyVLMEngine(stores, _emb(), MockVerifier(world))
+    q = example_2_1()
+    c1 = engine.estimate_cost(q)
+    assert (engine.cost_cache_misses, engine.cost_cache_hits) == (1, 0)
+    assert engine.estimate_cost(q) is c1
+    assert engine.estimate_cost(q) is c1
+    assert (engine.cost_cache_misses, engine.cost_cache_hits) == (1, 2)
+    engine.refresh_store_stats()                  # version-scoped: drops
+    engine.estimate_cost(q)
+    assert engine.cost_cache_misses == 2
+    # adaptation epoch moves the key too: corrected prices, not stale ones
+    adaptive = LazyVLMEngine(stores, _emb(), MockVerifier(world),
+                             adapt=True)
+    before = adaptive.estimate_cost(q)
+    adaptive.query(q)                             # observations bump epoch
+    assert adaptive.adapt.epoch > 0
+    after = adaptive.estimate_cost(q)
+    assert adaptive.cost_cache_misses == 2        # epoch forced a re-price
+    assert after.rows <= before.rows              # corrected-rows pricing
+
+
+def test_budget_autotune_converges_and_cuts_cascade_rounds(world, stores):
+    """An undersized static budget pays one certificate device launch per
+    round; the tuner raises it to the smallest budget exiting in
+    ``target_rounds``, collapsing rounds without inflating VLM calls."""
+    q = dataclasses.replace(example_2_1(), verify_budget=2)
+    static = LazyVLMEngine(stores, _emb(), MockVerifier(world))
+    ref = static.query(q)
+    engine = LazyVLMEngine(stores, _emb(), MockVerifier(world), adapt=True)
+    plan = engine.plan_for(q)
+    rounds, calls = [], []
+    for _ in range(4):
+        before = engine.verifier.calls
+        r = engine.query(q)
+        _assert_same(ref, r)
+        rounds.append(r.stats.verify_rounds)
+        calls.append(engine.verifier.calls - before)
+    tuned = engine.physical_for(plan).verify_budget()
+    assert engine.adapt.budget_changes >= 1
+    assert tuned > 2                              # raised off the floor
+    assert rounds[-1] < rounds[0]                 # launches collapse
+    assert rounds[-1] <= engine.adapt.policy.target_rounds + 1
+    # calls may overshoot the exit point by at most one tuned round
+    assert calls[-1] <= calls[0] + tuned
+    # and the oversized direction shrinks: a huge budget tunes down
+    big = dataclasses.replace(example_2_1(), verify_budget=512)
+    ref_big = static.query(big)
+    plan_big = engine.plan_for(big)
+    _assert_same(ref_big, engine.query(big))
+    _assert_same(ref_big, engine.query(big))
+    assert engine.physical_for(plan_big).verify_budget() < 512
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN: provenance + the batched analyze path
+# ---------------------------------------------------------------------------
+def test_explain_analyze_warms_memo_and_renders_provenance(world, stores):
+    engine = LazyVLMEngine(stores, _emb(), MockVerifier(world), adapt=True)
+    session = Session(engine)
+    q = dataclasses.replace(example_2_1(), verify_budget=64)
+    ex = session.explain(q, analyze=True)
+    assert ex.analyzed and ex.result is not None
+    assert "actual_rows" in ex.physical
+    assert engine.adapt.records > 0               # ANALYZE itself warmed it
+    ex2 = session.explain(q)                      # warm compile: provenance
+    assert "adaptation: corrected est_rows" in ex2.physical
+    if engine.physical_for(engine.plan_for(q)).verify_budget() != 64:
+        assert "auto-tuned" in ex2.physical
+
+
+def test_explain_batch_per_query_rows_and_shared_stage_dashes(world,
+                                                              stores):
+    engine = LazyVLMEngine(stores, _emb(), MockVerifier(world), adapt=True)
+    session = Session(engine)
+    descs = _descs(world)
+    queries = [example_2_1(), _chain_query(descs, (0, 1))]
+    plain = session.explain_batch(queries)
+    assert len(plain) == 2 and not any(e.analyzed for e in plain)
+    before = engine.adapt.records
+    exs = session.explain_batch(queries, analyze=True)
+    assert engine.adapt.records > before          # batch ANALYZE records too
+    refs = LazyVLMEngine(stores, _emb(), MockVerifier(world)).query_batch(
+        queries)
+    for ex, ref in zip(exs, refs):
+        assert ex.analyzed
+        _assert_same(ex.result, ref)
+        # per-query attributable stages carry actual rows; fused
+        # batch-shared stages render "-" (documented limitation)
+        for i, n in enumerate(ref.stats.sql_rows_per_triple):
+            assert f"TripleFilterOp[t{i}]" in ex.physical
+        assert "EmbedOp[entity_text]" in ex.physical
+        line = [ln for ln in ex.physical.splitlines()
+                if "EmbedOp[entity_text]" in ln][0]
+        assert "actual_rows=-" in line
